@@ -1,0 +1,102 @@
+"""§Perf P3 — the paper's technique on the production mesh: per-round
+communication volume of decentralized consensus (Eq. 6) vs a FedAvg-style
+all-reduce, and the bf16-message optimization (the Eq.-(11) E_SL knob).
+
+Each of the 16 data-axis positions is an AGENT holding a full granite-8b
+replica (tensor-parallel over the 16 "model" positions). One FL round
+exchanges the model with both ring neighbours (2·b(W) per agent). The
+lowering is analyzed exactly like the dry-runs — collective bytes parsed
+from the SPMD module.
+
+Run: PYTHONPATH=src python -m benchmarks.consensus_volume
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.core import consensus
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import abstract_params
+from repro.sharding import rules
+
+
+def build(cfg, mesh, *, msg_dtype=None, mode="ring"):
+    """Lower one consensus/averaging round over agent-stacked params.
+
+    params: leading agent axis K=16 sharded over 'data'; within an agent the
+    replica is TP-sharded over 'model' (the per-leaf rules shifted by one).
+    """
+    K = mesh.shape["data"]
+    p_abs = abstract_params(cfg)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype), p_abs)
+
+    def stacked_sharding(path, leaf):
+        inner = rules.param_spec(path, leaf, cfg,
+                                 model_size=mesh.shape["model"])
+        return NamedSharding(mesh, P("data", *inner))
+
+    # param_spec sees the unstacked path (agent dim prepended manually)
+    base_sh = rules.param_shardings(p_abs, cfg, mesh)
+    st_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, P("data", *s.spec)), base_sh)
+
+    sizes = jnp.ones((K,), jnp.float32)
+
+    if mode == "ring":
+        def step(stacked_params, sz):
+            def per_agent(p, s):
+                return consensus.ring_consensus_step(
+                    p, s[0], "data", message_dtype=msg_dtype)
+
+            # partial-manual: in_specs name ONLY the manual axis ("data");
+            # the per-replica tensor-parallel sharding over "model" flows
+            # through GSPMD auto from the outer jit's in_shardings.
+            fn = jax.shard_map(
+                per_agent, mesh=mesh,
+                in_specs=(jax.tree.map(lambda s: P("data"), st_sh),
+                          P("data")),
+                out_specs=jax.tree.map(lambda s: P("data"), st_sh),
+                axis_names=frozenset({"data"}), check_vma=False)
+            return fn(stacked_params, sizes)
+    else:  # fedavg: global mean over agents (star topology all-reduce)
+        def step(stacked_params, sz):
+            def avg(x):
+                m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+                return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+            return jax.tree.map(avg, stacked_params)
+
+    jitted = jax.jit(step, in_shardings=(st_sh, NamedSharding(mesh, P())),
+                     out_shardings=st_sh)
+    return jitted.lower(stacked, jax.ShapeDtypeStruct((K,), jnp.float32))
+
+
+def main():
+    cfg = get_arch("granite-8b")
+    mesh = make_production_mesh()
+    n_params = cfg.param_count()
+    print(f"granite-8b replica: {n_params/1e9:.2f}B params "
+          f"({n_params*4/1e9:.1f} GB f32)")
+    for name, cc, kw in (
+        ("fedavg_allreduce", cfg, dict(mode="fedavg")),
+        ("ring_consensus_f32", cfg, dict(mode="ring")),
+        ("ring_consensus_bf16", cfg, dict(mode="ring",
+                                          msg_dtype=jnp.bfloat16)),
+    ):
+        compiled = build(cc, mesh, **kw).compile()
+        cb = collective_bytes(compiled.as_text())
+        tot = sum(cb.values())
+        per_agent = tot * 256 / 16 / 1e9      # per-device -> per-agent GB
+        print(f"{name:22s} {tot/1e9:8.2f} GB/device/round  "
+              f"{ {k: round(v/1e9,2) for k, v in cb.items() if v} }")
+
+
+if __name__ == "__main__":
+    main()

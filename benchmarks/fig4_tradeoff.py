@@ -1,0 +1,140 @@
+"""Fig. 4 (and Fig. 3, its t0=210/t0=0 slice): impact of MAML rounds t0 on
+E_ML, ΣE_FL and total E, under both communication-efficiency regimes.
+
+One meta-training trajectory per seed with parameter snapshots at every
+t0 split point (42, 66, 90, 132, 210, 240), then per-task FL adaptation
+from each snapshot measuring t_i. Energies from repro.core.energy with
+the paper-calibrated constants. Results -> JSON (read by EXPERIMENTS.md
+and table2_rounds.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import energy
+from repro.rl.casestudy import CaseStudy
+
+T0_GRID = (0, 42, 66, 90, 132, 210, 240)
+
+# the paper's own Table II (average FL rounds t_i), for side-by-side
+PAPER_TABLE_II = {
+    0: [380.1, 129.6, 93.7, 211.5, 24.2, 82.4],
+    42: [29.7, 56.4, 70.9, 87.0, 70.4, 57.1],
+    66: [178.8, 9.9, 14.3, 104.6, 9.8, 12.4],
+    90: [84.9, 8.9, 15.6, 166.2, 11.3, 19.6],
+    132: [11.6, 25.5, 25.1, 44.6, 23.1, 23.8],
+    210: [6.7, 29.1, 16.5, 27.7, 32.0, 17.2],
+    240: [2.7, 10.8, 9.1, 40.0, 21.8, 19.6],
+}
+
+
+def _save_partial(rounds, t0_grid, out):
+    """Incremental snapshot so long sweeps are restart/deadline-safe."""
+    import os
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    done = {t0: v for t0, v in rounds.items() if v}
+    if not done:
+        return
+    partial = {
+        "rounds": {str(k): v for k, v in done.items()},
+        "mean_rounds": {str(k): np.mean(v, axis=0).tolist()
+                        for k, v in done.items()},
+        "paper_table_ii": {str(k): v for k, v in PAPER_TABLE_II.items()},
+        "energies": {},
+        "partial": True,
+    }
+    _add_energies(partial, done.keys())
+    with open(out, "w") as f:
+        json.dump(partial, f, indent=1)
+
+
+def _add_energies(result, t0s):
+    from repro.core import energy as E
+    mean_rounds = {int(k): v for k, v in result["mean_rounds"].items()}
+    for regime, p in (("black_SL500_UL200", E.paper_calibrated("fig4")),
+                      ("red_UL500_SL200",
+                       E.swap_ul_sl(E.paper_calibrated("fig4")))):
+        en = {t0: E.total_energy(p, t0, 3, mean_rounds[t0])
+              for t0 in mean_rounds}
+        nonzero = [t0 for t0 in en if t0 > 0]
+        best = min(nonzero, key=lambda t: en[t]) if nonzero else None
+        result["energies"][regime] = {
+            "E_kJ": {str(k): v / 1e3 for k, v in en.items()},
+            "optimal_t0": best,
+        }
+
+
+def run(seeds: int = 3, max_rounds: int = 400, t0_grid=T0_GRID,
+        out: str = "benchmarks/results/fig4.json", verbose=True):
+    cs = CaseStudy(inner_steps=10, outer_lr=0.01)
+    M = cs.network.num_tasks
+    rounds = {t0: [] for t0 in t0_grid}   # lists of per-seed [t_1..t_M]
+
+    for seed in range(seeds):
+        key = jax.random.PRNGKey(seed)
+        kmeta, kfl = jax.random.split(key)
+        # one meta run with snapshots
+        params = cs.init_params(kmeta)
+        snaps = {0: params}
+        kdata = kmeta
+        hist = []
+        t_start = time.time()
+        for t in range(max(t0_grid)):
+            kdata, sk = jax.random.split(kdata)
+            params, m = cs._meta_round(params, sk)
+            hist.append(float(m["meta_loss"]))
+            if (t + 1) in t0_grid:
+                snaps[t + 1] = params
+        if verbose:
+            print(f"[seed {seed}] meta-train {max(t0_grid)} rounds "
+                  f"({time.time() - t_start:.0f}s)", flush=True)
+        for t0 in t0_grid:
+            tis = []
+            for tid in range(M):
+                kfl, kt = jax.random.split(kfl)
+                _, t_i, _ = cs.adapt_task(kt, tid, snaps[t0],
+                                          max_rounds=max_rounds)
+                tis.append(t_i)
+            rounds[t0].append(tis)
+            if verbose:
+                print(f"[seed {seed}] t0={t0:3d}: t_i={tis} "
+                      f"sum={sum(tis)}", flush=True)
+            _save_partial(rounds, t0_grid, out)
+
+    mean_rounds = {t0: np.mean(rounds[t0], axis=0).tolist()
+                   for t0 in t0_grid}
+
+    result = {"rounds": {str(k): v for k, v in rounds.items()},
+              "mean_rounds": {str(k): v for k, v in mean_rounds.items()},
+              "paper_table_ii": {str(k): v
+                                 for k, v in PAPER_TABLE_II.items()},
+              "energies": {}}
+    _add_energies(result, t0_grid)
+    if verbose:
+        for regime, r in result["energies"].items():
+            print(f"{regime}: optimal t0 = {r['optimal_t0']}, "
+                  f"E_kJ = { {k: round(v, 1) for k, v in r['E_kJ'].items()} }",
+                  flush=True)
+    import os
+    os.makedirs("benchmarks/results", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--max-rounds", type=int, default=400)
+    ap.add_argument("--out", default="benchmarks/results/fig4.json")
+    a = ap.parse_args()
+    run(seeds=a.seeds, max_rounds=a.max_rounds, out=a.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table II: average FL rounds t_i per task vs MAML rounds t0 — ours vs
+the paper's published numbers (needs benchmarks/results/fig4.json)."""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def main(path: str = "benchmarks/results/fig4.json"):
+    with open(path) as f:
+        d = json.load(f)
+    ours = d["mean_rounds"]
+    paper = d["paper_table_ii"]
+    print(f"{'t0':>5} | {'ours: t_1..t_6':^42} | sum | paper sum")
+    for t0 in sorted(ours, key=int):
+        o = ours[t0]
+        ps = sum(paper.get(t0, [])) if t0 in paper else float("nan")
+        print(f"{t0:>5} | {' '.join(f'{x:6.1f}' for x in o)} "
+              f"| {sum(o):5.0f} | {ps:6.1f}")
+    s0 = sum(ours["0"])
+    best = min((t0 for t0 in ours if t0 != "0"),
+               key=lambda t: sum(ours[t]))
+    print(f"\nrounds scale-down vs t0=0: best t0={best} -> "
+          f"{s0 / max(sum(ours[best]), 1e-9):.1f}x  [paper: up to 9x]")
+    print("unseen tasks (3,4,5 idx 2,3,4) vs trained (1,2,6 idx 0,1,5):")
+    for t0 in sorted(ours, key=int):
+        if t0 == "0":
+            continue
+        o = ours[t0]
+        tr = np.mean([o[0], o[1], o[5]])
+        un = np.mean([o[2], o[3], o[4]])
+        print(f"  t0={t0:>3}: trained {tr:6.1f} | unseen {un:6.1f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

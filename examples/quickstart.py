@@ -1,0 +1,97 @@
+"""Quickstart: the paper's two-stage protocol on a toy LM, end to end,
+in under a minute on CPU.
+
+1. meta-train (MAML, Eqs. 3–5) a reduced stablelm-family decoder over 3
+   related token tasks;
+2. adapt to an UNSEEN 4th task with decentralized consensus FL (Eq. 6);
+3. price both stages with the paper's energy model (Eqs. 8–12).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import consensus, energy, federated, maml
+from repro.data import TaskTokenDistribution
+from repro.models.api import get_model, lm_loss
+
+
+def main():
+    cfg = reduced(get_arch("stablelm-3b"), num_layers=2, d_model=128)
+    model = get_model(cfg)
+    dist = TaskTokenDistribution(vocab_size=cfg.vocab_size, num_tasks=4)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+    n_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(params))
+    print(f"model: {sum(x.size for x in jax.tree.leaves(params)):,} params")
+
+    def loss_fn(p, batch):
+        return lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                       model=model)
+
+    def batch_for(k, task, n=1):
+        def one(kk):
+            t, l = dist.sample(kk, task, 4, 64)
+            return {"tokens": t, "labels": l}
+        if n == 1:
+            return one(k)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[one(kk) for kk in jax.random.split(k, n)])
+
+    # ---- stage 1: MAML over tasks {0, 1, 2} ------------------------------
+    def sample_tasks(k, _):
+        ks = jax.random.split(k, 6)
+        sup = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[batch_for(ks[i], i) for i in range(3)])
+        qry = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[batch_for(ks[3 + i], i) for i in range(3)])
+        return sup, qry
+
+    t0 = 20
+    meta, hist = maml.maml_train(loss_fn, params, sample_tasks, rounds=t0,
+                                 inner_lr=0.05, outer_lr=0.02)
+    print(f"MAML {t0} rounds: meta-loss {hist[0]:.3f} -> {hist[-1]:.3f}")
+
+    # ---- stage 2: consensus FL on unseen task 3 --------------------------
+    K = 2
+    mix = consensus.mixing_weights(np.ones(K), consensus.full_adjacency(K),
+                                   "paper")
+
+    def adapt(init, rounds=8):
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), init)
+        losses = []
+        for r in range(rounds):
+            k = jax.random.fold_in(key, 1000 + r)
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[batch_for(jax.random.fold_in(k, a), 3, n=4)
+                  for a in range(K)])
+            stacked = federated.decentralized_fl_round(
+                loss_fn, stacked, batches, mix, lr=0.05)
+            p0 = jax.tree.map(lambda x: x[0], stacked)
+            losses.append(float(loss_fn(p0, batch_for(k, 3))))
+        return losses
+
+    from_meta = adapt(meta)
+    from_rand = adapt(params)
+    print(f"FL adaptation loss (unseen task): "
+          f"meta-init {from_meta[0]:.3f}->{from_meta[-1]:.3f} | "
+          f"random-init {from_rand[0]:.3f}->{from_rand[-1]:.3f}")
+
+    # ---- energy accounting ------------------------------------------------
+    ep = dataclasses.replace(energy.paper_calibrated("fig3"),
+                             model_bits=n_bytes * 8.0)
+    E_ml = energy.maml_energy(ep, t0, 3)
+    E_fl = energy.fl_energy(ep, len(from_meta))
+    print(f"energy: E_ML({t0} rounds) = {E_ml/1e3:.2f} kJ, "
+          f"E_FL = {E_fl/1e3:.2f} kJ, total {(E_ml+E_fl)/1e3:.2f} kJ")
+
+
+if __name__ == "__main__":
+    main()

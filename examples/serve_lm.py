@@ -1,0 +1,20 @@
+"""Serve a (reduced) assigned architecture with batched requests:
+prefill + greedy decode through the KV-cache serve path — including a
+sliding-window arch whose cache is the circular window buffer.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.configs import get_arch, reduced
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("stablelm-3b", "h2o-danube-3-4b", "recurrentgemma-9b"):
+        cfg = reduced(get_arch(arch))
+        print(f"== {arch} (reduced: {cfg.num_layers}L d={cfg.d_model}"
+              f"{', SWA ' + str(cfg.sliding_window) if cfg.sliding_window else ''}) ==")
+        serve(cfg, batch=2, prompt_len=32, gen=8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.store import save_pytree, restore_pytree, CheckpointManager

@@ -1,0 +1,93 @@
+"""Pytree checkpointing to .npz (no orbax in this container).
+
+Arrays are gathered to host (fully addressable) before saving; restore
+optionally re-places leaves onto a sharding tree. Step-numbered directories
+with a retention policy, like a tiny orbax.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":   # e.g. bfloat16 -> f32 on disk
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save_pytree(path: str, tree) -> None:
+    flat, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+
+
+def restore_pytree(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (names must match)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """step-numbered checkpoints with retention."""
+
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, state, metadata: Optional[dict] = None):
+        d = self._step_dir(step)
+        os.makedirs(d, exist_ok=True)
+        save_pytree(os.path.join(d, "state"), state)
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            json.dump({"step": step, **(metadata or {})}, f)
+        for old in self.steps()[:-self.max_to_keep]:
+            shutil.rmtree(self._step_dir(old), ignore_errors=True)
+
+    def restore(self, like, step: Optional[int] = None, shardings=None):
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = step if step is not None else steps[-1]
+        return restore_pytree(os.path.join(self._step_dir(step), "state"),
+                              like, shardings), step

@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    ArchConfig, MoEConfig, RGLRUConfig, XLSTMConfig, EncDecConfig,
+    InputShape, INPUT_SHAPES, get_arch, list_archs, reduced, register,
+)

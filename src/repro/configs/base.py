@@ -1,0 +1,272 @@
+"""Configuration system.
+
+Every assigned architecture is a frozen :class:`ArchConfig`; the four
+assignment input shapes are :class:`InputShape` entries in ``INPUT_SHAPES``.
+Configs are plain frozen dataclasses — hashable, so they can be closed over
+by jitted functions as static data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for a block's MLP."""
+
+    num_experts: int = 8
+    top_k: int = 2
+    num_shared_experts: int = 0      # qwen2-moe style always-on experts
+    router_aux_loss_coef: float = 0.01
+    capacity_factor: float = 1.25    # used by capacity-based dispatch
+    shared_expert_d_ff: int = 0      # d_ff of the shared expert (0 -> same as experts)
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU recurrence settings."""
+
+    lru_width: int = 0               # 0 -> d_model
+    conv1d_width: int = 4
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block-stack settings (arXiv:2405.04517)."""
+
+    slstm_at: Tuple[int, ...] = ()   # layer indices using sLSTM; rest mLSTM
+    mlstm_proj_factor: float = 2.0   # up-projection factor for mLSTM blocks
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv1d_width: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (whisper) settings. Frontend is a stub."""
+
+    num_encoder_layers: int = 32
+    encoder_seq_len: int = 1500      # 30 s audio -> 1500 frames after conv stub
+    max_decoder_ctx: int = 448
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A single architecture, exactly as assigned.
+
+    ``family`` selects the model constructor:
+      dense | moe | hybrid (rg-lru) | ssm (xlstm) | encdec (whisper) | vlm
+    (vlm is a dense decoder over an early-fusion token stream).
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    sliding_window: int = 0          # 0 -> full attention; else SWA window
+    attention_types: Tuple[str, ...] = ()  # per-layer override (hybrids)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"                # mlp activation: silu | gelu
+    mlp_kind: str = "gated"          # gated (llama) | plain (whisper/gpt)
+    use_qk_norm: bool = False
+    logit_softcap: float = 0.0
+
+    moe: Optional[MoEConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True               # activation checkpointing per layer/block
+    remat_policy: str = "full"       # full | dots (save matmul outputs:
+                                     # trades HBM for recompute FLOPs)
+    unroll_layers: bool = False      # python-loop layers instead of scan
+                                     # (cost-analysis probes; see roofline)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch serve ~500k contexts (O(T) or O(w*T) attention)?"""
+        return (
+            self.family in ("hybrid", "ssm")
+            or self.sliding_window > 0
+        )
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder_only"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + norms)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.head_dim_
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        att = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d
+        if self.family == "moe":
+            assert self.moe is not None
+            e = self.moe.num_experts + self.moe.num_shared_experts * (
+                (self.moe.shared_expert_d_ff or self.d_ff) // max(self.d_ff, 1))
+            n_mlp_mats = 3 if self.mlp_kind == "gated" else 2
+            mlp = self.moe.num_experts * n_mlp_mats * d * self.d_ff
+            if self.moe.num_shared_experts:
+                sdff = self.moe.shared_expert_d_ff or self.d_ff
+                mlp += n_mlp_mats * d * sdff
+            mlp += d * self.moe.num_experts  # router
+            del e
+        elif self.family == "ssm":
+            # xLSTM: rough (projections + gates); refined by the model itself.
+            mlp = 0
+            att = 0
+            pf = self.xlstm.mlstm_proj_factor if self.xlstm else 2.0
+            att = int(4 * d * d * pf)
+        else:
+            n_mlp_mats = 3 if self.mlp_kind == "gated" else 2
+            mlp = n_mlp_mats * d * self.d_ff
+        blocks = L * (att + mlp + 2 * d)
+        if self.family == "encdec" and self.encdec is not None:
+            blocks += self.encdec.num_encoder_layers * (att + mlp + 2 * d)
+            # decoder cross-attention
+            blocks += L * att
+        return emb + blocks + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k + shared experts)."""
+        if self.family != "moe" or self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        n_mlp_mats = 3 if self.mlp_kind == "gated" else 2
+        dense_like = self.param_count() - L * (
+            self.moe.num_experts * n_mlp_mats * d * self.d_ff)
+        active_mlp = L * self.moe.top_k * n_mlp_mats * d * self.d_ff
+        return dense_like + active_mlp
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the four assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str        # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        # import side-effect registration
+        from repro import configs as _c  # noqa: F401
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in (
+        "granite_8b", "chameleon_34b", "stablelm_3b", "recurrentgemma_9b",
+        "whisper_large_v3", "mixtral_8x7b", "deepseek_7b", "qwen2_moe_a2_7b",
+        "h2o_danube_3_4b", "xlstm_125m", "paper_dqn",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True
+
+
+def reduced(cfg: ArchConfig, *, num_layers: int = 2, d_model: int = 256,
+            max_experts: int = 4, vocab: int = 512) -> ArchConfig:
+    """A smoke-test-sized variant of the same family (CPU-runnable)."""
+    heads = max(2, min(cfg.num_heads, 4))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    changes = dict(
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=d_model // heads,
+        d_ff=max(2 * d_model, 64) if cfg.d_ff else 0,
+        vocab_size=vocab,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        remat=False,
+        dtype="float32",
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, max_experts),
+            top_k=min(cfg.moe.top_k, 2),
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            shared_expert_d_ff=0,
+        )
+    if cfg.rglru is not None:
+        changes["rglru"] = dataclasses.replace(cfg.rglru, lru_width=0)
+    if cfg.xlstm is not None:
+        changes["xlstm"] = dataclasses.replace(
+            cfg.xlstm, slstm_at=tuple(i for i in cfg.xlstm.slstm_at
+                                      if i < num_layers) or (0,))
+    if cfg.encdec is not None:
+        changes["encdec"] = dataclasses.replace(
+            cfg.encdec, num_encoder_layers=num_layers, encoder_seq_len=32)
+    if cfg.attention_types:
+        changes["attention_types"] = cfg.attention_types[:num_layers]
+    return dataclasses.replace(cfg, **changes)

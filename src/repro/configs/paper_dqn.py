@@ -1,0 +1,20 @@
+"""The paper's own model: DeepMind DQN Q-network (Mnih et al. 2015), 5
+trainable layers / 1.3M params / b(W)=5.6 MB, adapted to the 40-landmark
+gridworld state (Sect. IV). Registered so the paper's case study flows
+through the same config/launch machinery as the assigned archs.
+"""
+from repro.configs.base import ArchConfig, register
+
+PAPER_DQN = register(ArchConfig(
+    name="paper-dqn",
+    family="dqn",
+    num_layers=5,
+    d_model=512,            # fc width (the 1.3M-param DeepMind shape)
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=512,
+    vocab_size=4,           # |actions| = {F, B, L, R}
+    citation="DOI:10.1109/PIMRC54779.2022.9977688 + Mnih et al. 2015",
+    dtype="float32",
+    remat=False,
+))

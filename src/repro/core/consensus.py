@@ -1,0 +1,202 @@
+"""Decentralized federated learning by average consensus — paper Eq. (6).
+
+    W^{(k)}_{t+1} = W^{(k)}_t + Σ_{h∈N_k} σ_{k,h} (W^{(h)}_t − W^{(k)}_t),
+    σ_{k,h} = |E_h| / Σ_{j∈N_k} |E_j|                       (paper / ref [5])
+
+Two execution modes:
+
+* ``consensus_step``           — dense: agent-stacked params (K on the
+  leading axis) mixed by a (K, K) matrix. This is the reference semantics
+  and the CPU path for the paper's 12-robot case study.
+* ``ring_consensus_step``      — distributed: each mesh position along
+  ``axis_name`` holds ONE agent's replica; neighbour exchange is
+  ``jax.lax.ppermute`` on the ICI ring (sidelink SL in the paper's terms).
+  Run under ``shard_map``. Communication per round per agent =
+  2 · b(W) — exactly the quantity the paper's Eq. (11) prices.
+
+Also provides Metropolis–Hastings weights (symmetric, doubly-stochastic —
+the consensus-theory default) behind ``kind="metropolis"``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices
+# ---------------------------------------------------------------------------
+
+
+def ring_adjacency(K: int, hops: int = 1) -> np.ndarray:
+    """Symmetric ring: each agent sees ``hops`` neighbours each side."""
+    A = np.zeros((K, K), bool)
+    for k in range(K):
+        for d in range(1, hops + 1):
+            A[k, (k + d) % K] = True
+            A[k, (k - d) % K] = True
+    if K > 1:
+        np.fill_diagonal(A, False)
+    return A
+
+
+def full_adjacency(K: int) -> np.ndarray:
+    A = np.ones((K, K), bool)
+    np.fill_diagonal(A, False)
+    return A
+
+
+def mixing_weights(data_sizes, adjacency, kind: str = "paper",
+                   include_self: bool = True):
+    """(K, K) row-stochastic mixing matrix Σ with Σ[k, h] = σ_{k,h}.
+
+    kind="paper":  σ_{k,h} = |E_h| / Σ_j |E_j| with the sum over N_k
+                   (``include_self=False``, the literal Eq. 6 reading) or
+                   N_k ∪ {k} (``include_self=True``, default). Eq. (6)'s
+                   text is ambiguous ("computed using |E_{i,h}| and
+                   |{E_{i,j}}_{j∈N_{k,i}}|"); the literal reading has ZERO
+                   self-weight, which is non-convergent under pure mixing
+                   on even rings and a pure swap for the paper's own
+                   2-robot clusters — so the implementation they ran must
+                   keep the local share. Both are exposed; tests cover the
+                   convergence difference.
+    kind="metropolis": σ_{k,h} = 1 / (1 + max(deg_k, deg_h)), self weight
+                   1 − Σ — symmetric, doubly stochastic.
+    """
+    sizes = jnp.asarray(data_sizes, jnp.float32)
+    A = jnp.asarray(adjacency, bool)
+    K = A.shape[0]
+    if kind == "paper":
+        w = jnp.where(A, sizes[None, :], 0.0)
+        denom = w.sum(axis=1, keepdims=True)
+        if include_self:
+            denom = denom + sizes[:, None]
+        denom = jnp.maximum(denom, 1e-12)
+        return w / denom
+    if kind == "metropolis":
+        deg = A.sum(axis=1).astype(jnp.float32)
+        w = jnp.where(A, 1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])),
+                      0.0)
+        self_w = 1.0 - w.sum(axis=1)
+        return w + jnp.diag(self_w)
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def _effective_mix(mix):
+    """Add the implicit self weight so rows sum to 1 exactly."""
+    self_w = 1.0 - mix.sum(axis=1)
+    return mix + jnp.diag(self_w)
+
+
+# ---------------------------------------------------------------------------
+# dense (reference) consensus
+# ---------------------------------------------------------------------------
+
+
+def consensus_step(stacked_params, mix):
+    """Eq. (6) on agent-stacked params (leading axis K). mix: (K, K) σ."""
+    M = _effective_mix(jnp.asarray(mix, jnp.float32))
+
+    def mix_leaf(x):
+        xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+        y = M @ xf
+        return y.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(mix_leaf, stacked_params)
+
+
+def consensus_error(stacked_params) -> jnp.ndarray:
+    """Mean squared deviation from the agent average (0 ⇒ consensus)."""
+    tot, n = 0.0, 0
+    for x in jax.tree.leaves(stacked_params):
+        xf = x.astype(jnp.float32)
+        dev = xf - xf.mean(axis=0, keepdims=True)
+        tot = tot + jnp.sum(jnp.square(dev))
+        n += dev.size
+    return tot / n
+
+
+# ---------------------------------------------------------------------------
+# distributed (sharded) consensus — sidelink == ICI ring
+# ---------------------------------------------------------------------------
+
+
+def ring_consensus_step(params, data_size, axis_name: str, hops: int = 1,
+                        include_self: bool = True, message_dtype=None):
+    """One Eq.-(6) round where each ``axis_name`` position is an agent.
+
+    Must run inside shard_map. ``data_size``: scalar |E_k| per agent.
+    Exchanges params + sizes with ±1..hops ring neighbours via ppermute
+    (2·hops messages of b(W) per agent per round — the paper's SL traffic).
+    ``include_self`` as in :func:`mixing_weights`.
+
+    ``message_dtype``: cast the EXCHANGED copy (e.g. bf16) — halves the
+    Eq.-(11) sidelink bytes. An optimization_barrier pins the cast before
+    the ppermute (XLA otherwise commutes converts past permutes and keeps
+    the wire at the storage dtype — EXPERIMENTS.md §Perf P3).
+    """
+    K = jax.lax.axis_size(axis_name)
+    perms = []
+    for d in range(1, hops + 1):
+        perms.append([(i, (i + d) % K) for i in range(K)])   # from left
+        perms.append([(i, (i - d) % K) for i in range(K)])   # from right
+
+    sizes = [jax.lax.ppermute(data_size, axis_name, p) for p in perms]
+    denom = sum(sizes) + (data_size if include_self else 0.0)
+    sigmas = [s / jnp.maximum(denom, 1e-12) for s in sizes]
+
+    def combine(x):
+        if message_dtype is not None and x.dtype != jnp.dtype(message_dtype):
+            # the whole neighbour pathway stays in message_dtype: if the
+            # received value were upcast, XLA CSEs the convert with the
+            # local f32 accumulator and moves the WIRE back to f32 —
+            # consuming neighbours only in bf16 pins a bf16 exchange.
+            md = jnp.dtype(message_dtype)
+            msg = x.astype(md)
+            neigh = [jax.lax.ppermute(msg, axis_name, p) for p in perms]
+            upd = sum((sig.astype(md) * (nb - msg)).astype(jnp.float32)
+                      for sig, nb in zip(sigmas, neigh))
+        else:
+            neigh = [jax.lax.ppermute(x, axis_name, p) for p in perms]
+            xf32 = x.astype(jnp.float32)
+            upd = sum(sig * (nb.astype(jnp.float32) - xf32)
+                      for sig, nb in zip(sigmas, neigh))
+        return (x.astype(jnp.float32) + upd).astype(x.dtype)
+
+    return jax.tree.map(combine, params)
+
+
+def cluster_ring_consensus_step(params, data_size, axis_name: str,
+                                cluster_size: int,
+                                include_self: bool = True):
+    """Ring consensus restricted to contiguous clusters of ``cluster_size``
+    agents along ``axis_name`` (the paper's per-task clusters C_i: only
+    same-cluster agents exchange models)."""
+    K = jax.lax.axis_size(axis_name)
+    assert K % cluster_size == 0
+    if cluster_size == 1:
+        return params
+    perm_fwd, perm_bwd = [], []
+    for i in range(K):
+        c = i // cluster_size
+        perm_fwd.append((i, c * cluster_size + (i + 1 - c * cluster_size)
+                         % cluster_size))
+        perm_bwd.append((i, c * cluster_size + (i - 1 - c * cluster_size)
+                         % cluster_size))
+    perms = [perm_fwd, perm_bwd] if cluster_size > 2 else [perm_fwd]
+
+    sizes = [jax.lax.ppermute(data_size, axis_name, p) for p in perms]
+    denom = sum(sizes) + (data_size if include_self else 0.0)
+    sigmas = [s / jnp.maximum(denom, 1e-12) for s in sizes]
+
+    def combine(x):
+        neigh = [jax.lax.ppermute(x, axis_name, p) for p in perms]
+        xf = x.astype(jnp.float32)
+        upd = sum(sig * (nb.astype(jnp.float32) - xf)
+                  for sig, nb in zip(sigmas, neigh))
+        return (xf + upd).astype(x.dtype)
+
+    return jax.tree.map(combine, params)

@@ -1,0 +1,1 @@
+from repro.kernels.ops import flash_attention, rglru_scan, consensus_update

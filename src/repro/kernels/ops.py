@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels with shape/dtype guards
+and an ``impl`` switch:
+
+    impl="pallas"     — TPU kernel (compile target)
+    impl="interpret"  — kernel body executed in Python on CPU (validation)
+    impl="xla"        — the pure-jnp oracle (CPU/dry-run production path)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import consensus_update as _cu
+from repro.kernels import ref as _ref
+
+_ALLOWED_DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def _check_dtype(*arrays):
+    for a in arrays:
+        if a.dtype not in [jnp.dtype(d) for d in _ALLOWED_DTYPES]:
+            raise TypeError(f"unsupported dtype {a.dtype}; use f32/bf16")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, impl: str = "xla"):
+    """Batched GQA attention. q (B,S,H,hd); k,v (B,T,K,hd); H % K == 0."""
+    _check_dtype(q, k, v)
+    if q.ndim != 4 or k.shape != v.shape or q.shape[3] != k.shape[3]:
+        raise ValueError(f"bad shapes {q.shape} {k.shape} {v.shape}")
+    if q.shape[2] % k.shape[2]:
+        raise ValueError(f"H={q.shape[2]} not a multiple of K={k.shape[2]}")
+    if impl == "xla":
+        return _ref.mha_reference(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k,
+                               interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_t", "impl"))
+def rglru_scan(log_a, b, h0=None, *, block_w: int = 512, block_t: int = 256,
+               impl: str = "xla"):
+    """Linear recurrence h_t = exp(log_a_t)·h_{t-1} + b_t over (B, T, W)."""
+    _check_dtype(log_a, b)
+    if log_a.shape != b.shape or log_a.ndim != 3:
+        raise ValueError(f"bad shapes {log_a.shape} {b.shape}")
+    if impl == "xla":
+        return _ref.rglru_scan_reference(log_a, b, h0)
+    return _rg.rglru_scan(log_a, b, h0, block_w=block_w, block_t=block_t,
+                          interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "impl"))
+def consensus_update(x, neighbors, sigmas, *, block_n: int = 64 * 1024,
+                     impl: str = "xla"):
+    """Fused Eq.-(6) update: x + Σ_h σ_h (neighbors_h − x), flat params."""
+    _check_dtype(x, neighbors)
+    if neighbors.ndim != 2 or neighbors.shape[1] != x.shape[0] \
+            or sigmas.shape[0] != neighbors.shape[0]:
+        raise ValueError(
+            f"bad shapes {x.shape} {neighbors.shape} {sigmas.shape}")
+    if impl == "xla":
+        return _ref.consensus_update_reference(x, neighbors, sigmas)
+    return _cu.consensus_update(x, neighbors, sigmas, block_n=block_n,
+                                interpret=(impl == "interpret"))

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are also the XLA production paths used by the dry-run lowering
+(interpret-mode Pallas unrolls its grid at trace time on CPU — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_reference
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """Oracle for kernels.flash_attention (O(S·T) einsum attention)."""
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+
+
+def rglru_scan_reference(log_a, b, h0=None):
+    """Oracle for kernels.rglru_scan: sequential-in-time recurrence."""
+    B, T, W = log_a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la.astype(jnp.float32)) * h + bb.astype(jnp.float32)
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h, (log_a.swapaxes(0, 1),
+                                        b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(log_a.dtype), h_last
+
+
+def consensus_update_reference(x, neighbors, sigmas):
+    """Oracle for kernels.consensus_update (Eq. 6, one agent)."""
+    xf = x.astype(jnp.float32)
+    delta = (neighbors.astype(jnp.float32) - xf[None, :])
+    upd = jnp.einsum("h,hn->n", sigmas.astype(jnp.float32), delta)
+    return (xf + upd).astype(x.dtype)

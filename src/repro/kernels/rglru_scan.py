@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (Griffin/
+RecurrentGemma):   h_t = exp(log_a_t) · h_{t-1} + b_t.
+
+TPU adaptation: the recurrence is serial in time but fully parallel over
+(batch, channel). The grid is (batch, width_blocks, time_chunks) with the
+time dimension innermost; the carry state lives in a VMEM scratch row that
+persists across time-chunk grid steps (no HBM round-trip between chunks).
+Inside a chunk the loop is a ``fori_loop`` over rows: each step is one
+(1 × block_w) VPU fma — lanes carry the channels. Channel blocks of 512
+lanes keep the VPU saturated; time chunks of 256 amortize grid overhead.
+
+The pure-jnp oracle is ``repro.models.rglru.rglru_scan`` (associative
+scan), which is also the XLA production path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_W = 512
+DEFAULT_BLOCK_T = 256
+
+
+def _rglru_kernel(log_a_ref, b_ref, h0_ref, o_ref, carry_ref, *,
+                  block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)     # (1, bw) -> (bw,)
+
+    def body(t, h):
+        a = jnp.exp(log_a_ref[0, t, :].astype(jnp.float32))
+        h = a * h + b_ref[0, t, :].astype(jnp.float32)
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, body, carry_ref[...])
+    carry_ref[...] = h
+
+
+def rglru_scan(log_a, b, h0=None, *, block_w: int = DEFAULT_BLOCK_W,
+               block_t: int = DEFAULT_BLOCK_T, interpret: bool = False):
+    """log_a, b: (B, T, W); h0: (B, W) or None. Returns (h, h_last)."""
+    B, T, W = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    block_w = min(block_w, W)
+    block_t = min(block_t, T)
+    Wp = -(-W // block_w) * block_w
+    Tp = -(-T // block_t) * block_t
+    if Wp != W or Tp != T:
+        log_a = jnp.pad(log_a, ((0, 0), (0, Tp - T), (0, Wp - W)))
+        b = jnp.pad(b, ((0, 0), (0, Tp - T), (0, Wp - W)))
+        h0 = jnp.pad(h0, ((0, 0), (0, Wp - W)))
+
+    grid = (B, Wp // block_w, Tp // block_t)
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w), lambda bb, wv, tt: (bb, tt, wv)),
+            pl.BlockSpec((1, block_t, block_w), lambda bb, wv, tt: (bb, tt, wv)),
+            pl.BlockSpec((1, block_w), lambda bb, wv, tt: (bb, wv)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_w),
+                               lambda bb, wv, tt: (bb, tt, wv)),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, Wp), log_a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, h0)
+    h = out[:, :T, :W]
+    return h, h[:, -1].astype(jnp.float32)

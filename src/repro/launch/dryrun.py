@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""))
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers and compiles on the production mesh (DESIGN.md §4).
+
+The FIRST import above pins 512 placeholder host devices BEFORE jax
+initializes — this module (and ONLY this module) sees the full production
+topology; tests and benchmarks see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--out report.json]
+
+Per combination it records compiled.memory_analysis() (fits?),
+cost_analysis() FLOPs/bytes, and the collective-bytes breakdown parsed
+from the optimized HLO — the inputs of EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_arch, list_archs
+from repro.launch import steps
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+
+# (arch, shape) pairs excluded from long_500k with the reason recorded —
+# full-attention archs cannot serve 512k contexts (DESIGN.md §3).
+LONG_CONTEXT_SKIPS = {
+    "granite-8b": "full attention (llama arch); no SWA variant claimed",
+    "chameleon-34b": "full attention early-fusion VLM",
+    "stablelm-3b": "full attention (MHA)",
+    "deepseek-7b": "full attention (MHA)",
+    "whisper-large-v3": "decoder ctx 448; full attention enc-dec",
+    "paper-dqn": "not a sequence model",
+}
+
+
+def runnable(arch: str, shape_name: str) -> bool:
+    if arch == "paper-dqn":
+        return False
+    if shape_name == "long_500k" and arch in LONG_CONTEXT_SKIPS:
+        return False
+    return True
+
+
+def dry_run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+                verbose: bool = True, probe: bool = False):
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+
+    t0 = time.time()
+    lowered = steps.lower_step(cfg, mesh, shape)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    report = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, compile_seconds=t_lower + t_compile)
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"== {arch} × {shape_name} × {mesh_name} "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print(f"   memory_analysis: {ma}")
+        print(f"   flops={report.flops:.3e} bytes={report.hbm_bytes:.3e}")
+        print(f"   collectives: { {k: v for k, v in report.collectives.items() if v} }")
+
+    extra = {}
+    if probe:
+        from repro.launch.probes import (corrected, probe_configs,
+                                         ssm_analytic_correction)
+        pc_out = probe_configs(cfg)
+        full = {"flops": report.flops, "hbm_bytes": report.hbm_bytes,
+                "collective_total": float(report.collective_total)}
+        if pc_out is None:
+            # ssm: layers already unrolled; add the analytic inner-scan term
+            extra = dict(full)
+            extra["flops"] += ssm_analytic_correction(cfg, shape)
+            extra["probe_units"] = 0.0
+        else:
+            c1cfg, u1, c2cfg, u2, units = pc_out
+            probe_reports = []
+            for pcfg in (c1cfg, c2cfg):
+                pc = steps.lower_step(pcfg, mesh, shape).compile()
+                pr = analyze_compiled(pc, arch=arch, shape=shape_name,
+                                      mesh_name=mesh_name, chips=chips)
+                probe_reports.append({
+                    "flops": pr.flops, "hbm_bytes": pr.hbm_bytes,
+                    "collective_total": float(pr.collective_total)})
+            extra = corrected(full, probe_reports[0], probe_reports[1],
+                              u1, u2, units)
+            extra["probe_units"] = units
+        if verbose:
+            print(f"   corrected (probe): flops={extra['flops']:.3e} "
+                  f"bytes={extra['hbm_bytes']:.3e} "
+                  f"coll={extra['collective_total']:.3e}")
+            from repro.core.energy import RooflineTerms
+            rt = RooflineTerms(flops=extra["flops"],
+                               hbm_bytes=extra["hbm_bytes"],
+                               collective_bytes=extra["collective_total"],
+                               chips=chips)
+            print(f"   roofline: compute {rt.t_compute*1e3:.2f} ms | memory "
+                  f"{rt.t_memory*1e3:.2f} ms | collective "
+                  f"{rt.t_collective*1e3:.2f} ms -> {rt.bottleneck}-bound")
+    return report, extra
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch × shape) on this mesh")
+    ap.add_argument("--probe", action="store_true",
+                    help="also lower 1/2-layer unrolled probes and emit "
+                         "scan-corrected cost totals (launch/probes.py)")
+    ap.add_argument("--out", default=None, help="JSON report path")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = [args.arch] if args.arch else [a for a in list_archs()
+                                           if a != "paper-dqn"]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            if runnable(a, s):
+                pairs.append((a, s))
+            elif args.arch or args.shape:
+                print(f"SKIP {a} × {s}: "
+                      f"{LONG_CONTEXT_SKIPS.get(a, 'excluded')}")
+
+    reports, failures = [], []
+    # resume support: skip pairs already in --out
+    done = set()
+    if args.out:
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            reports = prev.get("reports", [])
+            done = {(r["arch"], r["shape"]) for r in reports}
+        except (OSError, json.JSONDecodeError):
+            pass
+
+    def save():
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"reports": reports, "failures": failures}, f,
+                          indent=1)
+
+    for a, s in pairs:
+        if (a, s) in done:
+            print(f"skip {a} × {s}: already in {args.out}")
+            continue
+        try:
+            r, extra = dry_run_one(a, s, multi_pod=args.multi_pod,
+                                   probe=args.probe)
+            d = dataclasses.asdict(r)
+            d["corrected"] = extra
+            reports.append(d)
+        except Exception as e:  # a failure here is a bug in the system
+            failures.append((a, s, repr(e)))
+            print(f"FAIL {a} × {s}: {e}")
+        save()
+    save()
+    print(f"\n{len(reports)} ok, {len(failures)} failed "
+          f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Extract roofline inputs from a lowered/compiled XLA program.
+
+``cost_analysis()`` provides HLO FLOPs and bytes accessed; collective
+bytes are NOT in cost_analysis, so we parse the (optimized, if available)
+HLO text and sum the result-shape bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), per §Roofline of the assignment.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[suc]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """{collective kind: result bytes} summed over the module.
+
+    ``-start``/``-done`` pairs are counted once (we skip ``-done``:
+    its operand is the started op)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(",
+            hlo_text, re.M):
+        shape_str, kind, phase = m.groups()
+        if phase == "-done":
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class DryRunReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    hbm_bytes: float
+    collectives: Dict[str, int]
+    bytes_per_device: Optional[float] = None
+    compile_seconds: float = 0.0
+
+    @property
+    def collective_total(self) -> int:
+        return sum(self.collectives.values())
+
+    def roofline(self, **kw):
+        from repro.core.energy import RooflineTerms
+        return RooflineTerms(
+            flops=self.flops, hbm_bytes=self.hbm_bytes,
+            collective_bytes=float(self.collective_total),
+            chips=self.chips, **kw)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, compile_seconds: float = 0.0,
+                     hlo_text: Optional[str] = None) -> DryRunReport:
+    """NOTE: XLA's cost_analysis (and the SPMD HLO module) are PER-DEVICE
+    (verified empirically; EXPERIMENTS.md §Roofline/Methodology) — we
+    multiply by ``chips`` so the report carries GLOBAL totals and the
+    §Roofline formulas (which divide by chips) apply as written. Scan
+    bodies are counted once; see launch/probes.py for the correction."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0)) * chips
+    hbm = float(ca.get("bytes accessed", 0.0)) * chips
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = {k: v * chips for k, v in collective_bytes(text).items()}
+    bpd = None
+    try:
+        ma = compiled.memory_analysis()
+        bpd = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    + getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        pass
+    return DryRunReport(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                        flops=flops, hbm_bytes=hbm, collectives=colls,
+                        bytes_per_device=bpd,
+                        compile_seconds=compile_seconds)

@@ -1,0 +1,121 @@
+"""Scan-corrected cost analysis ("probe" methodology).
+
+XLA's HLOCostAnalysis counts a ``while`` body ONCE, ignoring trip count
+(verified empirically — see EXPERIMENTS.md §Roofline/Methodology), and our
+models scan over layers, so the raw ``cost_analysis()`` of the production
+program undercounts FLOPs/bytes/collective-bytes by ~the layer count.
+
+Fix: lower the SAME (arch × shape × mesh) with 1 and 2 UNROLLED layers
+(``cfg.unroll_layers``), take the per-layer body cost as the difference,
+and extrapolate:   total ≈ c(n1) + (units − n1) · (c(n2) − c(n1)).
+
+Family notes:
+* hybrid (rg-lru): unit = one (r, r, a) period; 38 layers = 12.67 units.
+* encdec: encoder and decoder have equal depth (32/32) so one probe pair
+  varies both together; unit = one enc+dec layer pair.
+* ssm (xlstm): unit = one (m, s, m) period (12 layers = 4 units); the
+  sLSTM hidden-to-hidden recurrence is a time scan whose per-step body is
+  also counted once — its recurrent-matmul FLOPs are added analytically
+  (``slstm_recurrent_flops``); probes use a single mLSTM chunk so the
+  chunk scan has trip count 1.
+* probes reuse the production mesh, so tensor-parallel collectives inside
+  the body are captured and extrapolated identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.configs import ArchConfig, InputShape
+
+
+def probe_configs(cfg: ArchConfig) -> Tuple[ArchConfig, float,
+                                            ArchConfig, float, float]:
+    """(cfg_n1, units1, cfg_n2, units2, total_units)."""
+    if cfg.family == "hybrid":
+        period = len(cfg.rglru.block_pattern)
+        c1 = dataclasses.replace(cfg, num_layers=period, unroll_layers=True,
+                                 remat=False)
+        c2 = dataclasses.replace(cfg, num_layers=2 * period,
+                                 unroll_layers=True, remat=False)
+        return c1, 1.0, c2, 2.0, cfg.num_layers / period
+    if cfg.family == "encdec":
+        e1 = dataclasses.replace(cfg.encdec, num_encoder_layers=1)
+        e2 = dataclasses.replace(cfg.encdec, num_encoder_layers=2)
+        c1 = dataclasses.replace(cfg, num_layers=1, encdec=e1,
+                                 unroll_layers=True, remat=False)
+        c2 = dataclasses.replace(cfg, num_layers=2, encdec=e2,
+                                 unroll_layers=True, remat=False)
+        return c1, 1.0, c2, 2.0, float(cfg.num_layers)
+    if cfg.family == "ssm":
+        # xlstm already python-loops over its 12 layers (no layer scan);
+        # only the INNER time scans are undercounted — corrected
+        # analytically (``ssm_analytic_correction``), no probe compiles
+        # (the unrolled-chunk probes blow up CPU LLVM compile times).
+        return None
+    c1 = dataclasses.replace(cfg, num_layers=1, unroll_layers=True,
+                             remat=False)
+    c2 = dataclasses.replace(cfg, num_layers=2, unroll_layers=True,
+                             remat=False)
+    return c1, 1.0, c2, 2.0, float(cfg.num_layers)
+
+
+def slstm_recurrent_flops(cfg: ArchConfig, shape: InputShape,
+                          chips: int) -> float:
+    """Per-device analytic FLOPs of the sLSTM time-scan recurrent matmuls
+    (4 gates × blockdiag (H, hd, hd) per step), fwd (+2x for train bwd)."""
+    if cfg.family != "ssm":
+        return 0.0
+    n_slstm = len(cfg.xlstm.slstm_at)
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.mode == "train" else
+                                   (shape.seq_len if shape.mode == "prefill"
+                                    else 1))
+    per_tok = 4 * H * hd * hd * 2            # 4 gate matmuls, 2 flops/MAC
+    mult = 3.0 if shape.mode == "train" else 1.0
+    return n_slstm * tokens * per_tok * mult / chips
+
+
+def corrected(c_full: dict, c1: dict, c2: dict, u1: float, u2: float,
+              total_units: float) -> dict:
+    """Extrapolate each cost field; keep full-run fields where bigger
+    (head terms like the unembed/loss are inside all three, and the
+    full run is a lower bound)."""
+    out = {}
+    for k in ("flops", "hbm_bytes", "collective_total"):
+        body = max(c2[k] - c1[k], 0.0) / (u2 - u1)
+        est = c1[k] + (total_units - u1) * body
+        out[k] = max(est, c_full[k])
+    return out
+
+
+def mlstm_intra_flops(cfg: ArchConfig, shape: InputShape,
+                      chunk: int = 256) -> float:
+    """Analytic FLOPs of the mLSTM chunkwise cell (intra-chunk quadratic +
+    carry updates), GLOBAL, fwd (+2x bwd for train). The chunk lax.scan
+    body is counted once by XLA, so (nc-1)/nc of this is missing from the
+    raw numbers; we return the missing share."""
+    if cfg.family != "ssm":
+        return 0.0
+    T = shape.seq_len if shape.mode in ("train", "prefill") else 1
+    if T <= chunk:
+        return 0.0
+    B = shape.global_batch
+    H = cfg.num_heads
+    pdim = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    phd = pdim // H
+    n_mlstm = cfg.num_layers - len(cfg.xlstm.slstm_at)
+    nc = -(-T // chunk)
+    per_chunk = (2 * chunk * chunk * phd * 2     # S = qk^T, num = S@v
+                 + 2 * chunk * phd * phd * 2)    # carry C/n updates
+    total = B * H * n_mlstm * nc * per_chunk
+    mult = 3.0 if shape.mode == "train" else 1.0
+    return total * mult * (nc - 1) / nc
+
+
+def ssm_analytic_correction(cfg: ArchConfig, shape: InputShape) -> float:
+    """Global FLOPs missing from raw cost_analysis for the ssm family."""
+    return (slstm_recurrent_flops(cfg, shape, 1)
+            + mlstm_intra_flops(cfg, shape))

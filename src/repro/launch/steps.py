@@ -1,0 +1,203 @@
+"""Step builders: train_step / prefill_step / decode_step per architecture,
+plus ``input_specs`` ShapeDtypeStruct stand-ins for the dry-run (no device
+allocation — weak-type-correct, shardable).
+
+Decode shapes lower ``serve_step`` — ONE new token against a seq_len KV
+cache (SWA archs physically cache only their window; SSM/hybrid archs
+carry recurrent state) — per the assignment contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, InputShape
+from repro.models.api import get_model, lm_loss
+from repro.optim import adam, apply_updates, clip_by_global_norm
+from repro.sharding import rules
+from repro.sharding.context import use_mesh
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out = {}
+    if shape.mode == "train":
+        out["tokens"] = tok(B, S)
+        out["labels"] = tok(B, S)
+    elif shape.mode == "prefill":
+        out["tokens"] = tok(B, S)
+    else:  # decode
+        out["tokens"] = tok(B, 1)
+        out["cache_index"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.family == "encdec":
+        T = cfg.encdec.encoder_seq_len
+        out["frames"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))
+        if shape.mode == "decode":
+            # cross-KV is computed at prefill; decode consumes the cache
+            del out["frames"]
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    """Params as ShapeDtypeStructs via eval_shape (no allocation)."""
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_caches(cfg: ArchConfig, shape: InputShape):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, *, lr: float = 3e-4,
+                    clip_norm: float = 1.0):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    model = get_model(cfg)
+    opt = adam(lr)
+
+    def loss(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       embeddings=batch.get("frames"), model=model)
+
+    def train_step(params, opt_state, batch):
+        l, g = jax.value_and_grad(loss)(params, batch)
+        g, gnorm = clip_by_global_norm(g, clip_norm)
+        updates, opt_state = opt.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": l, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """(params, caches, batch) -> (last_logits, caches)."""
+    model = get_model(cfg)
+
+    def prefill_step(params, caches, batch):
+        logits, caches, _ = model.forward(
+            params, cfg, batch["tokens"],
+            embeddings=batch.get("frames"),
+            caches=caches, cache_index=jnp.int32(0))
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    """(params, caches, batch{tokens,cache_index}) -> (next_token, caches)."""
+    model = get_model(cfg)
+
+    def decode_step(params, caches, batch):
+        logits, caches, _ = model.forward(
+            params, cfg, batch["tokens"],
+            caches=caches, cache_index=batch["cache_index"])
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# sharded lowering (shared by dryrun.py / train.py / serve.py)
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(cfg, mesh, shape: InputShape, *, with_opt: bool):
+    """(param_sh, opt_sh, cache_sh, batch_sh) NamedSharding trees."""
+    p_abs = abstract_params(cfg)
+    p_sh = rules.param_shardings(p_abs, cfg, mesh)
+    o_sh = None
+    if with_opt:
+        opt = adam(1e-4)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        # optimizer state inherits its param's sharding; scalars replicate
+        flat_p = {id(l): s for (l, s) in zip(
+            jax.tree.leaves(p_abs), jax.tree.leaves(p_sh))}
+
+        def opt_leaf_sharding(leaf):
+            return NamedSharding(mesh, P())
+
+        # mu/nu mirror params exactly -> reuse param sharding by structure
+        o_sh = {
+            "step": NamedSharding(mesh, P()),
+            "mu": jax.tree.map(lambda s: s, p_sh),
+            "nu": jax.tree.map(lambda s: s, p_sh),
+        }
+    c_sh = None
+    if shape.mode != "train":
+        c_abs = abstract_caches(cfg, shape)
+        c_sh = rules.cache_shardings(c_abs, cfg, mesh)
+    b_abs = input_specs(cfg, shape)
+    b_sh = {}
+    dp = rules.dp_size(mesh)
+    for name, spec in b_abs.items():
+        sdims = [None] * len(spec.shape)
+        if (name != "cache_index" and len(spec.shape)
+                and spec.shape[0] % dp == 0):
+            sdims[0] = rules.batch_spec(mesh)[0]
+        b_sh[name] = NamedSharding(mesh, P(*sdims))
+    return p_sh, o_sh, c_sh, b_sh
+
+
+def lower_step(cfg, mesh, shape: InputShape, *, donate: bool = True):
+    """Build + lower the right step for (cfg, shape) on ``mesh``.
+
+    Returns (lowered, specs_dict) — ``lowered.compile()`` is the dry-run.
+    """
+    with use_mesh(mesh):
+        p_abs = abstract_params(cfg)
+        b_abs = input_specs(cfg, shape)
+        p_sh, o_sh, c_sh, b_sh = shardings_for(
+            cfg, mesh, shape, with_opt=shape.mode == "train")
+
+        if shape.mode == "train":
+            step, opt = make_train_step(cfg)
+            o_abs = jax.eval_shape(opt.init, p_abs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(p_abs, o_abs, b_abs)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg)
+            c_abs = abstract_caches(cfg, shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(p_abs, c_abs, b_abs)
+        else:
+            step = make_decode_step(cfg)
+            c_abs = abstract_caches(cfg, shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(p_abs, c_abs, b_abs)
+    return lowered

@@ -1,0 +1,196 @@
+"""Training launcher.
+
+Two modes (the paper's contribution is a first-class feature, not a demo):
+
+* ``standard``  — synchronous data/tensor-parallel training: one jitted
+  step, grads averaged over the data axes (GSPMD inserts the all-reduce).
+* ``federated`` — the paper's decentralized protocol at LM scale: the
+  data axis is a population of AGENTS, each holding its own replica and
+  task-conditioned data stream; agents take ``local_steps`` SGD steps per
+  round then run one Eq.-(6) consensus mixing step with their cluster
+  neighbours (ring over the ICI). No parameter server, no global
+  all-reduce — exactly the communication pattern Eqs. (10)–(11) price.
+
+Host execution uses whatever devices exist (tests/examples: 1 CPU);
+the production mesh path is exercised by dryrun.py.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --reduced --steps 20 --mode federated --agents 4 --tasks 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import consensus, energy
+from repro.data import TaskTokenDistribution
+from repro.launch import steps as steps_lib
+from repro.models import frontend
+from repro.models.api import get_model, lm_loss
+from repro.optim import adam, apply_updates, clip_by_global_norm
+
+
+def train_standard(cfg, *, steps: int, batch: int, seq: int, lr: float,
+                   log_every: int = 5, seed: int = 0):
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, cfg)
+    opt = adam(lr)
+    opt_state = opt.init(params)
+    dist = TaskTokenDistribution(vocab_size=cfg.vocab_size, num_tasks=1)
+
+    def loss_fn(p, batch_d):
+        return lm_loss(p, cfg, batch_d["tokens"], batch_d["labels"],
+                       embeddings=batch_d.get("frames"), model=model)
+
+    @jax.jit
+    def step(params, opt_state, batch_d):
+        l, g = jax.value_and_grad(loss_fn)(params, batch_d)
+        g, gn = clip_by_global_norm(g, 1.0)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, upd), opt_state, l, gn
+
+    hist = []
+    for t in range(steps):
+        key, sk = jax.random.split(key)
+        toks, labels = dist.sample(sk, 0, batch, seq)
+        bd = {"tokens": toks, "labels": labels}
+        if cfg.family == "encdec":
+            bd["frames"] = frontend.audio_frame_embeddings(sk, cfg, batch)
+        t0 = time.time()
+        params, opt_state, l, gn = step(params, opt_state, bd)
+        hist.append(float(l))
+        if t % log_every == 0:
+            print(f"step {t:4d}  loss {float(l):.4f}  gnorm {float(gn):.3f}"
+                  f"  {time.time() - t0:.2f}s")
+    return params, hist
+
+
+def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
+                    local_steps: int, batch: int, seq: int, lr: float,
+                    consensus_every: int = 1, seed: int = 0,
+                    energy_params=None, consensus_dtype=None):
+    """Clustered federated LM training (the paper's stage-2 at LM scale).
+
+    ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
+    consensus only mixes within a cluster (cluster_ring semantics, dense
+    implementation). Returns (stacked_params, per_round losses, energy J).
+    ``consensus_dtype``: cast exchanged models (e.g. bf16) — halves the
+    sidelink bytes of Eq. (11); EXPERIMENTS.md §Perf P3.
+    """
+    assert agents % tasks == 0
+    per = agents // tasks
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key, cfg)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (agents,) + x.shape), params)
+    dist = TaskTokenDistribution(vocab_size=cfg.vocab_size, num_tasks=tasks)
+
+    A = np.zeros((agents, agents), bool)
+    for c in range(tasks):
+        for i in range(per):
+            for j in range(per):
+                if i != j:
+                    A[c * per + i, c * per + j] = True
+    mix = consensus.mixing_weights(np.ones(agents), A, "paper")
+
+    def loss_fn(p, b):
+        return lm_loss(p, cfg, b["tokens"], b["labels"], model=model)
+
+    def local(p, b):
+        def one(p, bb):
+            g = jax.grad(loss_fn)(p, bb)
+            g, _ = clip_by_global_norm(g, 1.0)
+            return jax.tree.map(
+                lambda w, gw: (w.astype(jnp.float32) - lr
+                               * gw.astype(jnp.float32)).astype(w.dtype),
+                p, g), None
+        p, _ = jax.lax.scan(one, p, b)
+        return p
+
+    @jax.jit
+    def fl_round(stacked, key):
+        ks = jax.random.split(key, agents)
+
+        def agent_batches(k, aid):
+            task = aid // per
+            def sample_one(kk):
+                toks, labels = dist.sample(kk, task, batch, seq)
+                return {"tokens": toks, "labels": labels}
+            return jax.vmap(sample_one)(jax.random.split(k, local_steps))
+
+        batches = [agent_batches(ks[a], a) for a in range(agents)]
+        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        new = jax.vmap(local)(stacked, batches)
+        if consensus_dtype is not None:
+            cast = jax.tree.map(
+                lambda x: x.astype(consensus_dtype), new)
+            mixed = consensus.consensus_step(cast, mix)
+            new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
+        else:
+            new = consensus.consensus_step(new, mix)
+        # mean loss of agent 0's task for logging
+        l = loss_fn(jax.tree.map(lambda x: x[0], new),
+                    jax.tree.map(lambda x: x[0][0], batches))
+        return new, l
+
+    ep = energy_params or energy.paper_calibrated("fig3")
+    n_bytes = sum(x.size * (2 if consensus_dtype is not None
+                            else x.dtype.itemsize)
+                  for x in jax.tree.leaves(params))
+    import dataclasses as dc
+    ep = dc.replace(ep, model_bits=float(n_bytes) * 8,
+                    devices_per_cluster=per, B_i=local_steps)
+
+    hist = []
+    for r in range(rounds):
+        key, sk = jax.random.split(key)
+        stacked, l = fl_round(stacked, sk)
+        hist.append(float(l))
+        print(f"round {r:3d}  loss {float(l):.4f}")
+    E = sum(energy.fl_energy(ep, rounds) for _ in range(tasks))
+    print(f"estimated FL energy for {rounds} rounds x {tasks} clusters: "
+          f"{E / 1e3:.2f} kJ (model {n_bytes / 1e6:.1f} MB per exchange)")
+    return stacked, hist, E
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", choices=["standard", "federated"],
+                    default="standard")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--tasks", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--bf16-consensus", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.mode == "standard":
+        train_standard(cfg, steps=args.steps, batch=args.batch,
+                       seq=args.seq, lr=args.lr)
+    else:
+        train_federated(
+            cfg, rounds=args.rounds, agents=args.agents, tasks=args.tasks,
+            local_steps=args.local_steps, batch=args.batch, seq=args.seq,
+            lr=args.lr,
+            consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None)
+
+
+if __name__ == "__main__":
+    main()

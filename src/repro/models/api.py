@@ -1,0 +1,55 @@
+"""Unified model API: family dispatch + loss/step helpers.
+
+Every family exposes:
+    init(key, cfg) -> params
+    forward(params, cfg, tokens, *, positions=None, caches=None,
+            cache_index=None, embeddings=None) -> (logits, new_caches, aux)
+    init_cache(cfg, batch, seq_len) -> caches   (decoder families)
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+
+def get_model(cfg) -> SimpleNamespace:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        from repro.models import transformer as m
+    elif fam == "moe":
+        from repro.models import transformer as m
+    elif fam == "hybrid":
+        from repro.models import rglru as m
+    elif fam == "ssm":
+        from repro.models import xlstm as m
+    elif fam == "encdec":
+        from repro.models import encdec as m
+    elif fam == "dqn":
+        from repro.models import dqn as m
+        return SimpleNamespace(init=m.init, forward=m.forward,
+                               init_cache=None)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return SimpleNamespace(init=m.init, forward=m.forward,
+                           init_cache=m.init_cache)
+
+
+def lm_loss(params, cfg, tokens, labels, *, embeddings=None,
+            model=None):
+    """Next-token cross-entropy (mean over valid labels) + MoE aux loss."""
+    model = model or get_model(cfg)
+    logits, _, aux = model.forward(params, cfg, tokens,
+                                   embeddings=embeddings)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = (labels >= 0)
+    labels_safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + aux
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,40 @@
+"""The paper's Q-network: the DeepMind DQN model (Mnih et al. 2015) shape
+— 5 trainable layers / ~1.3M params — adapted to the 40-landmark gridworld
+state (a one-hot position vector standing in for the paper's RGB+TOF camera
+observations; Sect. IV simplifies the control problem to the 2D grid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+STATE_DIM = 40      # 40 landmark positions (one-hot)
+NUM_ACTIONS = 4     # F, B, L, R
+
+
+def init(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, cfg.num_layers)
+    pd = jnp.dtype(cfg.param_dtype)
+    dims = [STATE_DIM] + [d] * (cfg.num_layers - 1) + [NUM_ACTIONS]
+    return {
+        f"fc{i}": {
+            "w": L.dense_init(ks[i], (dims[i], dims[i + 1]), pd),
+            "b": jnp.zeros((dims[i + 1],), pd),
+        }
+        for i in range(cfg.num_layers)
+    }
+
+
+def forward(params, cfg, state, **_):
+    """state: (B, 40) one-hot (or batched soft) -> q-values (B, 4)."""
+    x = state.astype(jnp.float32)
+    n = cfg.num_layers
+    for i in range(n):
+        x = x @ params[f"fc{i}"]["w"].astype(jnp.float32) \
+            + params[f"fc{i}"]["b"].astype(jnp.float32)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x, None, jnp.float32(0.0)

@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder transformer backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is the STUBBED modality
+frontend (DESIGN.md §3): the encoder consumes precomputed frame embeddings
+(B, encoder_seq_len, d_model) supplied via ``embeddings``. Positions are
+sinusoidal (whisper's encoder convention; we use sinusoids on the decoder
+too instead of a learned 448-entry table — noted in DESIGN.md §7).
+
+Layers use LayerNorm + plain (biased) MLP per whisper; attention
+projections reuse the shared GQA module (num_kv_heads == num_heads here).
+Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(np.concatenate([np.sin(t), np.cos(t)], axis=1),
+                       jnp.float32)
+
+
+def _init_ln(cfg, pd):
+    return {"w": jnp.ones((cfg.d_model,), pd),
+            "b": jnp.zeros((cfg.d_model,), pd)}
+
+
+def _ln(p, cfg, x):
+    return L.layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+
+
+def init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": _init_ln(cfg, pd),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": _init_ln(cfg, pd),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": _init_ln(cfg, pd),
+        "self_attn": L.init_attention(k1, cfg),
+        "ln2": _init_ln(cfg, pd),
+        "cross_attn": L.init_attention(k2, cfg),
+        "ln3": _init_ln(cfg, pd),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init(key, cfg):
+    assert cfg.encdec is not None
+    ks = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    enc_keys = jax.random.split(ks[0], cfg.encdec.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": _init_ln(cfg, pd),
+        "embed": L.dense_init(ks[2], (cfg.vocab_size, cfg.d_model), pd,
+                              scale=1.0),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "dec_norm": _init_ln(cfg, pd),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, T_enc, d) stub embeddings -> encoder states (B, T_enc, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, T, _ = frames.shape
+    x = frames.astype(dt) + sinusoids(T, cfg.d_model).astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, bp):
+        h = _ln(bp["ln1"], cfg, x)
+        dtl = jnp.dtype(cfg.dtype)
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wq"].astype(dtl))
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wk"].astype(dtl))
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wv"].astype(dtl))
+        out = L.attention_reference(q, k, v, causal=False)
+        a = jnp.einsum("bshk,hkd->bsd", out, bp["attn"]["wo"].astype(dtl))
+        x = x + a
+        h = _ln(bp["ln2"], cfg, x)
+        x = x + L.mlp_block(bp["mlp"], cfg, h)
+        return x, None
+
+    if cfg.remat:
+        body = L.checkpoint_fn(cfg)(body)
+    if cfg.unroll_layers:
+        for i in range(cfg.encdec.num_encoder_layers):
+            bp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = body(x, bp)
+    else:
+        x, _ = jax.lax.scan(lambda c, bp: body(c, bp), x,
+                            params["enc_blocks"])
+    return _ln(params["enc_norm"], cfg, x)
+
+
+def compute_cross_kv(params, cfg, enc_out):
+    """Per-decoder-layer cross K/V from encoder states: (L, B, T_enc, H, hd)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def per_layer(bp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       bp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       bp["cross_attn"]["wv"].astype(dt))
+        return {"k": k, "v": v}
+
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def _dec_block(bp, cfg, x, positions, cross, cache, cache_index):
+    h = _ln(bp["ln1"], cfg, x)
+    a, new_cache = L.attention_block(bp["self_attn"], cfg, h, positions,
+                                     cache=cache, cache_index=cache_index)
+    x = x + a
+    h = _ln(bp["ln2"], cfg, x)
+    a, _ = L.attention_block(bp["cross_attn"], cfg, h, positions,
+                             cross_kv=(cross["k"], cross["v"]))
+    x = x + a
+    h = _ln(bp["ln3"], cfg, x)
+    x = x + L.mlp_block(bp["mlp"], cfg, h)
+    return x, new_cache
+
+
+def forward(params, cfg, tokens, *, positions=None, caches=None,
+            cache_index=None, embeddings=None):
+    """Unified entry.
+
+    embeddings: encoder frame embeddings (run the encoder; train/prefill), or
+    None (decode continuation — cross KV must already be in ``caches``).
+    caches: {"self": stacked kv, "cross": stacked cross kv} or None (train:
+    teacher forcing, encoder runs, no self cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    if embeddings is not None:
+        enc_out = encode(params, cfg, embeddings)
+        cross = compute_cross_kv(params, cfg, enc_out)
+    else:
+        assert caches is not None and caches.get("cross") is not None
+        cross = caches["cross"]
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            0 if cache_index is None else cache_index)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    x = params["embed"][tokens].astype(dt)
+    pos_table = sinusoids(max(cfg.encdec.max_decoder_ctx, 1), cfg.d_model)
+    # gather per-token sinusoid (mod table length for out-of-range dry runs)
+    idx = jnp.mod(positions, pos_table.shape[0])
+    x = x + pos_table[idx].astype(dt)
+
+    def block_fn(bp, x, cross_l, cache):
+        return _dec_block(bp, cfg, x, positions, cross_l, cache, cache_index)
+
+    if cfg.remat:
+        block_fn = L.checkpoint_fn(cfg)(block_fn)
+
+    self_caches = None if caches is None else caches["self"]
+    if cfg.unroll_layers:
+        new_list = []
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            cr = jax.tree.map(lambda a: a[i], cross)
+            cache = None if self_caches is None else jax.tree.map(
+                lambda a: a[i], self_caches)
+            x, nc = block_fn(bp, x, cr, cache)
+            new_list.append(nc)
+        new_self = None if self_caches is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_list)
+    elif self_caches is None:
+        def body(x, inp):
+            bp, cross_l = inp
+            y, _ = block_fn(bp, x, cross_l, None)
+            return y, None
+        x, _ = jax.lax.scan(body, x, (params["dec_blocks"], cross))
+        new_self = None
+    else:
+        def body(x, inp):
+            bp, cross_l, cache = inp
+            return block_fn(bp, x, cross_l, cache)
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], cross, self_caches))
+
+    x = _ln(params["dec_norm"], cfg, x)
+    logits = x @ params["embed"].T.astype(dt)      # tied
+    new_caches = None if caches is None else {"self": new_self,
+                                              "cross": cross}
+    return logits, new_caches, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    one = L.init_kv_cache(cfg, batch, seq_len)
+    Ld = cfg.num_layers
+    self_kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (Ld,) + a.shape), one)
+    hd = cfg.head_dim_
+    cross = {
+        "k": jnp.zeros((Ld, batch, cfg.encdec.encoder_seq_len,
+                        cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+        "v": jnp.zeros((Ld, batch, cfg.encdec.encoder_seq_len,
+                        cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+    }
+    return {"self": self_kv, "cross": cross}

@@ -1,0 +1,35 @@
+"""Modality frontend STUBS (the one allowed carve-out, DESIGN.md §3).
+
+For the audio arch (whisper) and the VLM arch (chameleon) we do not
+implement the mel+conv codec / VQ-VAE image tokenizer. Instead these
+helpers produce the tensors such a frontend would emit, with the correct
+shapes/dtypes — random for smoke tests, ShapeDtypeStruct for dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeddings(key, cfg, batch: int):
+    """What the whisper conv frontend would emit: (B, T_enc, d) frames."""
+    T = cfg.encdec.encoder_seq_len
+    return jax.random.normal(key, (batch, T, cfg.d_model),
+                             jnp.dtype(cfg.dtype)) * 0.02
+
+
+def audio_frame_spec(cfg, batch: int):
+    T = cfg.encdec.encoder_seq_len
+    return jax.ShapeDtypeStruct((batch, T, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+
+
+def vlm_token_stream(key, cfg, batch: int, seq_len: int):
+    """Chameleon early fusion: interleaved text + VQ image-code token ids.
+
+    Image codes are ordinary vocabulary entries (the top 8192 ids by
+    convention here); a real frontend would insert begin/end-image sentinels
+    — for training purposes the stream is just ids in [0, vocab).
+    """
+    return jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size,
+                              jnp.int32)

@@ -1,0 +1,424 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; every module has ``init_*`` and an
+  apply function.
+* activations computed in ``cfg.dtype`` (bf16 by default), params stored in
+  ``cfg.param_dtype`` (f32), outputs of norms/softmax accumulated in f32.
+* attention is O(block) memory via a lax.scan over kv chunks (flash-style
+  online softmax) — this is both the XLA production path for long sequences
+  and the oracle family for the Pallas kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (what llama-family checkpoints look like)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if len(shape) >= 3:  # (d, H, hd) style — fan-in is the first dim
+        fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta))                    # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv     # (..., S, hd/2)
+    ang = ang[..., None, :]                                     # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — chunked flash-style (the XLA production path)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0 ** 30
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(q, k) additive bias from causal + sliding-window constraints."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, softcap: float = 0.0,
+                        k_len: Optional[jnp.ndarray] = None):
+    """Plain O(S^2)-memory attention. (B,S,H,hd)x(B,T,K,hd) -> (B,S,H,hd).
+
+    GQA: H % K == 0; q head h attends kv head h // (H//K).
+    ``k_len``: optional (B,) number of valid kv positions (decode caches).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    # keep k/v in their storage dtype: upcasting the cache materializes an
+    # f32 copy of the whole KV cache (hoisted out of the layer scan by XLA)
+    # — accumulate in f32 via preferred_element_type instead.
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).astype(q.dtype)
+    qf = qf.reshape(B, S, K, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, k,
+                        preferred_element_type=jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    scores = scores + bias[None, None, None]
+    if k_len is not None:
+        valid = k_pos[None, :] < k_len[:, None]                 # (B, T)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_offset: int = 0, softcap: float = 0.0,
+                      kv_chunk: int = 1024, q_chunk: int = 1024):
+    """Flash-style attention: lax.scan over kv chunks with online softmax.
+
+    Peak live memory is O(q_chunk * kv_chunk) per (batch, head) instead of
+    O(S*T). Exact (not approximate); matches ``attention_reference``.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    # pad S and T to multiples
+    Sp = -(-S // q_chunk) * q_chunk
+    Tp = -(-T // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+    qp = ((qp.reshape(B, nq, q_chunk, K, g, hd).astype(jnp.float32) * scale)
+          .astype(q.dtype))
+    kp = kp.reshape(B, nk, kv_chunk, K, hd)
+    vp = vp.reshape(B, nk, kv_chunk, K, hd)
+
+    q_pos_all = q_offset + jnp.arange(Sp).reshape(nq, q_chunk)
+    k_pos_all = jnp.arange(Tp).reshape(nk, kv_chunk)
+    k_valid_all = (jnp.arange(Tp) < T).reshape(nk, kv_chunk)
+
+    def one_q_chunk(qc, q_pos):
+        # qc: (B, q_chunk, K, g, hd)
+        def body(carry, inp):
+            acc, m, l = carry
+            kc, vc, k_pos, k_valid = inp
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32)
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            bias = _mask_bias(q_pos, k_pos, causal, window)
+            bias = jnp.where(k_valid[None, :], bias, NEG_INF)
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, K, g, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, K, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), k_pos_all, k_valid_all))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)        # (B, q_chunk, K, g, hd)
+
+    out = jax.vmap(one_q_chunk, in_axes=(1, 0), out_axes=1)(qp, q_pos_all)
+    out = out.reshape(B, Sp, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0, softcap=0.0,
+              k_len=None, impl: str = "auto"):
+    """Dispatch: small shapes -> reference einsum, long -> chunked scan."""
+    S, T = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if (S * T > 1024 * 2048 and k_len is None) else "ref"
+    if impl == "chunked":
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, softcap=softcap)
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, softcap=softcap, k_len=k_len)
+
+
+# ---------------------------------------------------------------------------
+# attention module (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads, hd), pd),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads, hd), pd),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads, hd), pd),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, d), pd,
+                         scale=1.0 / math.sqrt(cfg.num_heads * hd)),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), pd)
+        p["k_norm"] = jnp.zeros((hd,), pd)
+    return p
+
+
+def attention_block(p, cfg, x, positions, *, window: int = 0,
+                    cache=None, cache_index=None, impl: str = "auto",
+                    cross_kv=None):
+    """Self- (or cross-) attention with optional KV cache.
+
+    cache: dict(k=(B, C, K, hd), v=(B, C, K, hd)); C == window for SWA
+    (circular buffer, slot = position % C), else C == max seq (linear).
+    cache_index: scalar int32 — number of tokens already in the cache.
+    Prefill (S > 1) assumes cache_index == 0 (single-shot prefill); decode
+    (S == 1) supports any index. Returns (out, new_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cross_kv is not None:
+        k, v = cross_kv
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if cross_kv is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    def project_out(out):
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    def constrain_prefill_attn(q, k, v):
+        """Prefill (S > 1): keep the scores contraction on the HEADS axis —
+        with a non-mesh-divisible kv-head count the cache is hd-sharded,
+        and GSPMD otherwise back-propagates that layout into the fresh-kv
+        attention, paying a partial-sum ALL-REDUCE of the full scores
+        tensor per kv chunk (4.3 GB/layer/device for recurrentgemma
+        prefill_32k — EXPERIMENTS.md §Perf P1). Constrain q to
+        heads-over-model and fresh k/v to replicated; the single cache
+        write reshard is ~30x cheaper."""
+        from repro.sharding.context import data_axes, get_mesh
+        mesh = get_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return q, k, v
+        size = mesh.shape["model"]
+        H, K = q.shape[2], k.shape[2]
+        if K % size == 0 or H % size != 0:
+            return q, k, v
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        daxes = data_axes(mesh)
+        bax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+        bspec = bax if q.shape[0] % max(
+            mesh.shape.get("data", 1) * mesh.shape.get("pod", 1), 1) == 0             else None
+        qs = jax.lax.with_sharding_constraint(
+            q, NamedSharding(mesh, P(bspec, None, "model", None)))
+        ks_ = jax.lax.with_sharding_constraint(
+            k, NamedSharding(mesh, P(bspec, None, None, None)))
+        vs = jax.lax.with_sharding_constraint(
+            v, NamedSharding(mesh, P(bspec, None, None, None)))
+        return qs, ks_, vs
+
+    def constrain_decode_q(q):
+        """Decode (S == 1): align q with the cache's tensor-parallel layout
+        (head_dim over 'model' when kv-heads aren't mesh-divisible) so the
+        KV cache stays stationary — otherwise GSPMD reshards the whole
+        cache every decode step (EXPERIMENTS.md §Perf P0)."""
+        from repro.sharding.context import data_axes, get_mesh
+        mesh = get_mesh()
+        if mesh is None or "model" not in mesh.shape:
+            return q
+        size = mesh.shape["model"]
+        K, hd = k.shape[2], q.shape[3]
+        if K % size == 0 or hd % size != 0:
+            return q          # cache is K-sharded (or unshardable)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        daxes = data_axes(mesh)
+        spec = P(daxes if len(daxes) > 1 else daxes[0], None, None, "model")
+        return jax.lax.with_sharding_constraint(q, NamedSharding(mesh, spec))
+
+    if cross_kv is not None:
+        out = attention_reference(q, k, v, causal=False, window=0,
+                                  softcap=cfg.logit_softcap)
+        return project_out(out), cache
+
+    if cache is None:
+        out = attention(q, k, v, causal=True, window=window,
+                        softcap=cfg.logit_softcap, impl=impl)
+        return project_out(out), None
+
+    C = cache["k"].shape[1]
+    idx = cache_index if cache_index is not None else jnp.int32(0)
+    circular = window > 0 and C == window
+
+    if circular:
+        # write the last min(S, C) tokens at slot = position % C
+        tail = min(S, C)
+        p_tail = idx + (S - tail) + jnp.arange(tail)
+        slots = jnp.mod(p_tail, C)
+        ck = cache["k"].at[:, slots].set(k[:, S - tail:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v[:, S - tail:].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        if S > 1:
+            # single-shot prefill: attention over the fresh sequence
+            qc, kc, vc = constrain_prefill_attn(q, k, v)
+            out = attention(qc, kc, vc, causal=True, window=window,
+                            softcap=cfg.logit_softcap, impl=impl)
+        else:
+            # decode: every valid cache slot is an in-window past position
+            kl = jnp.full((B,), jnp.minimum(idx + S, C), jnp.int32)
+            out = attention_reference(constrain_decode_q(q), ck, cv,
+                                      causal=False, window=0,
+                                      softcap=cfg.logit_softcap, k_len=kl)
+        return project_out(out), new_cache
+
+    # linear buffer
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+    new_cache = {"k": ck, "v": cv}
+    if S > 1:
+        qc, kc, vc = constrain_prefill_attn(q, k, v)
+        out = attention(qc, kc, vc, causal=True, window=window,
+                        softcap=cfg.logit_softcap, impl=impl)
+    else:
+        kl = jnp.full((B,), idx + S, jnp.int32)
+        out = attention_reference(constrain_decode_q(q), ck, cv,
+                                  causal=True, window=window,
+                                  q_offset=idx, softcap=cfg.logit_softcap,
+                                  k_len=kl)
+    return project_out(out), new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, *, window: int = 0,
+                  dtype=None):
+    """Allocate a KV cache: full length, or the SWA window if smaller."""
+    C = min(seq_len, window) if window > 0 else seq_len
+    hd = cfg.head_dim_
+    dt = jnp.dtype(dtype or cfg.dtype)
+    z = jnp.zeros((batch, C, cfg.num_kv_heads, hd), dt)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "gated":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), pd),
+            "w_up": dense_init(ks[1], (d, f), pd),
+            "w_down": dense_init(ks[2], (f, d), pd),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), pd),
+        "b_up": jnp.zeros((f,), pd),
+        "w_down": dense_init(ks[1], (f, d), pd),
+        "b_down": jnp.zeros((d,), pd),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def mlp_block(p, cfg, x):
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    act = _act(cfg.act)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+        return h @ p["w_down"].astype(dt)
+    h = act(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+def checkpoint_fn(cfg):
+    """jax.checkpoint partial honoring cfg.remat_policy."""
+    import jax as _jax
+    if cfg.remat_policy == "dots":
+        return lambda f: _jax.checkpoint(
+            f, policy=_jax.checkpoint_policies.dots_saveable)
+    return _jax.checkpoint

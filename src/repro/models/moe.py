@@ -1,0 +1,136 @@
+"""Mixture-of-Experts MLP (mixtral / qwen2-moe style).
+
+Dispatch is capacity-based with *scatter/gather* routing (not the GShard
+(N, E, Cap) one-hot einsum, whose dispatch tensor is O(N^2) at our token
+counts): tokens are scatter-added into an (E, Cap, d) buffer at
+(expert, position-in-expert) coordinates, expert MLPs run as one batched
+einsum over the stacked expert weights, and results are gathered back and
+combined with the router gates. Compiled FLOPs ≈ active-expert FLOPs ×
+capacity_factor — the roofline sees what a production MoE would do.
+
+Dropped tokens (overflow past capacity) contribute zero — the residual
+stream carries them unchanged, the standard Switch/GShard behaviour.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe_mlp(key, cfg):
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    E = m.num_experts
+    p = {
+        "router": L.dense_init(ks[0], (d, E), pd),
+        "w_gate": L.dense_init(ks[1], (E, d, f), pd),
+        "w_up": L.dense_init(ks[2], (E, d, f), pd),
+        "w_down": L.dense_init(ks[3], (E, f, d), pd),
+    }
+    if m.num_shared_experts:
+        sdff = m.shared_expert_d_ff or f
+        p["shared"] = L.init_mlp(ks[4], cfg, d_ff=sdff)
+        p["shared_gate"] = L.dense_init(ks[5], (d, 1), pd)
+    return p
+
+
+def moe_block(p, cfg, x, *, capacity: Optional[int] = None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    B, S, d = x.shape
+    N = B * S
+    E, k = m.num_experts, m.top_k
+    xf = x.reshape(N, d)
+
+    # ---- router ----------------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (N, E)
+    gate_vals, topk_idx = jax.lax.top_k(logits, k)            # (N, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)                # renorm over top-k
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(topk_idx, E, dtype=jnp.float32).sum(1), axis=0) / k
+    aux = m.router_aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- capacity + position-in-expert -----------------------------------
+    cap = capacity or max(int(math.ceil(k * N / E * m.capacity_factor)), 1)
+    flat_e = topk_idx.reshape(-1)                              # (N*k,) int32
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (N*k, E)
+    pos = (jnp.cumsum(oh, axis=0) - oh)                        # prior count
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0)
+
+    # ---- dispatch: scatter tokens into (E, cap, d) ------------------------
+    xk = jnp.repeat(xf[:, None, :], k, axis=1).reshape(N * k, d)
+    xk = xk * keep[:, None].astype(dt)
+    buf = jnp.zeros((E, cap, d), dt).at[flat_e, pos].add(xk)
+
+    # ---- expert MLPs (batched over E) -------------------------------------
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    hg = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    hu = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    ho = jnp.einsum("ecf,efd->ecd", act(hg) * hu, p["w_down"].astype(dt))
+
+    # ---- combine: gather back and gate-weight -----------------------------
+    yk = ho[flat_e, pos]                                       # (N*k, d)
+    w = (gates.reshape(N * k) * keep.astype(jnp.float32)).astype(dt)
+    y = (yk * w[:, None]).reshape(N, k, d).sum(axis=1)
+
+    if "shared" in p:
+        sg = jax.nn.sigmoid(
+            (xf.astype(jnp.float32) @ p["shared_gate"].astype(jnp.float32)))
+        y = y + L.mlp_block(p["shared"], cfg, xf) * sg.astype(dt)
+    return y.reshape(B, S, d), aux
+
+
+def moe_block_distributed(p, cfg, x, mesh):
+    """Per-data-shard MoE dispatch (production path).
+
+    The scatter/gather routing must not cross data shards: a global-token
+    dispatch buffer is O(global_tokens · d) and GSPMD cannot shard a
+    scatter's written dim. So we go manual over the data axes with
+    ``shard_map(axis_names=data_axes)`` — each shard routes its LOCAL
+    tokens into a local (E, cap_local, d) buffer — while the expert
+    weights' d_ff dim stays under GSPMD auto sharding over "model"
+    (tensor parallel inside every data shard). The router aux loss is
+    pmean'd over the data axes so every shard returns the same scalar.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.context import data_axes
+
+    daxes = data_axes(mesh)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    if not daxes or x.shape[0] % dp:
+        # batch not divisible over the data axes (e.g. long_500k B=1):
+        # token count is tiny there, the plain GSPMD path is fine.
+        return moe_block(p, cfg, x)
+    batch_spec = P(daxes if len(daxes) > 1 else daxes[0])
+
+    def local(pp, xx):
+        y, aux = moe_block(pp, cfg, xx)
+        for a in daxes:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), batch_spec),
+        out_specs=(batch_spec, P()),
+        axis_names=frozenset(daxes),
+        check_vma=False,
+    )
+    return fn(p, x)

@@ -1,0 +1,348 @@
+"""RecurrentGemma / Griffin [arXiv:2402.19427]: RG-LRU recurrent blocks
+interleaved 2:1 with local (sliding-window) attention, MQA.
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)                      (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)                      (input gate)
+    log a_t = -c * softplus(Λ) * r_t                  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the (a, b) pairs —
+O(T) memory, O(T log T) work, parallel over devices; decode is a single
+fused state update. A Pallas TPU kernel for the chunked scan lives in
+``repro.kernels.rglru_scan`` (the XLA path here is its oracle).
+
+Layer pattern: cfg.rglru.block_pattern (default (recurrent, recurrent,
+attention)) cycled over cfg.num_layers. We scan over whole pattern periods
+(HLO O(1) in depth) and unroll the remainder layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan(log_a, b, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t via associative scan.
+
+    log_a, b: (B, T, W). h0: optional (B, W) initial state.
+    Returns (h (B,T,W), h_last (B,W)).
+    """
+    if h0 is not None:
+        # fold h0 in as a step 0 with a=0 contribution
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(log_a, b, h_prev):
+    """Single decode step: (B, W) each."""
+    h = jnp.exp(log_a) * h_prev + b
+    return h
+
+
+def init_rglru(key, cfg, width: int):
+    """Gate weights are BLOCK-DIAGONAL over cfg.num_heads blocks, as in the
+    official RecurrentGemma implementation (BlockDiagonalLinear) — also the
+    sharding-friendly choice: the block dim shards over "model" with zero
+    cross-shard contraction (EXPERIMENTS.md §Perf P1; the dense (W, W)
+    variant costs an f32[B,T,W] all-reduce per gate per layer)."""
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    H = cfg.num_heads
+    bw = width // H
+    # Λ init so that a ∈ [0.9, 0.999] (paper's init)
+    u = jax.random.uniform(ks[0], (width,), jnp.float32,
+                           0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * RGLRU_C)) - 1.0)  # softplus^-1
+    return {
+        "lam": lam.astype(pd),
+        "w_a": L.dense_init(ks[1], (H, bw, bw), pd),
+        "b_a": jnp.zeros((width,), pd),
+        "w_x": L.dense_init(ks[2], (H, bw, bw), pd),
+        "b_x": jnp.zeros((width,), pd),
+    }
+
+
+def _block_diag_gate(x, w, b):
+    """x (B,T,W) with W split into H blocks; w (H, bw, bw)."""
+    B, T, W = x.shape
+    H, bw, _ = w.shape
+    xb = x.reshape(B, T, H, bw)
+    y = jnp.einsum("bthk,hkj->bthj", xb, w)
+    return y.reshape(B, T, W) + b
+
+
+def rglru_apply(p, cfg, x, h0=None):
+    """x: (B, T, W) -> (y, h_last). fp32 recurrence internals."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag_gate(xf, p["w_a"].astype(jnp.float32),
+                                        p["b_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_block_diag_gate(xf, p["w_x"].astype(jnp.float32),
+                                        p["b_x"].astype(jnp.float32)))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    gated = i * xf
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * gated
+    T = x.shape[1]
+    if T == 1 and h0 is not None:
+        h = rglru_step(log_a[:, 0], b[:, 0], h0)
+        return h[:, None].astype(x.dtype), h
+    y, h_last = rglru_scan(log_a, b, h0)
+    return y.astype(x.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (depthwise, width w) with decode state
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width: int, kernel: int, pd):
+    return {
+        "w": (jax.random.normal(key, (kernel, width), jnp.float32)
+              / math.sqrt(kernel)).astype(pd),
+        "b": jnp.zeros((width,), pd),
+    }
+
+
+def conv1d_apply(p, x, state=None):
+    """Depthwise causal conv. x (B,T,W); state (B, kernel-1, W) history.
+
+    Returns (y, new_state).
+    """
+    kernel = p["w"].shape[0]
+    dt = x.dtype
+    if state is None:
+        state = jnp.zeros((x.shape[0], kernel - 1, x.shape[2]), dt)
+    xp = jnp.concatenate([state.astype(dt), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * p["w"][i].astype(dt)
+            for i in range(kernel))
+    y = y + p["b"].astype(dt)
+    new_state = xp[:, -(kernel - 1):] if kernel > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def init_recurrent_block(key, cfg):
+    W = cfg.rglru.lru_width or cfg.d_model
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "w_branch_x": L.dense_init(ks[0], (cfg.d_model, W), pd),
+        "w_branch_gate": L.dense_init(ks[1], (cfg.d_model, W), pd),
+        "conv": init_conv1d(ks[2], W, cfg.rglru.conv1d_width, pd),
+        "rglru": init_rglru(ks[3], cfg, W),
+        "w_out": L.dense_init(ks[4], (W, cfg.d_model), pd),
+        "mlp_norm": jnp.zeros((cfg.d_model,), pd),
+        "mlp": L.init_mlp(ks[5], cfg),
+    }
+
+
+def recurrent_block(bp, cfg, x, state=None):
+    """Griffin recurrent block. state: {'conv': ..., 'h': ...} or None."""
+    dt = jnp.dtype(cfg.dtype)
+    h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ bp["w_branch_gate"].astype(dt))
+    u = h @ bp["w_branch_x"].astype(dt)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = conv1d_apply(bp["conv"], u, conv_state)
+    h0 = None if state is None else state["h"]
+    y, h_last = rglru_apply(bp["rglru"], cfg, u, h0)
+    out = (y * gate) @ bp["w_out"].astype(dt)
+    x = x + out
+    hh = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp_block(bp["mlp"], cfg, hh)
+    new_state = {"conv": new_conv, "h": h_last}
+    return x, new_state
+
+
+def init_attention_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.zeros((cfg.d_model,), pd),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), pd),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def attention_block(bp, cfg, x, positions, cache=None, cache_index=None):
+    h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+    a, new_cache = L.attention_block(
+        bp["attn"], cfg, h, positions, window=cfg.sliding_window,
+        cache=cache, cache_index=cache_index)
+    x = x + a
+    hh = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    x = x + L.mlp_block(bp["mlp"], cfg, hh)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _layer_types(cfg):
+    pat = cfg.rglru.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _periods(cfg):
+    """(full periods, remainder layer types)."""
+    pat = cfg.rglru.block_pattern
+    n_full = cfg.num_layers // len(pat)
+    rem = _layer_types(cfg)[n_full * len(pat):]
+    return n_full, rem
+
+
+def init(key, cfg):
+    assert cfg.rglru is not None
+    pat = cfg.rglru.block_pattern
+    n_full, rem = _periods(cfg)
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+
+    def init_period(k):
+        kk = jax.random.split(k, len(pat))
+        return tuple(
+            init_recurrent_block(kk[j], cfg) if t == "recurrent"
+            else init_attention_block(kk[j], cfg)
+            for j, t in enumerate(pat))
+
+    period_keys = jax.random.split(ks[0], max(n_full, 1))
+    periods = jax.vmap(init_period)(period_keys) if n_full else None
+    rem_keys = jax.random.split(ks[1], max(len(rem), 1))
+    rem_blocks = tuple(
+        init_recurrent_block(rem_keys[j], cfg) if t == "recurrent"
+        else init_attention_block(rem_keys[j], cfg)
+        for j, t in enumerate(rem))
+    p = {
+        "embed": L.dense_init(ks[2], (cfg.vocab_size, cfg.d_model), pd,
+                              scale=1.0),
+        "periods": periods,
+        "rem": rem_blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), pd),
+        "unembed": L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), pd),
+    }
+    return p
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    """Per-layer state: attention layers get SWA kv caches, recurrent layers
+    get {'conv','h'} states. Grouped as (periods-stacked, remainder)."""
+    pat = cfg.rglru.block_pattern
+    n_full, rem = _periods(cfg)
+    W = cfg.rglru.lru_width or cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(t):
+        if t == "attention":
+            return L.init_kv_cache(cfg, batch, seq_len,
+                                   window=cfg.sliding_window)
+        return {"conv": jnp.zeros((batch, cfg.rglru.conv1d_width - 1, W), dt),
+                "h": jnp.zeros((batch, W), jnp.float32)}
+
+    period = tuple(one(t) for t in pat)
+    periods = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_full,) + a.shape), period) \
+        if n_full else None
+    return {"periods": periods, "rem": tuple(one(t) for t in rem)}
+
+
+def forward(params, cfg, tokens, *, positions=None, caches=None,
+            cache_index=None, embeddings=None):
+    dt = jnp.dtype(cfg.dtype)
+    pat = cfg.rglru.block_pattern
+    n_full, rem = _periods(cfg)
+    x = (params["embed"][tokens] if embeddings is None else embeddings
+         ).astype(dt)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            0 if cache_index is None else cache_index)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    def period_fn(pp, x, pstate):
+        new_states = []
+        for j, t in enumerate(pat):
+            bp = pp[j]
+            st = None if pstate is None else pstate[j]
+            if t == "recurrent":
+                x, ns = recurrent_block(bp, cfg, x, st)
+            else:
+                x, ns = attention_block(bp, cfg, x, positions, st,
+                                        cache_index)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    if cfg.remat:
+        period_fn = L.checkpoint_fn(cfg)(period_fn)
+
+    if n_full and cfg.unroll_layers:
+        new_list = []
+        for i in range(n_full):
+            pp = jax.tree.map(lambda a: a[i], params["periods"])
+            st = None if caches is None else jax.tree.map(
+                lambda a: a[i], caches["periods"])
+            x, ns = period_fn(pp, x, st)
+            new_list.append(ns)
+        new_periods = None if caches is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_list)
+    elif n_full:
+        if caches is None:
+            def body(x, pp):
+                y, _ = period_fn(pp, x, None)
+                return y, None
+            x, _ = jax.lax.scan(body, x, params["periods"])
+            new_periods = None
+        else:
+            def body(x, inp):
+                pp, st = inp
+                return period_fn(pp, x, st)
+            x, new_periods = jax.lax.scan(
+                body, x, (params["periods"], caches["periods"]))
+    else:
+        new_periods = None
+
+    new_rem = []
+    for j, t in enumerate(rem):
+        bp = params["rem"][j]
+        st = None if caches is None else caches["rem"][j]
+        if t == "recurrent":
+            x, ns = recurrent_block(bp, cfg, x, st)
+        else:
+            x, ns = attention_block(bp, cfg, x, positions, st, cache_index)
+        new_rem.append(ns)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"].astype(dt)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.logit_softcap).astype(dt)
+    new_caches = None if caches is None else {
+        "periods": new_periods, "rem": tuple(new_rem)}
+    return logits, new_caches, jnp.float32(0.0)

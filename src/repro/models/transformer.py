@@ -1,0 +1,141 @@
+"""Dense decoder-only transformer (llama/granite/stablelm/deepseek/danube,
+and the chameleon VLM backbone — early-fusion VQ tokens are ordinary ids).
+
+Layer parameters are STACKED on a leading ``layers`` axis and the forward
+pass is a single ``lax.scan`` over that axis: HLO size stays O(1) in depth,
+which keeps 512-device lowering of 30–48 layer models tractable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    pd = jnp.dtype(cfg.param_dtype)
+    if cfg.moe is not None:
+        from repro.models import moe
+        mlp_p = moe.init_moe_mlp(k2, cfg)
+    else:
+        mlp_p = L.init_mlp(k2, cfg)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), pd),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": jnp.zeros((cfg.d_model,), pd),
+        "mlp": mlp_p,
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    p = {
+        "embed": L.dense_init(ks[1], (cfg.vocab_size, cfg.d_model), pd,
+                              scale=1.0),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), pd),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[2], (cfg.d_model, cfg.vocab_size), pd)
+    return p
+
+
+def _block_apply(bp, cfg, x, positions, window, cache, cache_index):
+    h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    a, new_cache = L.attention_block(
+        bp["attn"], cfg, h, positions, window=window,
+        cache=cache, cache_index=cache_index)
+    x = x + a
+    h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        from repro.models import moe
+        from repro.sharding.context import get_mesh
+        mesh = get_mesh()
+        if mesh is not None:
+            y, aux = moe.moe_block_distributed(bp["mlp"], cfg, h, mesh)
+        else:
+            y, aux = moe.moe_block(bp["mlp"], cfg, h)
+    else:
+        y = L.mlp_block(bp["mlp"], cfg, h)
+    x = x + y
+    return x, new_cache, aux
+
+
+def forward(params, cfg, tokens, *, positions=None, caches=None,
+            cache_index=None, embeddings: Optional[jnp.ndarray] = None):
+    """tokens (B, S) int32 -> logits (B, S, V).
+
+    ``caches``: stacked {'k': (L,B,C,K,hd), 'v': ...} or None.
+    ``embeddings``: optional (B, S, d) — bypasses the embed table (modality
+    frontends feed precomputed embeddings here).
+    Returns (logits, new_caches, aux_loss).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if embeddings is None:
+        x = params["embed"][tokens].astype(dt)
+    else:
+        x = embeddings.astype(dt)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (
+            0 if cache_index is None else cache_index)
+        positions = jnp.broadcast_to(positions, (B, S))
+    window = cfg.sliding_window
+
+    def block_fn(bp, x, cache):
+        return _block_apply(bp, cfg, x, positions, window, cache, cache_index)
+
+    if cfg.remat:
+        block_fn = L.checkpoint_fn(cfg)(block_fn)
+
+    if cfg.unroll_layers:
+        new_list = []
+        aux_total = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            cache = None if caches is None else jax.tree.map(
+                lambda a: a[i], caches)
+            x, nc, a = block_fn(bp, x, cache)
+            aux_total = aux_total + a
+            new_list.append(nc)
+        new_caches = None if caches is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_list)
+    elif caches is None:
+        def body_nc(carry, bp):
+            x, aux = carry
+            y, _, a = block_fn(bp, x, None)
+            return (y, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body_nc, (x, jnp.float32(0.0)),
+                                         params["blocks"])
+        new_caches = None
+    else:
+        def body_c(carry, inp):
+            x, aux = carry
+            bp, cache = inp
+            y, new_cache, a = block_fn(bp, x, cache)
+            return (y, aux + a), new_cache
+        (x, aux_total), new_caches = jax.lax.scan(
+            body_c, (x, jnp.float32(0.0)), (params["blocks"], caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w_out = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"]).astype(dt)
+    logits = x @ w_out
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.logit_softcap).astype(dt)
+    return logits, new_caches, aux_total
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    one = L.init_kv_cache(cfg, batch, seq_len, window=cfg.sliding_window)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+        one)

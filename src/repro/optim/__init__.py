@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (
+    sgd, adam, adamw, clip_by_global_norm, apply_updates, global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

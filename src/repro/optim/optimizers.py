@@ -1,0 +1,99 @@
+"""Pure-JAX optimizers (optax-style (init, update) pairs, no dependency).
+
+An optimizer is a SimpleNamespace(init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+Updates are NEGATIVE deltas already scaled by the learning rate.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0):
+    """Plain SGD — the paper's device-side optimizer (Eq. 3 inner steps)."""
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mom"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return st
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mom)
+            return upd, {"step": step, "mom": mom}
+        upd = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step}
+
+    return SimpleNamespace(init=init, update=update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, mu, nu,
+                               params if params is not None else mu)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return SimpleNamespace(init=init, update=update)
+
+
+def adamw(lr: Schedule, weight_decay: float = 0.01, **kw):
+    return adam(lr, weight_decay=weight_decay, **kw)

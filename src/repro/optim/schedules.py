@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / steps, 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * c)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(steps - warmup, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        return jnp.where(step <= warmup, jnp.float32(lr) * w,
+                         cos(step - warmup))
+    return f

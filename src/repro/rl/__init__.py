@@ -1,0 +1,1 @@
+from repro.rl import gridworld, dqn

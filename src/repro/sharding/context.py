@@ -1,0 +1,32 @@
+"""Distribution context: a thread-local mesh handle the model layers can
+consult (e.g. MoE dispatch must be per-data-shard at production scale —
+the launch layer sets the context; single-device tests leave it unset and
+get the dense path)."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

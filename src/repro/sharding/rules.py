@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules: param-tree paths -> PartitionSpec.
+
+Strategy (DESIGN.md §4):
+* tensor parallelism over the mesh "model" axis: attention heads / kv
+  heads / d_ff / lru width / vocab — whichever dim of each leaf carries
+  that logical axis, guarded by divisibility (fallback: replicate);
+* data parallelism over ("pod", "data"): params replicated, batch sharded;
+* stacked per-layer leaves (scan-over-layers) get a leading None.
+
+The rules are name-based on the param tree paths produced by
+``repro.models.*`` inits — a deliberate, greppable contract (tested in
+tests/test_sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+# leaf-name -> (which dim carries which logical axis)
+# dims are AFTER stripping any leading layer-stack dim.
+_RULES = {
+    # embeddings
+    "embed": {0: "vocab"},
+    "unembed": {1: "vocab"},
+    # attention
+    "wq": {1: "heads"},
+    "wk": {1: "kv_heads"},
+    "wv": {1: "kv_heads"},
+    "wo": {0: "heads"},
+    # dense mlp
+    "w_gate": {1: "mlp"},
+    "w_up": {1: "mlp"},
+    "w_down": {0: "mlp"},
+    # moe (leaves live under "mlp": router (d,E), w_* (E,d,f)/(E,f,d))
+    "router": {},
+    # rg-lru recurrent block
+    "w_branch_x": {1: "lru"},
+    "w_branch_gate": {1: "lru"},
+    "w_a": {0: "lru_blocks"},       # block-diagonal (H, bw, bw)
+    "w_x": {0: "lru_blocks"},
+    "b_a": {0: "lru"},
+    "b_x": {0: "lru"},
+    "lam": {0: "lru"},
+    "w_out": {0: "lru"},
+    # xlstm
+    "w_ff1": {1: "mlp"},
+    "w_ff2": {0: "mlp"},
+}
+
+_STACK_KEYS = ("blocks", "periods", "enc_blocks", "dec_blocks", "rem")
+
+
+def _is_stacked(names) -> bool:
+    """Scan-over-layers stacks have a stack key in the path and NO integer
+    path component (tuple-of-blocks paths contain the layer index)."""
+    return (any(n in _STACK_KEYS for n in names)
+            and not any(n.isdigit() for n in names))
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return out
+
+
+def param_spec(path, leaf, cfg, model_axis: str = "model",
+               model_size: int = 1) -> P:
+    """PartitionSpec for one param leaf."""
+    names = _path_names(path)
+    name = names[-1]
+    stacked = _is_stacked(names[:-1]) and leaf.ndim >= 1
+    # MoE expert leaves: (E, d, f) / (E, f, d) — shard the f dim.
+    in_moe = cfg.moe is not None and "mlp" in names and name in (
+        "w_gate", "w_up", "w_down") and "shared" not in names
+    offset = 1 if stacked else 0
+
+    dims: dict = {}
+    if in_moe:
+        # stripped shape: (E, d, f) or (E, f, d)
+        dims = {2: "mlp"} if name in ("w_gate", "w_up") else {1: "mlp"}
+    elif name in _RULES:
+        dims = _RULES[name]
+
+    spec = [None] * leaf.ndim
+    for dim, logical in dims.items():
+        d = dim + offset
+        if d < leaf.ndim and _div(leaf.shape[d], model_size):
+            spec[d] = model_axis
+            break
+    return P(*spec)
+
+
+def param_shardings(params, cfg, mesh, model_axis: str = "model"):
+    """NamedSharding tree for a param pytree (replicated over data/pod)."""
+    size = mesh.shape[model_axis] if model_axis in mesh.shape else 1
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, cfg,
+                                              model_axis, size))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh) -> P:
+    """Batch-dim sharding over every data-parallel mesh axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def data_shardings(batch_like, mesh):
+    """Shard dim 0 of every leaf over (pod, data) when divisible."""
+    bs = batch_spec(mesh)
+    dp = dp_size(mesh)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim and _div(leaf.shape[0], dp):
+            spec[0] = bs[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_like)
+
+
+def cache_shardings(caches, cfg, mesh, model_axis: str = "model"):
+    """KV caches: batch dim over data axes; kv-head dim over model when
+    divisible. Handles stacked (L, B, C, K, hd) kv leaves, recurrent
+    {'conv','h'} states and xlstm cell tuples (batch-dim leading after
+    optional layer stack)."""
+    size = mesh.shape[model_axis] if model_axis in mesh.shape else 1
+    baxes = batch_spec(mesh)[0]
+    dp = dp_size(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        # 'periods' caches are period-stacked tuples: digits index the
+        # within-period position, the leading dim is still the stack.
+        stacked = (_is_stacked(names) or "self" in names
+                   or "periods" in names) and leaf.ndim >= 2
+        spec = [None] * leaf.ndim
+        b_dim = 1 if (stacked and leaf.ndim >= 2) else 0
+        # kv cache leaves are 5D stacked (L,B,C,K,hd) or 4D (B,C,K,hd)
+        if names[-1] in ("k", "v") and leaf.ndim >= 4:
+            b_dim = leaf.ndim - 4
+            if _div(leaf.shape[b_dim], dp):
+                spec[b_dim] = baxes
+            # tensor-parallel cache: kv-head dim when divisible, else the
+            # head_dim — an UNSHARDED cache makes GSPMD all-gather the
+            # whole cache every decode step (EXPERIMENTS.md §Perf P0).
+            if _div(leaf.shape[leaf.ndim - 2], size):
+                spec[leaf.ndim - 2] = model_axis
+            elif _div(leaf.shape[leaf.ndim - 1], size):
+                spec[leaf.ndim - 1] = model_axis
+        elif leaf.ndim > b_dim and _div(leaf.shape[b_dim], dp):
+            spec[b_dim] = baxes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, caches)

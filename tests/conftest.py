@@ -1,0 +1,15 @@
+import os
+
+# Tests see the real (single) CPU device — the 512-device override belongs
+# ONLY to repro.launch.dryrun (per the dry-run contract). Guard against a
+# leaked env var.
+os.environ.pop("XLA_FLAGS", None) if "xla_force_host_platform_device_count" \
+    in os.environ.get("XLA_FLAGS", "") else None
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,126 @@
+"""Energy model (Eqs. 8–12): closed-form checks, paper-claim validation,
+hypothesis property tests on monotonicity/scaling invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy
+
+PAPER_T2 = {
+    0: [380.1, 129.6, 93.7, 211.5, 24.2, 82.4],
+    42: [29.7, 56.4, 70.9, 87.0, 70.4, 57.1],
+    66: [178.8, 9.9, 14.3, 104.6, 9.8, 12.4],
+    90: [84.9, 8.9, 15.6, 166.2, 11.3, 19.6],
+    132: [11.6, 25.5, 25.1, 44.6, 23.1, 23.8],
+    210: [6.7, 29.1, 16.5, 27.7, 32.0, 17.2],
+    240: [2.7, 10.8, 9.1, 40.0, 21.8, 19.6],
+}
+
+
+def test_eq9_closed_form():
+    p = energy.EnergyParams()
+    t0, Q = 10, 3
+    learn = energy.maml_learning_energy(p, t0, Q)
+    want = (p.gamma * t0 * Q * p.meta_devices_per_task
+            * (p.B_a + p.beta * p.B_b) * p.P_datacenter
+            * p.T_batch_datacenter)
+    assert np.isclose(learn, want)
+    comm = energy.maml_comm_energy(p, t0, Q)
+    want = (t0 * Q * p.meta_devices_per_task * p.data_bits / p.E_UL
+            + p.K * p.model_bits / p.E_DL)
+    assert np.isclose(comm, want)
+
+
+def test_eq11_closed_form():
+    p = energy.EnergyParams()
+    t = 17
+    want_l = t * p.devices_per_cluster * p.B_i * p.P_device * p.T_batch_device
+    assert np.isclose(energy.fl_learning_energy(p, t), want_l)
+    want_c = (p.model_bits * t * p.devices_per_cluster
+              * p.neighbors_per_device / p.E_SL)
+    assert np.isclose(energy.fl_comm_energy(p, t), want_c)
+
+
+def test_sidelink_replacement():
+    p = dataclasses.replace(energy.EnergyParams(),
+                            sidelink_available=False)
+    c = energy.sidelink_cost_per_bit(p)
+    assert np.isclose(c, 1 / p.E_UL + p.gamma / p.E_DL)
+    assert c > energy.sidelink_cost_per_bit(energy.EnergyParams())
+
+
+def test_beta_jacobian_cost():
+    """2nd-order MAML (β = 2) must cost more than first-order (β = 1)."""
+    p1 = energy.paper_calibrated("fig3")
+    p2 = dataclasses.replace(p1, beta=2.0)
+    assert energy.maml_energy(p2, 100, 3) > energy.maml_energy(p1, 100, 3)
+
+
+# ---------------------------------------------------------------------------
+# the paper's claims under the calibrated constants
+# ---------------------------------------------------------------------------
+
+
+def test_paper_fig3_reproduction():
+    p = energy.paper_calibrated("fig3")
+    E_ml = energy.maml_energy(p, 210, 3)
+    assert abs(E_ml / 1e3 - 74) / 74 < 0.15          # paper: 74 kJ
+    E_fl = sum(energy.fl_energy(p, t) for t in PAPER_T2[210])
+    assert abs(E_fl / 1e3 - 32) / 32 < 0.25          # paper: 32 kJ
+    total = energy.total_energy(p, 210, 3, PAPER_T2[210])
+    no_maml = energy.total_energy(p, 0, 3, PAPER_T2[0])
+    assert abs(no_maml / 1e3 - 227) / 227 < 0.15     # paper: 227 kJ
+    assert no_maml / total >= 2.0                    # the >=2x headline
+
+
+def test_paper_fig4_optimum_shift():
+    """Optimal t0 = 42 with cheap sidelink, 132 with cheap uplink."""
+    p = energy.paper_calibrated("fig4")
+    _, _, eb = energy.optimize_split(p, 3, {k: v for k, v in
+                                            PAPER_T2.items() if k > 0})
+    assert min(eb, key=eb.get) == 42
+    pr = energy.swap_ul_sl(p)
+    _, _, er = energy.optimize_split(pr, 3, {k: v for k, v in
+                                             PAPER_T2.items() if k > 0})
+    assert min(er, key=er.get) == 132
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(t0=st.integers(1, 500), Q=st.integers(1, 6),
+       scale=st.floats(1.1, 10.0))
+def test_maml_energy_monotone_in_rounds_and_comm(t0, Q, scale):
+    p = energy.paper_calibrated("fig3")
+    assert energy.maml_energy(p, t0 + 1, Q) > energy.maml_energy(p, t0, Q)
+    cheaper = dataclasses.replace(p, E_UL=p.E_UL * scale)
+    assert energy.maml_energy(cheaper, t0, Q) < energy.maml_energy(p, t0, Q)
+
+
+@settings(deadline=None, max_examples=40)
+@given(t=st.floats(0.0, 500.0), s=st.floats(1.1, 4.0))
+def test_fl_energy_linear_in_rounds(t, s):
+    p = energy.paper_calibrated("fig3")
+    assert np.isclose(energy.fl_energy(p, t * s),
+                      s * energy.fl_energy(p, t), rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(flops=st.floats(1e9, 1e18), bts=st.floats(1e6, 1e15),
+       coll=st.floats(0, 1e14), chips=st.integers(1, 512))
+def test_roofline_terms_positive_and_bottleneck(flops, bts, coll, chips):
+    rt = energy.RooflineTerms(flops=flops, hbm_bytes=bts,
+                              collective_bytes=coll, chips=chips)
+    assert rt.step_time >= max(rt.t_compute, rt.t_memory, rt.t_collective) \
+        - 1e-12
+    assert rt.bottleneck in ("compute", "memory", "collective")
+    assert rt.energy_per_step() > 0
+    # doubling chips cannot increase any term
+    rt2 = energy.RooflineTerms(flops=flops, hbm_bytes=bts,
+                               collective_bytes=coll, chips=2 * chips)
+    assert rt2.step_time <= rt.step_time + 1e-12
