@@ -1,0 +1,148 @@
+"""Consensus-round scaling sweep: K × topology × dtype (Eq. 6 hot path).
+
+For each population size K ∈ {12, 64, 256, 1024}, graph family, and dtype
+this times one dense-stacked consensus round under both execution paths —
+
+* ``xla``  — the reference (K, K) matmul, O(K²·N);
+* ``auto`` — the batched-over-agents sparse gather through the fused
+  consensus kernel (Pallas on TPU, its bit-identical jnp oracle on CPU),
+  O(K·H·N);
+
+and prices the round's communication with the paper's Eq. (11) via the
+topology's per-link classes, so the perf trajectory records wall-clock
+AND modeled joules per topology. A bit-equivalence check (auto vs the
+per-agent ``ref.consensus_update_reference`` oracle) runs at K=256 for
+every family in the sweep.
+
+Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
+
+Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus, energy
+from repro.core import topology as topo_lib
+from repro.kernels import ref
+
+KS = (12, 64, 256, 1024)
+FAMILIES = ("ring", "torus", "small_world", "star", "cluster",
+            "hierarchical")
+DTYPES = ("float32", "bfloat16")
+N_PARAMS = 2048          # flat params per agent (CPU-tractable at K=1024)
+EQUIV_K = 256
+
+
+def _time(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _stacked(K, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (K, N_PARAMS), jnp.float32)
+    return {"w": x.astype(dtype)}
+
+
+def _oracle(mix, x):
+    """Per-agent kernel oracle over the same padded sparse structure."""
+    idx, sig = consensus.sparse_structure(mix)
+    xf = jnp.asarray(np.asarray(x, np.float32))
+    rows = [ref.consensus_update_reference(xf[k], xf[idx[k]],
+                                           jnp.asarray(sig[k]))
+            for k in range(xf.shape[0])]
+    return np.stack([np.asarray(r) for r in rows])
+
+
+def sweep(ks, families, dtypes, *, equiv_k=EQUIV_K):
+    p_cal = energy.paper_calibrated("fig3")
+    rows = []
+    for K in ks:
+        for dtype_name in dtypes:
+            dtype = jnp.dtype(dtype_name)
+            x = _stacked(K, dtype)
+            for fam in families:
+                try:
+                    topo = topo_lib.make(fam, K)
+                except ValueError as e:       # e.g. K not tileable
+                    print(f"skip {fam} K={K}: {e}")
+                    continue
+                mix = topo.mixing()
+                bits = N_PARAMS * dtype.itemsize * 8        # b(W) per model
+                joules = topo.round_comm_joules(p_cal, model_bits=bits)
+                base = dict(K=K, topology=fam, dtype=dtype_name,
+                            max_degree=topo.max_degree,
+                            links=topo.links_per_round(),
+                            model_bits=bits,
+                            joules_eq11_per_round=joules)
+
+                step_xla = jax.jit(
+                    lambda s: consensus.consensus_step(s, mix, impl="xla"))
+                step_auto = jax.jit(
+                    lambda s: consensus.consensus_step(s, mix, impl="auto"))
+                us_xla = _time(step_xla, x)
+                us_auto = _time(step_auto, x)
+                rows.append({**base, "impl": "xla", "us_per_round": us_xla})
+                rows.append({**base, "impl": "auto",
+                             "us_per_round": us_auto,
+                             "speedup_vs_xla": us_xla / max(us_auto, 1e-9)})
+                print(f"K={K:5d} {fam:12s} {dtype_name:8s} "
+                      f"xla {us_xla:10.1f}us  auto {us_auto:10.1f}us  "
+                      f"eq11 {joules:10.3f} J/round")
+
+                if K == equiv_k and dtype == jnp.float32:
+                    got = np.asarray(step_auto(x)["w"], np.float32)
+                    want = _oracle(mix, x["w"]).astype(np.float32)
+                    if consensus.auto_path(mix) == "sparse":
+                        if not np.array_equal(got, want):
+                            raise AssertionError(
+                                f"auto path NOT bit-equal to the reference "
+                                f"oracle at K={equiv_k} ({fam})")
+                        rows[-1]["bit_equal_oracle_at_K"] = equiv_k
+                        print(f"        {fam}: auto == oracle (bit-equal, "
+                              f"K={equiv_k})")
+                    else:   # dense fallback (star): fp-close to the oracle
+                        np.testing.assert_allclose(got, want, rtol=1e-5,
+                                                   atol=1e-5)
+                        rows[-1]["allclose_oracle_at_K"] = equiv_k
+                        print(f"        {fam}: auto (dense fallback) ≈ "
+                              f"oracle (K={equiv_k})")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="K <= 256, f32 only (CI-sized)")
+    ap.add_argument("--out", default="BENCH_consensus_scale.json")
+    args = ap.parse_args()
+
+    ks = tuple(k for k in KS if k <= 256) if args.quick else KS
+    dtypes = ("float32",) if args.quick else DTYPES
+    rows = sweep(ks, FAMILIES, dtypes)
+    payload = {
+        "bench": "consensus_scale",
+        "backend": jax.default_backend(),
+        "n_params_per_agent": N_PARAMS,
+        "ks": list(ks), "families": list(FAMILIES),
+        "dtypes": list(dtypes),
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,5 @@
 """The paper's contribution: MAML meta-learning (Eqs. 2-5), decentralized
 consensus FL (Eq. 6), the energy/communication footprint model (Eqs. 8-12),
 and the two-stage MTL protocol tying them together."""
-from repro.core import consensus, energy, federated, maml, multitask, protocol
+from repro.core import (consensus, energy, federated, maml, multitask,
+                        protocol, topology)

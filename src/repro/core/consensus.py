@@ -91,18 +91,113 @@ def _effective_mix(mix):
     return mix + jnp.diag(self_w)
 
 
+def resolve_mix(mix, data_sizes=None, kind: str = "paper",
+                include_self: bool = True):
+    """Accept either a ready (K, K) σ matrix or a Topology object."""
+    if hasattr(mix, "mixing"):
+        return mix.mixing(data_sizes, kind=kind, include_self=include_self)
+    return mix
+
+
+def auto_path(mix) -> str:
+    """What ``impl="auto"`` resolves to for this (concrete) mix: the sparse
+    gather only wins while the graph is actually sparse — on dense graphs
+    (max degree > K/4, e.g. star or full) the gathered (K, H, N) neighbour
+    tensor exceeds the (K, K) matmul's traffic and ``auto`` falls back to
+    the dense path."""
+    M = np.asarray(mix)
+    K = M.shape[0]
+    off = M.copy()
+    np.fill_diagonal(off, 0.0)
+    H = int((off != 0).sum(axis=1).max()) if K else 0
+    return "sparse" if H <= max(K // 4, 1) else "dense"
+
+
+def sparse_structure(mix):
+    """(idx, sig): per-agent neighbour indices and σ's from a CONCRETE mix.
+
+    idx: (K, H) int32, sig: (K, H) float32 with H = max degree; rows with
+    fewer neighbours are padded with the agent's own index and σ = 0 (a
+    zero-weight self message, exact no-op in Eq. 6). Diagonal self weights
+    are dropped — the update form x + Σ σ(nb − x) carries them implicitly.
+    """
+    M = np.asarray(mix, np.float32)
+    K = M.shape[0]
+    off = M.copy()
+    np.fill_diagonal(off, 0.0)
+    H = max(int((off != 0).sum(axis=1).max()), 1)
+    idx = np.tile(np.arange(K, dtype=np.int32)[:, None], (1, H))
+    sig = np.zeros((K, H), np.float32)
+    for k in range(K):
+        nbr = np.flatnonzero(off[k])
+        idx[k, :len(nbr)] = nbr
+        sig[k, :len(nbr)] = off[k, nbr]
+    return idx, sig
+
+
 # ---------------------------------------------------------------------------
-# dense (reference) consensus
+# dense consensus — reference (K, K) matmul and the batched sparse paths
 # ---------------------------------------------------------------------------
 
 
-def consensus_step(stacked_params, mix):
-    """Eq. (6) on agent-stacked params (leading axis K). mix: (K, K) σ."""
-    M = _effective_mix(jnp.asarray(mix, jnp.float32))
+def consensus_step(stacked_params, mix, *, impl: str = "xla",
+                   block_n: Optional[int] = None):
+    """Eq. (6) on agent-stacked params (leading axis K). mix: (K, K) σ or a
+    :class:`repro.core.topology.Topology` (uniform paper weights).
+
+    impl:
+      * ``"xla"``    — dense matmul ``M @ xf`` per leaf (reference; fine for
+        the 12-robot case study, O(K²·N) and H extra parameter-sized
+        temporaries at large K);
+      * ``"pallas"`` — batched-over-agents sparse gather feeding the fused
+        :mod:`repro.kernels.consensus_update` kernel (interpret mode off
+        TPU), O(K·H·N);
+      * ``"auto"``   — for sparse graphs (see :func:`auto_path`), pallas on
+        TPU and otherwise the same sparse gather applied through the
+        pure-jnp kernel oracle (bit-identical to
+        ``ref.consensus_update_reference`` per agent); for dense graphs
+        (star, full — max degree > K/4) it falls back to the dense matmul,
+        which moves strictly fewer bytes there.
+
+    The sparse paths need a CONCRETE mix (numpy / non-traced) — the
+    neighbour structure is extracted at trace time.
+    """
+    mix = resolve_mix(mix)
+    if impl not in ("xla", "pallas", "auto"):
+        raise ValueError(f"unknown impl {impl!r}; use xla/pallas/auto")
+    if impl == "auto" and auto_path(mix) == "dense":
+        impl = "xla"
+    if impl == "xla":
+        M = _effective_mix(jnp.asarray(mix, jnp.float32))
+
+        def mix_leaf(x):
+            xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+            y = M @ xf
+            return y.reshape(x.shape).astype(x.dtype)
+
+        return jax.tree.map(mix_leaf, stacked_params)
+
+    use_pallas = impl == "pallas" or (impl == "auto"
+                                      and jax.default_backend() == "tpu")
+    idx_np, sig_np = sparse_structure(mix)
+    idx, sig = jnp.asarray(idx_np), jnp.asarray(sig_np)
+
+    from repro.kernels import ops  # deferred: keeps consensus importable
+                                   # without the Pallas toolchain
+
+    kernel_impl = ("pallas" if jax.default_backend() == "tpu"
+                   else "interpret") if use_pallas else "xla"
 
     def mix_leaf(x):
-        xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
-        y = M @ xf
+        K = x.shape[0]
+        xf = x.astype(jnp.float32).reshape(K, -1)
+        kw = {} if block_n is None else {"block_n": block_n}
+
+        def one(xk, ik, sk):
+            return ops.consensus_update(xk, xf[ik], sk, impl=kernel_impl,
+                                        **kw)
+
+        y = jax.vmap(one)(xf, idx, sig)
         return y.reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(mix_leaf, stacked_params)
@@ -124,6 +219,15 @@ def consensus_error(stacked_params) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static size of a mapped axis. ``jax.lax.axis_size`` only exists on
+    newer jax; ``psum(1, name)`` constant-folds to a Python int under both
+    vmap and shard_map on every version we support."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def ring_consensus_step(params, data_size, axis_name: str, hops: int = 1,
                         include_self: bool = True, message_dtype=None):
     """One Eq.-(6) round where each ``axis_name`` position is an agent.
@@ -138,7 +242,7 @@ def ring_consensus_step(params, data_size, axis_name: str, hops: int = 1,
     the ppermute (XLA otherwise commutes converts past permutes and keeps
     the wire at the storage dtype — EXPERIMENTS.md §Perf P3).
     """
-    K = jax.lax.axis_size(axis_name)
+    K = _axis_size(axis_name)
     perms = []
     for d in range(1, hops + 1):
         perms.append([(i, (i + d) % K) for i in range(K)])   # from left
@@ -175,7 +279,7 @@ def cluster_ring_consensus_step(params, data_size, axis_name: str,
     """Ring consensus restricted to contiguous clusters of ``cluster_size``
     agents along ``axis_name`` (the paper's per-task clusters C_i: only
     same-cluster agents exchange models)."""
-    K = jax.lax.axis_size(axis_name)
+    K = _axis_size(axis_name)
     assert K % cluster_size == 0
     if cluster_size == 1:
         return params

@@ -144,18 +144,34 @@ def sidelink_cost_per_bit(p: EnergyParams) -> float:
     return 1.0 / p.E_UL + p.gamma / p.E_DL
 
 
-def fl_learning_energy(p: EnergyParams, t_i: float) -> float:
-    return t_i * p.devices_per_cluster * p.B_i * p.Ek_C
+def fl_learning_energy(p: EnergyParams, t_i: float, topology=None) -> float:
+    """``topology`` must be ONE cluster C_i's graph (its K is the cluster's
+    device count) — see :func:`fl_comm_energy`."""
+    devices = p.devices_per_cluster if topology is None else topology.K
+    return t_i * devices * p.B_i * p.Ek_C
 
 
-def fl_comm_energy(p: EnergyParams, t_i: float) -> float:
+def fl_comm_energy(p: EnergyParams, t_i: float, topology=None) -> float:
+    """Eq.-(11) communication term. With a ``topology``
+    (:class:`repro.core.topology.Topology`) the link count and per-link
+    classes come from the graph's actual directed edges; without one, the
+    legacy 2-robot constants ``devices_per_cluster × neighbors_per_device``
+    are used (all-SL).
+
+    ``topology`` is a SINGLE cluster C_i's graph — pass
+    ``ClusterNetwork.cluster_topology()`` / ``topology.clusters(1, per)``.
+    Eqs. (10)–(12) sum per task, so passing the whole population graph
+    here would price every cluster's links into each task."""
+    if topology is not None:
+        return t_i * topology.round_comm_joules(p)
     links = p.devices_per_cluster * p.neighbors_per_device
     return p.model_bits * t_i * links * sidelink_cost_per_bit(p)
 
 
-def fl_energy(p: EnergyParams, t_i: float) -> float:
-    """Eq. (10) for one task."""
-    return fl_learning_energy(p, t_i) + fl_comm_energy(p, t_i)
+def fl_energy(p: EnergyParams, t_i: float, topology=None) -> float:
+    """Eq. (10) for one task (cluster graph supplied via ``topology``)."""
+    return (fl_learning_energy(p, t_i, topology)
+            + fl_comm_energy(p, t_i, topology))
 
 
 # ---------------------------------------------------------------------------
@@ -164,8 +180,9 @@ def fl_energy(p: EnergyParams, t_i: float) -> float:
 
 
 def total_energy(p: EnergyParams, t0: int, Q: int,
-                 t_is: Sequence[float]) -> float:
-    return maml_energy(p, t0, Q) + sum(fl_energy(p, t) for t in t_is)
+                 t_is: Sequence[float], topology=None) -> float:
+    return maml_energy(p, t0, Q) + sum(fl_energy(p, t, topology)
+                                       for t in t_is)
 
 
 def optimize_split(p: EnergyParams, Q: int,
@@ -232,24 +249,35 @@ class RooflineTerms:
         return pue * self.chips * power * self.step_time
 
 
+def single_chip_terms(step_terms: RooflineTerms) -> RooflineTerms:
+    """The same per-step workload on ONE chip: the whole FLOP/byte budget
+    lands on a single device and there are no cross-chip collectives."""
+    return replace(step_terms, chips=1, collective_bytes=0.0)
+
+
 def tpu_energy_params(step_terms: RooflineTerms, model_bytes: float,
                       *, dcn_bit_per_joule: float = 5e9,
                       ici_bit_per_joule: float = 50e9,
                       **overrides) -> EnergyParams:
     """Map the paper's Table-I shape onto TPU constants: a 'gradient' is one
-    compiled train step; UL/DL become DCN transfers; SL becomes ICI."""
-    e_grad = step_terms.energy_per_step()
+    compiled train step; UL/DL become DCN transfers; SL becomes ICI.
+
+    The data-center role keeps the full ``step_terms.chips`` slice (so
+    E0^C = chips · W · step_time = per-step energy at PUE 1); the device
+    role is ONE chip running the same workload alone
+    (:func:`single_chip_terms`), so Ek_C = W · single-chip step time.
+    """
+    single = single_chip_terms(step_terms)
     base = EnergyParams(
         P_datacenter=TPU_V5E["chip_power"] * step_terms.chips,
         T_batch_datacenter=step_terms.step_time,
         P_device=TPU_V5E["chip_power"],
-        T_batch_device=step_terms.step_time * step_terms.chips,  # 1 chip
+        T_batch_device=single.step_time,
         gamma=TPU_V5E["host_pue"],
         model_bits=model_bytes * BYTE,
         E_UL=dcn_bit_per_joule, E_DL=dcn_bit_per_joule,
         E_SL=ici_bit_per_joule,
     )
-    del e_grad
     return replace(base, **overrides) if overrides else base
 
 

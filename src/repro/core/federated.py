@@ -5,7 +5,6 @@ against in Fig. 3 (blue bars).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -30,16 +29,18 @@ def local_steps(loss_fn, params, batches, lr: float):
 
 
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
-                           mix, lr: float):
+                           mix, lr: float, impl: str = "xla"):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step with the σ weights.
 
     stacked_params / stacked_batches: leading agent axis K (vmapped).
+    ``mix`` may be a (K, K) σ matrix or a Topology; ``impl`` selects the
+    consensus execution path (see :func:`consensus.consensus_step`).
     """
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
-    return consensus.consensus_step(new_params, mix)
+    return consensus.consensus_step(new_params, mix, impl=impl)
 
 
 def fedavg_round(loss_fn, global_params, stacked_batches, weights,
@@ -63,21 +64,23 @@ def fedavg_round(loss_fn, global_params, stacked_batches, weights,
 
 def run_fl_until(loss_fn, stacked_params, sample_batches, mix, lr: float,
                  *, target_fn: Callable, max_rounds: int, key,
-                 eval_every: int = 1):
+                 eval_every: int = 1, impl: str = "xla"):
     """Drive decentralized FL rounds until ``target_fn(stacked_params) >=
     target`` (it returns (reached: bool, metric)) or ``max_rounds``.
 
     Returns (params, rounds_used, metric_history). This is how the paper's
-    t_i (rounds to reach running reward R) is measured.
+    t_i (rounds to reach running reward R) is measured. ``mix`` may be a
+    σ matrix or a Topology (closed over so the sparse consensus paths see
+    the concrete neighbour structure at trace time).
     """
-    step = jax.jit(functools.partial(decentralized_fl_round, loss_fn),
-                   static_argnames=())
+    step = jax.jit(lambda sp, b: decentralized_fl_round(
+        loss_fn, sp, b, mix, lr, impl=impl))
     history = []
     rounds_used = max_rounds
     for t in range(max_rounds):
         key, sk = jax.random.split(key)
         batches = sample_batches(sk, t)
-        stacked_params = step(stacked_params, batches, mix, lr)
+        stacked_params = step(stacked_params, batches)
         if (t + 1) % eval_every == 0:
             reached, metric = target_fn(stacked_params)
             history.append(float(metric))

@@ -62,6 +62,17 @@ class ClusterNetwork:
                 A[k, h] = True
         return A
 
+    def topology(self):
+        """The population's communication graph as a first-class
+        :class:`repro.core.topology.Topology` (per-task SL clusters)."""
+        from repro.core import topology as topo_lib
+        return topo_lib.from_cluster_network(self)
+
+    def cluster_topology(self):
+        """One cluster C_i's graph (drives per-task Eq.-(11) pricing)."""
+        from repro.core import topology as topo_lib
+        return topo_lib.clusters(1, self.devices_per_cluster)
+
 
 class TaskRegistry:
     """Name -> TaskSpec registry with deterministic ordering."""

@@ -19,9 +19,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import consensus, energy, federated, maml
+from repro.core import energy, federated, maml
+from repro.core import topology as topo_lib
 from repro.core.multitask import ClusterNetwork
 
 
@@ -33,6 +33,7 @@ class ProtocolResult:
     fl_histories: List[List[float]]
     energy_params: energy.EnergyParams
     Q: int
+    cluster_topology: Optional[topo_lib.Topology] = None
 
     @property
     def E_ML(self) -> float:
@@ -40,7 +41,8 @@ class ProtocolResult:
 
     @property
     def E_FL(self) -> List[float]:
-        return [energy.fl_energy(self.energy_params, t)
+        return [energy.fl_energy(self.energy_params, t,
+                                 self.cluster_topology)
                 for t in self.rounds_per_task]
 
     @property
@@ -94,6 +96,9 @@ class MTLProtocol:
         if not first_order:
             self.energy_params = dataclasses.replace(
                 self.energy_params, beta=2.0)
+        # one cluster C_i's communication graph — drives BOTH the Eq.-(6)
+        # mixing weights and the Eq.-(11) link pricing
+        self.cluster_topology = network.cluster_topology()
 
     # -- stage 1 ------------------------------------------------------------
     def meta_train(self, key, t0: int):
@@ -130,9 +135,7 @@ class MTLProtocol:
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape)
             if hasattr(x, "shape") else x, init_params)
-        adj = consensus.full_adjacency(C)
-        sizes = np.ones(C)
-        mix = consensus.mixing_weights(sizes, adj, kind="paper")
+        mix = self.cluster_topology.mixing(kind="paper")
 
         def sample_batches(k, _t):
             ks = jax.random.split(k, C)
@@ -162,4 +165,4 @@ class MTLProtocol:
         return ProtocolResult(
             t0=t0, rounds_per_task=rounds, meta_history=meta_hist,
             fl_histories=hists, energy_params=self.energy_params,
-            Q=self.net.Q)
+            Q=self.net.Q, cluster_topology=self.cluster_topology)

@@ -1,0 +1,304 @@
+"""Communication-graph topology engine — the single source of truth for
+WHO talks to WHOM in one Eq.-(6) consensus round and WHAT each message
+costs under the paper's Eq. (11) link pricing.
+
+One :class:`Topology` object produces, for a population of K agents:
+
+* ``adjacency``        — (K, K) bool; ``A[k, h]`` ⇒ h ∈ N_k, i.e. agent k
+                         consumes agent h's model (one directed message
+                         h → k per round);
+* ``mixing(...)``      — the (K, K) σ matrix of Eq. (6) (delegates to
+                         :mod:`repro.core.consensus`);
+* ``links_per_round`` — per-round directed message counts split by link
+                         efficiency class;
+* ``round_comm_joules``— the Eq.-(11) communication term for ONE round,
+                         priced per link class (SL honours the paper's
+                         UL + γ·DL replacement when sidelink is off).
+
+Link classes follow Sect. III-B: ``SL`` (device↔device sidelink), ``UL``
+(device→infrastructure uplink), ``DL`` (infrastructure→device downlink).
+Peer exchanges are SL; star (FedAvg) leaves upload to the hub over UL and
+receive the aggregate over DL; hierarchical gateways backhaul over UL.
+
+Graph families: ring, full, torus, small-world (Watts–Strogatz), star
+(FedAvg), per-task clusters (the paper's C_i), and hierarchical
+cluster-of-clusters. ``make(name, K)`` is the uniform constructor used by
+the scale benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import consensus, energy
+
+# link efficiency classes (Sect. III-B)
+NONE, SL, UL, DL = 0, 1, 2, 3
+LINK_CLASS_NAMES = {SL: "SL", UL: "UL", DL: "DL"}
+
+
+@dataclass(frozen=True, eq=False)   # eq=False: dataclass __eq__/__hash__
+class Topology:                     # would crash on the ndarray fields
+    """An immutable communication graph with per-link efficiency classes.
+
+    ``adjacency[k, h]`` — agent k receives agent h's model each round.
+    ``link_class[k, h]`` — class of that h → k message (SL/UL/DL); must be
+    NONE exactly where ``adjacency`` is False.
+    """
+
+    name: str
+    adjacency: np.ndarray
+    link_class: np.ndarray
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        A = np.asarray(self.adjacency, bool)
+        L = np.asarray(self.link_class, np.int8)
+        if A.ndim != 2 or A.shape[0] != A.shape[1]:
+            raise ValueError(f"adjacency must be square, got {A.shape}")
+        if L.shape != A.shape:
+            raise ValueError(f"link_class shape {L.shape} != {A.shape}")
+        if A.diagonal().any():
+            raise ValueError("self loops are not allowed")
+        if ((L != NONE) != A).any():
+            raise ValueError("link_class must be set exactly on edges")
+        object.__setattr__(self, "adjacency", A)
+        object.__setattr__(self, "link_class", L)
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def K(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """In-degree |N_k| per agent."""
+        return self.adjacency.sum(axis=1)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max()) if self.K else 0
+
+    @property
+    def directed_links(self) -> int:
+        """Total directed messages per consensus round (Σ_k |N_k|)."""
+        return int(self.adjacency.sum())
+
+    @property
+    def is_symmetric(self) -> bool:
+        return bool((self.adjacency == self.adjacency.T).all())
+
+    def neighbors_of(self, k: int) -> List[int]:
+        return list(np.flatnonzero(self.adjacency[k]))
+
+    def is_connected(self) -> bool:
+        """Weak connectivity (BFS over the undirected support)."""
+        if self.K == 0:
+            return True
+        und = self.adjacency | self.adjacency.T
+        seen = np.zeros(self.K, bool)
+        frontier = [0]
+        seen[0] = True
+        while frontier:
+            nxt = np.flatnonzero(und[frontier].any(axis=0) & ~seen)
+            seen[nxt] = True
+            frontier = list(nxt)
+        return bool(seen.all())
+
+    # -- mixing (Eq. 6) ------------------------------------------------------
+    def mixing(self, data_sizes: Optional[Sequence[float]] = None,
+               kind: str = "paper", include_self: bool = True):
+        """σ matrix of Eq. (6) on this graph (uniform |E_k| by default)."""
+        sizes = np.ones(self.K) if data_sizes is None else data_sizes
+        return consensus.mixing_weights(sizes, self.adjacency, kind,
+                                        include_self=include_self)
+
+    # -- Eq. (11) link pricing ----------------------------------------------
+    def links_per_round(self) -> Dict[str, int]:
+        """Directed message counts per round, keyed by link class."""
+        return {name: int((self.link_class == cls).sum())
+                for cls, name in LINK_CLASS_NAMES.items()}
+
+    def round_comm_joules(self, p: energy.EnergyParams,
+                          model_bits: Optional[float] = None) -> float:
+        """Eq.-(11) communication energy of ONE consensus round: every
+        directed message carries b(W) bits at its class's efficiency."""
+        bits = p.model_bits if model_bits is None else model_bits
+        n = self.links_per_round()
+        return bits * (n["SL"] * energy.sidelink_cost_per_bit(p)
+                       + n["UL"] / p.E_UL + n["DL"] / p.E_DL)
+
+    def __repr__(self):  # compact — adjacency can be 1024^2
+        lk = {k: v for k, v in self.links_per_round().items() if v}
+        return (f"Topology({self.name!r}, K={self.K}, "
+                f"max_degree={self.max_degree}, links={lk})")
+
+
+# ---------------------------------------------------------------------------
+# construction helpers
+# ---------------------------------------------------------------------------
+
+
+def _from_edges(name: str, K: int, edges, cls_of=None, meta=None) -> Topology:
+    """Build from directed (receiver, sender) pairs; ``cls_of(k, h)`` gives
+    the link class (default SL)."""
+    A = np.zeros((K, K), bool)
+    L = np.zeros((K, K), np.int8)
+    for k, h in edges:
+        if k == h:
+            continue
+        A[k, h] = True
+        L[k, h] = SL if cls_of is None else cls_of(k, h)
+    return Topology(name, A, L, meta or {})
+
+
+def _symmetric(name: str, K: int, pairs, cls: int = SL, meta=None) -> Topology:
+    edges = [(k, h) for k, h in pairs] + [(h, k) for k, h in pairs]
+    return _from_edges(name, K, edges, lambda *_: cls, meta)
+
+
+# -- graph families ---------------------------------------------------------
+
+
+def ring(K: int, hops: int = 1) -> Topology:
+    """Symmetric ring; each agent sees ``hops`` neighbours each side (SL)."""
+    A = consensus.ring_adjacency(K, hops)
+    return Topology("ring", A, np.where(A, SL, NONE).astype(np.int8),
+                    {"hops": hops})
+
+
+def full(K: int) -> Topology:
+    """All-to-all sidelink mesh."""
+    A = consensus.full_adjacency(K)
+    return Topology("full", A, np.where(A, SL, NONE).astype(np.int8))
+
+
+def torus(rows: int, cols: int) -> Topology:
+    """2-D 4-neighbour torus (rows × cols agents, SL links)."""
+    K = rows * cols
+    pairs = set()
+    for r in range(rows):
+        for c in range(cols):
+            k = r * cols + c
+            for rr, cc in ((r, (c + 1) % cols), ((r + 1) % rows, c)):
+                h = rr * cols + cc
+                if h != k:
+                    pairs.add((min(k, h), max(k, h)))
+    return _symmetric("torus", K, pairs, meta={"rows": rows, "cols": cols})
+
+
+def small_world(K: int, k: int = 4, rewire_p: float = 0.1,
+                seed: int = 0) -> Topology:
+    """Watts–Strogatz: ring(K, k/2) with each edge rewired with prob. p
+    (symmetric, self/duplicate edges skipped — stays connected w.h.p.)."""
+    if k % 2 or not 0 < k < K:
+        raise ValueError(f"need even 0 < k < K, got k={k} K={K}")
+    rng = np.random.default_rng(seed)
+    pairs = {(kk, (kk + d) % K) for kk in range(K) for d in range(1, k // 2 + 1)}
+    pairs = {(min(a, b), max(a, b)) for a, b in pairs}
+    out = set(pairs)
+    for a, b in sorted(pairs):
+        if rng.random() < rewire_p:
+            c = int(rng.integers(K))
+            new = (min(a, c), max(a, c))
+            if c != a and new not in out:
+                out.discard((a, b))
+                out.add(new)
+    return _symmetric("small_world", K, out,
+                      meta={"k": k, "rewire_p": rewire_p, "seed": seed})
+
+
+def star(K: int) -> Topology:
+    """FedAvg star: agent 0 is the hub/server. Leaf models reach the hub
+    over UL; the hub's (aggregated) model reaches leaves over DL."""
+    edges, cls = [], {}
+    for leaf in range(1, K):
+        edges.append((0, leaf))      # hub consumes leaf  → leaf uploads: UL
+        edges.append((leaf, 0))      # leaf consumes hub  → hub pushes:  DL
+        cls[(0, leaf)] = UL
+        cls[(leaf, 0)] = DL
+    return _from_edges("star", K, edges, lambda kk, h: cls[(kk, h)])
+
+
+def clusters(num_clusters: int, devices_per_cluster: int) -> Topology:
+    """The paper's per-task clusters C_i: all-to-all SL within a cluster,
+    no inter-cluster links (Sect. II-B)."""
+    per = devices_per_cluster
+    K = num_clusters * per
+    pairs = {(c * per + i, c * per + j)
+             for c in range(num_clusters)
+             for i in range(per) for j in range(i + 1, per)}
+    return _symmetric("cluster", K, pairs,
+                      meta={"num_clusters": num_clusters,
+                            "devices_per_cluster": per})
+
+
+def hierarchical(num_clusters: int, devices_per_cluster: int) -> Topology:
+    """Cluster-of-clusters: all-to-all SL within each cluster, plus each
+    cluster's first device acting as gateway on an inter-cluster ring
+    (backhaul links priced as UL)."""
+    per = devices_per_cluster
+    K = num_clusters * per
+    base = clusters(num_clusters, per)
+    A = base.adjacency.copy()
+    L = base.link_class.copy()
+    if num_clusters > 1:
+        gws = [c * per for c in range(num_clusters)]
+        for i, g in enumerate(gws):
+            for d in (1, -1):
+                h = gws[(i + d) % num_clusters]
+                if h != g:
+                    A[g, h] = True
+                    L[g, h] = UL
+    return Topology("hierarchical", A, L,
+                    {"num_clusters": num_clusters,
+                     "devices_per_cluster": per})
+
+
+def from_cluster_network(net) -> Topology:
+    """Adapter for :class:`repro.core.multitask.ClusterNetwork`."""
+    return clusters(net.num_tasks, net.devices_per_cluster)
+
+
+# -- uniform constructor for sweeps -----------------------------------------
+
+
+def _near_square(K: int):
+    r = int(np.sqrt(K))
+    while K % r:
+        r -= 1
+    return r, K // r
+
+
+FAMILIES = ("ring", "full", "torus", "small_world", "star", "cluster",
+            "hierarchical")
+
+
+def make(name: str, K: int, **kw) -> Topology:
+    """Build any family at population size K with sensible defaults."""
+    if name == "ring":
+        return ring(K, **kw)
+    if name == "full":
+        return full(K)
+    if name == "torus":
+        return torus(*_near_square(K))
+    if name == "small_world":
+        kw.setdefault("k", min(4, 2 * ((K - 1) // 2)))
+        return small_world(K, **kw)
+    if name == "star":
+        return star(K)
+    if name == "cluster":
+        per = kw.pop("devices_per_cluster", 4 if K % 4 == 0 else 2)
+        if K % per:
+            raise ValueError(f"K={K} not divisible by cluster size {per}")
+        return clusters(K // per, per)
+    if name == "hierarchical":
+        per = kw.pop("devices_per_cluster", 4 if K % 4 == 0 else 2)
+        if K % per:
+            raise ValueError(f"K={K} not divisible by cluster size {per}")
+        return hierarchical(K // per, per)
+    raise ValueError(f"unknown topology family {name!r}; "
+                     f"choose from {FAMILIES}")

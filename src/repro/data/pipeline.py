@@ -42,12 +42,13 @@ class TaskTokenDistribution:
         P = base + pert
         return P / P.sum(axis=1, keepdims=True)
 
-    def sample(self, key, task_id: int, batch: int, seq_len: int):
-        """JAX-random Markov rollout -> (tokens, labels) int32 (B, S)."""
-        P = jnp.asarray(self.transition(task_id), jnp.float32)
-        V = P.shape[0]
+    def transitions(self) -> np.ndarray:
+        """(num_tasks, V, V) stacked transition tables (host-computed)."""
+        return np.stack([self.transition(t) for t in range(self.num_tasks)])
+
+    def _rollout(self, key, logP, batch: int, seq_len: int):
+        V = logP.shape[-1]
         k0, k1 = jax.random.split(key)
-        logP = jnp.log(P + 1e-9)
         x0 = jax.random.randint(k0, (batch,), 0, V)
 
         def step(x, k):
@@ -58,6 +59,19 @@ class TaskTokenDistribution:
         _, toks = jax.lax.scan(step, x0, keys)
         toks = jnp.concatenate([x0[None], toks], axis=0).T  # (B, S+1)
         return toks[:, :-1].astype(jnp.int32), toks[:, 1:].astype(jnp.int32)
+
+    def sample(self, key, task_id: int, batch: int, seq_len: int):
+        """JAX-random Markov rollout -> (tokens, labels) int32 (B, S)."""
+        P = jnp.asarray(self.transition(task_id), jnp.float32)
+        return self._rollout(key, jnp.log(P + 1e-9), batch, seq_len)
+
+    def sample_traced(self, key, task_id, batch: int, seq_len: int):
+        """Like :meth:`sample` but ``task_id`` may be a TRACED int (vmap /
+        jit over agents): indexes a precomputed (num_tasks, V, V) stack
+        instead of selecting the table host-side."""
+        P_all = jnp.asarray(self.transitions(), jnp.float32)
+        logP = jnp.log(P_all + 1e-9)[task_id]
+        return self._rollout(key, logP, batch, seq_len)
 
 
 def batches(dist: TaskTokenDistribution, task_id: int, batch: int,

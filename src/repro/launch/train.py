@@ -25,10 +25,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.core import consensus, energy
+from repro.core import topology as topo_lib
 from repro.data import TaskTokenDistribution
 from repro.launch import steps as steps_lib
 from repro.models import frontend
@@ -75,14 +75,16 @@ def train_standard(cfg, *, steps: int, batch: int, seq: int, lr: float,
 def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     local_steps: int, batch: int, seq: int, lr: float,
                     consensus_every: int = 1, seed: int = 0,
-                    energy_params=None, consensus_dtype=None):
+                    energy_params=None, consensus_dtype=None,
+                    consensus_impl: str = "xla"):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
-    consensus only mixes within a cluster (cluster_ring semantics, dense
-    implementation). Returns (stacked_params, per_round losses, energy J).
-    ``consensus_dtype``: cast exchanged models (e.g. bf16) — halves the
-    sidelink bytes of Eq. (11); EXPERIMENTS.md §Perf P3.
+    consensus only mixes within a cluster (per-task Topology, dense or
+    sparse/Pallas via ``consensus_impl``). Returns (stacked_params,
+    per_round losses, energy J). ``consensus_dtype``: cast exchanged
+    models (e.g. bf16) — halves the sidelink bytes of Eq. (11);
+    EXPERIMENTS.md §Perf P3.
     """
     assert agents % tasks == 0
     per = agents // tasks
@@ -93,13 +95,11 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         lambda x: jnp.broadcast_to(x[None], (agents,) + x.shape), params)
     dist = TaskTokenDistribution(vocab_size=cfg.vocab_size, num_tasks=tasks)
 
-    A = np.zeros((agents, agents), bool)
-    for c in range(tasks):
-        for i in range(per):
-            for j in range(per):
-                if i != j:
-                    A[c * per + i, c * per + j] = True
-    mix = consensus.mixing_weights(np.ones(agents), A, "paper")
+    # the population graph (per-task SL clusters) drives BOTH the Eq.-(6)
+    # mixing weights and the Eq.-(11) link pricing below
+    topo = topo_lib.clusters(tasks, per)
+    mix = topo.mixing(kind="paper")
+    task_of_agent = jnp.arange(agents, dtype=jnp.int32) // per
 
     def loss_fn(p, b):
         return lm_loss(p, cfg, b["tokens"], b["labels"], model=model)
@@ -119,23 +119,22 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     def fl_round(stacked, key):
         ks = jax.random.split(key, agents)
 
-        def agent_batches(k, aid):
-            task = aid // per
+        def agent_batches(k, task):
             def sample_one(kk):
-                toks, labels = dist.sample(kk, task, batch, seq)
+                toks, labels = dist.sample_traced(kk, task, batch, seq)
                 return {"tokens": toks, "labels": labels}
             return jax.vmap(sample_one)(jax.random.split(k, local_steps))
 
-        batches = [agent_batches(ks[a], a) for a in range(agents)]
-        batches = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
         if consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
-            mixed = consensus.consensus_step(cast, mix)
+            mixed = consensus.consensus_step(cast, mix,
+                                             impl=consensus_impl)
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
-            new = consensus.consensus_step(new, mix)
+            new = consensus.consensus_step(new, mix, impl=consensus_impl)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
@@ -148,6 +147,10 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     import dataclasses as dc
     ep = dc.replace(ep, model_bits=float(n_bytes) * 8,
                     devices_per_cluster=per, B_i=local_steps)
+    # one cluster's graph: per·(per−1) directed SL messages per round —
+    # NOT the legacy devices_per_cluster × neighbors_per_device constant,
+    # which under-priced any cluster larger than 2 robots
+    cluster_topo = topo_lib.clusters(1, per)
 
     hist = []
     for r in range(rounds):
@@ -155,7 +158,7 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         stacked, l = fl_round(stacked, sk)
         hist.append(float(l))
         print(f"round {r:3d}  loss {float(l):.4f}")
-    E = sum(energy.fl_energy(ep, rounds) for _ in range(tasks))
+    E = tasks * energy.fl_energy(ep, rounds, topology=cluster_topo)
     print(f"estimated FL energy for {rounds} rounds x {tasks} clusters: "
           f"{E / 1e3:.2f} kJ (model {n_bytes / 1e6:.1f} MB per exchange)")
     return stacked, hist, E
@@ -176,6 +179,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--bf16-consensus", action="store_true")
+    ap.add_argument("--consensus-impl", choices=["xla", "pallas", "auto"],
+                    default="xla")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -189,7 +194,8 @@ def main():
             cfg, rounds=args.rounds, agents=args.agents, tasks=args.tasks,
             local_steps=args.local_steps, batch=args.batch, seq=args.seq,
             lr=args.lr,
-            consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None)
+            consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
+            consensus_impl=args.consensus_impl)
 
 
 if __name__ == "__main__":

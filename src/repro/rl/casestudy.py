@@ -25,7 +25,6 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.core import consensus, energy, maml
@@ -128,6 +127,9 @@ class CaseStudy:
         self.network = ClusterNetwork(num_tasks=gw.NUM_TASKS,
                                       devices_per_cluster=2,
                                       meta_task_ids=META_TASKS)
+        # per-cluster communication graph: single source of truth for the
+        # Eq.-(6) mixing below AND the Eq.-(11) pricing in ProtocolResult
+        self.cluster_topology = self.network.cluster_topology()
 
         # ---- jitted meta round (Eqs. 3–5 over the Q tasks) ----------------
         @jax.jit
@@ -158,8 +160,7 @@ class CaseStudy:
 
         # ---- jitted FL round per task (Eq. 6 cluster) ---------------------
         C = self.network.devices_per_cluster
-        mix = consensus.mixing_weights(
-            np.ones(C), consensus.full_adjacency(C), kind="paper")
+        mix = self.cluster_topology.mixing(kind="paper")
 
         def fl_round(task_id, stacked_params, key):
             ks = jax.random.split(key, C + 1)
@@ -228,7 +229,7 @@ class CaseStudy:
         return ProtocolResult(
             t0=t0, rounds_per_task=rounds, meta_history=meta_hist,
             fl_histories=hists, energy_params=self.energy_params,
-            Q=self.network.Q)
+            Q=self.network.Q, cluster_topology=self.cluster_topology)
 
 
 def run_case_study(key=None, *, t0: int = 210, max_rounds: int = 400):

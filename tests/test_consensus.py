@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import consensus
 
@@ -101,6 +101,38 @@ def test_metropolis_converges_to_mean(rng_key):
     for _ in range(300):
         s = consensus.consensus_step(s, M)
     np.testing.assert_allclose(np.asarray(s["w"][0]), mean0, atol=1e-4)
+
+
+def test_cluster_ring_matches_dense_on_cluster_adjacency(rng_key):
+    """The distributed cluster-ring path (ppermute collectives, here run
+    under vmap-with-axis_name, which shares the shard_map collective
+    semantics) must produce the SAME params as the dense consensus_step on
+    the cluster adjacency after one round (K=4, cluster_size=2)."""
+    from repro.core import topology as topo_lib
+    K, cluster = 4, 2
+    s = _stacked(rng_key, K)
+    sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+    ring_out = jax.vmap(
+        lambda p, d: consensus.cluster_ring_consensus_step(
+            p, d, "agents", cluster_size=cluster),
+        axis_name="agents")(s, sizes)
+
+    mix = topo_lib.clusters(K // cluster, cluster).mixing(np.asarray(sizes))
+    dense_out = consensus.consensus_step(s, mix)
+
+    for leaf in s:
+        np.testing.assert_allclose(np.asarray(ring_out[leaf]),
+                                   np.asarray(dense_out[leaf]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_consensus_impl_switch_rejects_unknown(rng_key):
+    s = _stacked(rng_key, 4)
+    M = consensus.mixing_weights(np.ones(4), consensus.full_adjacency(4),
+                                 "paper")
+    with pytest.raises(ValueError):
+        consensus.consensus_step(s, M, impl="bogus")
 
 
 def test_kernel_consensus_matches_dense(rng_key):

@@ -4,7 +4,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import energy
 
@@ -85,6 +85,29 @@ def test_paper_fig4_optimum_shift():
     _, _, er = energy.optimize_split(pr, 3, {k: v for k, v in
                                              PAPER_T2.items() if k > 0})
     assert min(er, key=er.get) == 132
+
+
+def test_tpu_energy_params_single_chip_mapping():
+    """The device role is ONE chip running the whole per-step workload with
+    no collectives; the data-center role keeps the full slice. Both must be
+    consistent with RooflineTerms.energy_per_step at PUE 1."""
+    rt = energy.RooflineTerms(flops=3e14, hbm_bytes=2e12,
+                              collective_bytes=5e11, chips=16)
+    p = energy.tpu_energy_params(rt, model_bytes=8e9)
+    single = energy.single_chip_terms(rt)
+    assert single.chips == 1 and single.collective_bytes == 0.0
+    assert np.isclose(p.T_batch_device, single.step_time)
+    # Ek_C = P_device · T_batch_device == 1-chip J/step (PUE excluded:
+    # the paper's device term carries no data-center PUE)
+    assert np.isclose(p.Ek_C, single.energy_per_step(pue=1.0))
+    # E0_C = P_dc · T_dc == full-slice J/step at PUE 1 (γ carries the PUE)
+    assert np.isclose(p.E0_C, rt.energy_per_step(pue=1.0))
+    assert np.isclose(p.gamma, energy.TPU_V5E["host_pue"])
+    # the lone device is never faster than its share of the full slice
+    assert p.T_batch_device >= rt.step_time - 1e-12
+    # overrides still apply on top
+    p2 = energy.tpu_energy_params(rt, model_bytes=8e9, B_i=7)
+    assert p2.B_i == 7 and np.isclose(p2.T_batch_device, p.T_batch_device)
 
 
 # ---------------------------------------------------------------------------

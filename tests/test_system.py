@@ -74,10 +74,13 @@ def test_protocol_generic_toy():
 
 
 def test_federated_lm_trainer_loss_drops():
+    # lr 0.1, not 5e-3: the local updates are plain clipped SGD, which at
+    # 5e-3 plateaus right after the easy move-mass-to-the-active-vocab win
+    # and the 12-round loss never clears the drop threshold
     from repro.launch.train import train_federated
     cfg = reduced(get_arch("stablelm-3b"), num_layers=2, d_model=64)
     _, hist, E = train_federated(cfg, rounds=12, agents=4, tasks=2,
-                                 local_steps=8, batch=4, seq=64, lr=5e-3)
+                                 local_steps=8, batch=4, seq=64, lr=1e-1)
     assert E > 0
     assert min(hist[-3:]) < np.mean(hist[:2]) - 0.05
 

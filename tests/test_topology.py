@@ -1,0 +1,230 @@
+"""Topology engine: graph-family invariants, Eq.-(6) mixing on each
+family, Eq.-(11) link pricing (incl. the 4-agent cluster regression for
+the old hard-coded 2-robot link count), and the sparse/Pallas consensus
+paths vs the kernel oracle on every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, energy
+from repro.core import topology as topo_lib
+from repro.core.multitask import ClusterNetwork
+from repro.kernels import ref
+
+
+def _make(name, K=12):
+    return topo_lib.make(name, K)
+
+
+# ---------------------------------------------------------------------------
+# structural invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", topo_lib.FAMILIES)
+def test_family_structure(name):
+    t = _make(name)
+    A = t.adjacency
+    assert A.shape == (12, 12) and A.dtype == bool
+    assert not A.diagonal().any()
+    assert ((t.link_class != 0) == A).all()
+    assert t.directed_links == int(A.sum())
+    assert sum(t.links_per_round().values()) == t.directed_links
+    # undirected support is symmetric for every family (star pairs UL/DL)
+    assert ((A | A.T) == (A | A.T).T).all()
+    # every agent has at least one neighbour
+    assert (t.degrees >= 1).all()
+    if name != "cluster":          # per-task clusters are disjoint on purpose
+        assert t.is_connected()
+
+
+def test_link_classes_by_family():
+    assert _make("ring").links_per_round() == {"SL": 24, "UL": 0, "DL": 0}
+    # star: K-1 uploads to the hub + K-1 downloads from it, zero sidelink
+    assert _make("star").links_per_round() == {"SL": 0, "UL": 11, "DL": 11}
+    # hierarchical 3×4: 3 clusters × 4·3 SL + gateway ring 3×2 UL
+    h = topo_lib.hierarchical(3, 4)
+    assert h.links_per_round() == {"SL": 36, "UL": 6, "DL": 0}
+    # paper clusters: per-cluster all-to-all sidelink
+    c = topo_lib.clusters(6, 2)
+    assert c.links_per_round() == {"SL": 12, "UL": 0, "DL": 0}
+    assert c.K == 12
+
+
+def test_cluster_network_adapter():
+    net = ClusterNetwork(num_tasks=6, devices_per_cluster=2,
+                         meta_task_ids=(0, 1, 5))
+    t = net.topology()
+    np.testing.assert_array_equal(t.adjacency, net.adjacency())
+    assert net.cluster_topology().K == 2
+
+
+def test_torus_and_small_world_shapes():
+    t = topo_lib.torus(3, 4)
+    assert t.K == 12 and (t.degrees == 4).all()
+    sw = topo_lib.small_world(16, k=4, rewire_p=0.3, seed=1)
+    assert sw.is_symmetric and sw.is_connected()
+    # same seed ⇒ same graph (deterministic rewiring)
+    sw2 = topo_lib.small_world(16, k=4, rewire_p=0.3, seed=1)
+    np.testing.assert_array_equal(sw.adjacency, sw2.adjacency)
+
+
+# ---------------------------------------------------------------------------
+# mixing + consensus on each family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", topo_lib.FAMILIES)
+def test_mixing_rows_substochastic(name):
+    t = _make(name)
+    M = np.asarray(t.mixing(np.arange(1.0, 13.0)))
+    assert (M >= 0).all()
+    assert (M.sum(axis=1) <= 1 + 1e-5).all()
+    assert (np.diag(M) == 0).all()
+    assert (M[~t.adjacency] == 0).all()
+
+
+@pytest.mark.parametrize("name",
+                         [n for n in topo_lib.FAMILIES if n != "cluster"])
+def test_consensus_converges_on_family(name, rng_key):
+    t = _make(name)
+    s = {"w": jax.random.normal(rng_key, (t.K, 4, 3))}
+    M = t.mixing(kind="metropolis")
+    e0 = float(consensus.consensus_error(s))
+    for _ in range(300):
+        s = consensus.consensus_step(s, M)
+    assert float(consensus.consensus_error(s)) < 1e-4 * max(e0, 1.0)
+
+
+@pytest.mark.parametrize("name", topo_lib.FAMILIES)
+def test_sparse_paths_match_oracle_per_family(name, rng_key):
+    """The forced Pallas path (interpret on CPU) must match
+    ref.consensus_update_reference on EVERY family; auto must be BIT-equal
+    to the oracle wherever it takes the sparse route (on dense graphs —
+    star, full — it falls back to the dense matmul, fp-close only); and
+    all paths must agree with the dense matmul."""
+    t = _make(name)
+    mix = t.mixing(np.arange(1.0, t.K + 1.0))
+    x = {"w": jax.random.normal(rng_key, (t.K, 5, 3)),
+         "b": jax.random.normal(jax.random.fold_in(rng_key, 1), (t.K, 7))}
+    dense = consensus.consensus_step(x, mix, impl="xla")
+    auto = consensus.consensus_step(x, mix, impl="auto")
+    pallas = consensus.consensus_step(x, mix, impl="pallas", block_n=64)
+    idx, sig = consensus.sparse_structure(mix)
+    for leaf in x:
+        xf = np.asarray(x[leaf], np.float32).reshape(t.K, -1)
+        want = np.stack([np.asarray(ref.consensus_update_reference(
+            jnp.asarray(xf[k]), jnp.asarray(xf[idx[k]]),
+            jnp.asarray(sig[k]))) for k in range(t.K)])
+        got_auto = np.asarray(auto[leaf]).reshape(t.K, -1)
+        if consensus.auto_path(mix) == "sparse":
+            np.testing.assert_array_equal(got_auto, want)
+        else:
+            np.testing.assert_allclose(got_auto, want, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(pallas[leaf]).reshape(t.K, -1), want, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(dense[leaf]).reshape(t.K, -1), want,
+            rtol=1e-5, atol=1e-5)
+
+
+def test_auto_path_density_heuristic():
+    assert consensus.auto_path(topo_lib.ring(256).mixing()) == "sparse"
+    assert consensus.auto_path(topo_lib.star(256).mixing()) == "dense"
+    assert consensus.auto_path(topo_lib.full(16).mixing()) == "dense"
+    assert consensus.auto_path(
+        topo_lib.clusters(64, 4).mixing()) == "sparse"
+
+
+def test_consensus_step_accepts_topology():
+    t = topo_lib.ring(6)
+    x = {"w": jnp.arange(18.0).reshape(6, 3)}
+    via_topo = consensus.consensus_step(x, t)
+    via_mix = consensus.consensus_step(x, t.mixing())
+    np.testing.assert_allclose(np.asarray(via_topo["w"]),
+                               np.asarray(via_mix["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Eq.-(11) link pricing
+# ---------------------------------------------------------------------------
+
+
+def test_fl_comm_energy_four_agent_cluster_regression():
+    """A 4-agent all-to-all cluster has 4·3 = 12 directed SL messages per
+    round. The old hard-coded ``devices_per_cluster × neighbors_per_device``
+    (= 4·1) under-priced it 3×."""
+    p = dataclasses.replace(energy.paper_calibrated("fig3"),
+                            devices_per_cluster=4)
+    c4 = topo_lib.clusters(1, 4)
+    t_i = 17
+    want = p.model_bits * t_i * 12 / p.E_SL
+    assert np.isclose(energy.fl_comm_energy(p, t_i, topology=c4), want)
+    legacy = energy.fl_comm_energy(p, t_i)            # no topology supplied
+    assert np.isclose(legacy, want / 3.0)
+    # learning term follows the graph's population too
+    assert np.isclose(energy.fl_learning_energy(p, t_i, topology=c4),
+                      t_i * 4 * p.B_i * p.Ek_C)
+
+
+def test_fl_comm_energy_two_robot_cluster_matches_legacy():
+    """For the paper's own 2-robot clusters the topology pricing must agree
+    with the legacy constants (2 directed SL messages per round)."""
+    p = energy.paper_calibrated("fig3")
+    c2 = topo_lib.clusters(1, 2)
+    for t_i in (1, 17, 210):
+        assert np.isclose(energy.fl_energy(p, t_i, topology=c2),
+                          energy.fl_energy(p, t_i))
+
+
+def test_star_priced_as_uplink_downlink():
+    p = energy.paper_calibrated("fig3")
+    s = topo_lib.star(5)
+    want = p.model_bits * (4 / p.E_UL + 4 / p.E_DL)
+    assert np.isclose(s.round_comm_joules(p), want)
+
+
+def test_sidelink_fallback_applies_to_topology_pricing():
+    p = dataclasses.replace(energy.paper_calibrated("fig3"),
+                            sidelink_available=False)
+    r = topo_lib.ring(6)
+    want = p.model_bits * 12 * (1 / p.E_UL + p.gamma / p.E_DL)
+    assert np.isclose(r.round_comm_joules(p), want)
+
+
+def test_total_energy_threads_topology():
+    p = energy.paper_calibrated("fig3")
+    c4 = topo_lib.clusters(1, 4)
+    tis = [10.0, 20.0]
+    want = energy.maml_energy(p, 5, 3) + sum(
+        energy.fl_energy(p, t, c4) for t in tis)
+    assert np.isclose(energy.total_energy(p, 5, 3, tis, topology=c4), want)
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: Eq.-(11) joules derived from the topology
+# ---------------------------------------------------------------------------
+
+
+def test_train_federated_prices_four_agent_cluster():
+    from repro.configs import get_arch, reduced
+    from repro.launch.train import train_federated
+    cfg = reduced(get_arch("stablelm-3b"), num_layers=1, d_model=32)
+    rounds, agents, tasks, local_steps = 1, 4, 1, 1
+    stacked, hist, E = train_federated(
+        cfg, rounds=rounds, agents=agents, tasks=tasks,
+        local_steps=local_steps, batch=2, seq=16, lr=1e-3)
+    n_bytes = sum(x.size // agents * x.dtype.itemsize
+                  for x in jax.tree.leaves(stacked))
+    ep = dataclasses.replace(
+        energy.paper_calibrated("fig3"), model_bits=float(n_bytes) * 8,
+        devices_per_cluster=agents // tasks, B_i=local_steps)
+    want = tasks * energy.fl_energy(ep, rounds,
+                                    topology=topo_lib.clusters(1, 4))
+    assert np.isclose(E, want)
+    # and the comm share reflects 12 links, not the legacy 4
+    assert energy.fl_comm_energy(ep, rounds, topo_lib.clusters(1, 4)) \
+        == pytest.approx(3 * energy.fl_comm_energy(ep, rounds))
