@@ -1,4 +1,5 @@
-"""Consensus-round scaling sweep: K × topology × dtype (Eq. 6 hot path).
+"""Consensus-round scaling sweep: K × topology × dtype (Eq. 6 hot path),
+plus the model-exchange CODEC sweep (bits-vs-joules axis).
 
 For each population size K ∈ {12, 64, 256, 1024}, graph family, and dtype
 this times one dense-stacked consensus round under both execution paths —
@@ -14,9 +15,18 @@ AND modeled joules per topology. A bit-equivalence check (auto vs the
 per-agent ``ref.consensus_update_reference`` oracle) runs at K=256 for
 every family in the sweep.
 
+The codec sweep (``codec_rows``) times one COMPRESSED consensus round
+(:mod:`repro.comms` wire formats through ``consensus_step(codec=...)``,
+error feedback on) per codec × topology and records the codec-priced
+Eq.-(11) joules; ``casestudy_eq11`` reprices the paper's 12-robot
+(6 clusters × 2) case study round at every compression level with the
+paper-calibrated b(W) — the headline artifact entry: int8 cuts the
+modeled round joules 4× vs the f32 exchange (2× vs bf16), int4 8×.
+
 Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
 
-Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick]
+Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick|--smoke]
+(``--smoke``: K=64, ring, int8 only — the CI tier-1 benchmark check.)
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comms
 from repro.core import consensus, energy
 from repro.core import topology as topo_lib
 from repro.kernels import ref
@@ -38,6 +49,8 @@ FAMILIES = ("ring", "torus", "small_world", "star", "cluster",
 DTYPES = ("float32", "bfloat16")
 N_PARAMS = 2048          # flat params per agent (CPU-tractable at K=1024)
 EQUIV_K = 256
+CODECS = comms.CODECS    # none / bf16 / int8 / int4 / topk:0.05
+CODEC_KS = (12, 64)      # codec wall-clock sweep sizes
 
 
 def _time(fn, *args, reps=3, warmup=1):
@@ -121,27 +134,118 @@ def sweep(ks, families, dtypes, *, equiv_k=EQUIV_K):
     return rows
 
 
+def codec_sweep(ks, families, codecs):
+    """Wall-clock + codec-priced Eq.-(11) joules of one COMPRESSED
+    consensus round per codec × topology (error feedback on, impl=auto).
+    """
+    p_cal = energy.paper_calibrated("fig3")
+    rows = []
+    for K in ks:
+        x = _stacked(K, jnp.float32)
+        for fam in families:
+            try:
+                topo = topo_lib.make(fam, K)
+            except ValueError as e:
+                print(f"skip {fam} K={K}: {e}")
+                continue
+            mix = topo.mixing()
+            full_bits = N_PARAMS * 32
+            for spec in codecs:
+                codec = comms.resolve_codec(spec)
+                joules = topo.round_comm_joules(p_cal, model_bits=full_bits,
+                                                codec=codec)
+                if codec is None:
+                    step = jax.jit(lambda s, st, k: (
+                        consensus.consensus_step(s, mix, impl="auto"), st))
+                    state = None
+                else:
+                    step = jax.jit(lambda s, st, k: consensus.consensus_step(
+                        s, mix, impl="auto", codec=codec, codec_state=st,
+                        key=k))
+                    state = (codec.init_state(x) if codec.stateful else None)
+                key = jax.random.PRNGKey(0)
+
+                def run(s, st, k):
+                    out, _ = step(s, st, k)
+                    return out
+
+                us = _time(run, x, state, key)
+                name = codec.name if codec is not None else "none"
+                rows.append(dict(
+                    K=K, topology=fam, codec=name,
+                    wire_bits_per_model=(codec.price_bits(full_bits)
+                                         if codec is not None
+                                         else float(full_bits)),
+                    joules_eq11_per_round=joules,
+                    us_per_round=us,
+                    auto_path=consensus.auto_path(
+                        mix, getattr(codec, "inner", codec))))
+                print(f"K={K:5d} {fam:12s} codec={name:10s} "
+                      f"{us:10.1f}us  eq11 {joules:10.4f} J/round")
+    return rows
+
+
+def casestudy_eq11(codecs):
+    """Codec-priced Eq.-(11) joules of ONE consensus round of the paper's
+    12-robot case study (6 clusters × 2 robots, calibrated b(W))."""
+    p_cal = energy.paper_calibrated("fig3")
+    topo = topo_lib.clusters(6, 2)        # the paper's Sect.-IV graph
+    out = {}
+    base = topo.round_comm_joules(p_cal)
+    for spec in codecs:
+        j = topo.round_comm_joules(p_cal, codec=spec)
+        name = comms.resolve_codec(spec).name if spec is not None else "none"
+        out[name] = {"joules_eq11_per_round": j,
+                     "drop_vs_uncompressed": base / j}
+        print(f"casestudy 12-robot  codec={name:10s} "
+              f"eq11 {j:8.2f} J/round  ({base / j:.1f}x vs f32)")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="K <= 256, f32 only (CI-sized)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="codec smoke only: K=64, ring, int8 (tier-1 CI)")
+    ap.add_argument("--codec", default=None,
+                    help="comma list of codec specs for the codec sweep "
+                         f"(default: {','.join(c or 'none' for c in CODECS)})")
     ap.add_argument("--out", default="BENCH_consensus_scale.json")
     args = ap.parse_args()
 
-    ks = tuple(k for k in KS if k <= 256) if args.quick else KS
-    dtypes = ("float32",) if args.quick else DTYPES
-    rows = sweep(ks, FAMILIES, dtypes)
+    codecs = (tuple(None if c in ("none", "") else c
+                    for c in args.codec.split(","))
+              if args.codec else (None,) + tuple(c for c in CODECS
+                                                 if c != "none"))
+    if args.smoke:
+        ks, families, dtypes = (64,), ("ring",), ("float32",)
+        rows, codec_rows = [], codec_sweep((64,), ("ring",), ("int8",))
+        cs = casestudy_eq11((None, "int8"))
+        assert cs["int8+ef"]["drop_vs_uncompressed"] >= 3.0
+    else:
+        ks = tuple(k for k in KS if k <= 256) if args.quick else KS
+        dtypes = ("float32",) if args.quick else DTYPES
+        families = FAMILIES
+        rows = sweep(ks, families, dtypes)
+        codec_rows = codec_sweep(CODEC_KS, families, codecs)
+        cs = casestudy_eq11(codecs)
     payload = {
         "bench": "consensus_scale",
         "backend": jax.default_backend(),
         "n_params_per_agent": N_PARAMS,
-        "ks": list(ks), "families": list(FAMILIES),
+        "ks": list(ks), "families": list(families),
         "dtypes": list(dtypes),
         "rows": rows,
+        "codec_rows": codec_rows,
+        "casestudy_eq11": cs,
     }
+    if args.smoke:
+        payload["smoke"] = True
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
-    print(f"wrote {args.out} ({len(rows)} rows)")
+    print(f"wrote {args.out} ({len(rows)} rows, "
+          f"{len(codec_rows)} codec rows)")
 
 
 if __name__ == "__main__":

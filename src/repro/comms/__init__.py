@@ -1,0 +1,22 @@
+"""Compressed model-exchange subsystem.
+
+Everything a consensus round (Eq. 6) or a federated exchange sends over
+the air goes through a :class:`~repro.comms.codecs.Codec`: ``encode``
+turns a parameter pytree into a wire representation, ``decode`` turns it
+back, and ``bits`` prices the wire EXACTLY — which is what makes the
+paper's Eq.-(11) communication energy a function of the codec instead of
+a constant b(W). See :mod:`repro.comms.codecs` for the codec zoo
+(bf16 cast, stochastic-rounding int8/int4, top-k sparsification) and the
+error-feedback wrapper that keeps compressed consensus convergent.
+"""
+from repro.comms.codecs import (           # noqa: F401
+    CODECS,
+    Codec,
+    Bf16Codec,
+    ErrorFeedback,
+    IdentityCodec,
+    IntCodec,
+    TopKCodec,
+    get_codec,
+    resolve_codec,
+)

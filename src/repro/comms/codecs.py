@@ -1,0 +1,376 @@
+"""Model-exchange codecs — the "bytes knob" of the paper's Eq. (11).
+
+A :class:`Codec` maps a parameter pytree to a wire representation and
+back, and prices the wire exactly in bits:
+
+    wire  = codec.encode(tree, key)      # key: stochastic rounding
+    tree' = codec.decode(wire)
+    codec.bits(wire)                     # EXACT wire size in bits
+    codec.price_bits(full_bits)          # static Eq.-(11) pricing: the
+                                         # wire bits of a model whose
+                                         # full-precision size is b(W)
+
+Implementations
+---------------
+* ``IdentityCodec``  — f32 passthrough (32 bit/param), the uncompressed
+  baseline every sweep is measured against.
+* ``Bf16Codec``      — bf16 cast (16 bit/param), the paper-era default.
+* ``IntCodec(8|4)``  — per-tensor absmax-scaled integer quantization
+  (8 or 4 bit/param + one f32 scale per tensor) with optional stochastic
+  rounding (pass a PRNG key to ``encode``) so the quantizer is unbiased.
+* ``TopKCodec``      — magnitude top-k sparsification; the wire is
+  (int32 index, f32 value) pairs, 64 bit per kept entry.
+* ``ErrorFeedback``  — wrapper holding a per-round residual r: each round
+  encodes ``x + r`` and accumulates the compression error back into r,
+  so the time-average of the decoded stream is unbiased and compressed
+  consensus (Eq. 6) still contracts to the uncompressed fixed point.
+
+All leaf-level methods (``encode_leaf`` / ``decode_leaf``) are pure
+traced jax functions — ``jax.vmap`` over a leading agent axis gives the
+per-agent wires of one consensus round (per-(agent, tensor) scales).
+Pytree-level ``encode``/``decode`` carry the treedef and leaf metadata
+statically and are host-side conveniences.
+
+``get_codec`` parses string specs (``"int8"``, ``"int4"``, ``"bf16"``,
+``"topk:0.05"``, ``"topk:64"``, optional ``"+ef"`` suffix);
+``resolve_codec`` additionally applies the error-feedback default used
+by the consensus path.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+F32_BITS = 32.0
+SCALE_BITS = 32.0        # one f32 scale per quantized tensor
+IDX_BITS = 32.0          # int32 index per kept top-k entry
+
+
+@dataclass
+class Wire:
+    """A codec'd pytree: per-leaf payloads + static structure metadata."""
+
+    codec: str
+    payloads: List[Any]                    # per-leaf dicts of arrays
+    treedef: Any
+    leaves_meta: List[jax.ShapeDtypeStruct]
+
+    def __iter__(self):                    # allow tuple-unpacking styles
+        return iter((self.codec, self.payloads))
+
+
+def _sds(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def _stochastic_round(y, key):
+    """floor(y + u), u ~ U[0, 1): unbiased rounding, E[round] = y."""
+    if key is None:
+        return jnp.round(y)
+    u = jax.random.uniform(key, jnp.shape(y), jnp.float32)
+    return jnp.floor(y + u)
+
+
+class Codec:
+    """Uniform model-exchange compression API (see module docstring)."""
+
+    name: str = "codec"
+    stateful: bool = False
+    #: wire bits per parameter (None when size-dependent, e.g. absolute
+    #: top-k) — drives the consensus auto dense-vs-sparse heuristic.
+    bits_per_param: Optional[float] = None
+
+    # -- leaf level (pure jax, vmappable) -----------------------------------
+    def encode_leaf(self, x, key=None):
+        raise NotImplementedError
+
+    def decode_leaf(self, payload, like):
+        """Reconstruct a tensor of ``like``'s shape/dtype from a payload."""
+        raise NotImplementedError
+
+    def leaf_bits(self, shape) -> float:
+        """EXACT wire bits for one tensor of ``shape``."""
+        raise NotImplementedError
+
+    # -- pytree level -------------------------------------------------------
+    def encode(self, tree, key=None) -> Wire:
+        leaves, treedef = jax.tree.flatten(tree)
+        keys = ([None] * len(leaves) if key is None
+                else list(jax.random.split(key, max(len(leaves), 1))))
+        payloads = [self.encode_leaf(x, k) for x, k in zip(leaves, keys)]
+        return Wire(self.name, payloads, treedef,
+                    [_sds(x) for x in leaves])
+
+    def decode(self, wire: Wire):
+        leaves = [self.decode_leaf(p, m)
+                  for p, m in zip(wire.payloads, wire.leaves_meta)]
+        return jax.tree.unflatten(wire.treedef, leaves)
+
+    def bits(self, wire: Wire) -> float:
+        """Exact wire size of one encoded model, in bits."""
+        return float(sum(self.leaf_bits(m.shape)
+                         for m in wire.leaves_meta))
+
+    def model_bits(self, tree) -> float:
+        """Exact wire bits this codec would use for ``tree`` (no encode)."""
+        return float(sum(self.leaf_bits(jnp.shape(x))
+                         for x in jax.tree.leaves(tree)))
+
+    # -- static Eq.-(11) pricing -------------------------------------------
+    def price_bits(self, full_bits: float,
+                   ref_bits: float = F32_BITS) -> float:
+        """Wire bits of a model whose FULL-precision size is ``full_bits``
+        (b(W) of the paper, ``ref_bits`` per parameter). Per-tensor scale
+        overhead is excluded — it is unknowable from a byte count alone
+        and negligible for any real model; ``bits()`` is the exact form.
+        """
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class IdentityCodec(Codec):
+    """f32 passthrough — the uncompressed baseline."""
+
+    name = "none"
+    bits_per_param = F32_BITS
+
+    def encode_leaf(self, x, key=None):
+        return {"v": jnp.asarray(x, jnp.float32)}
+
+    def decode_leaf(self, payload, like):
+        return payload["v"].reshape(like.shape).astype(like.dtype)
+
+    def leaf_bits(self, shape) -> float:
+        return F32_BITS * math.prod(shape)
+
+    def price_bits(self, full_bits, ref_bits=F32_BITS):
+        return full_bits * F32_BITS / ref_bits
+
+
+class Bf16Codec(Codec):
+    """bf16 cast: 16 bit/param, ~3 decimal digits of mantissa."""
+
+    name = "bf16"
+    bits_per_param = 16.0
+
+    def encode_leaf(self, x, key=None):
+        return {"v": jnp.asarray(x).astype(jnp.bfloat16)}
+
+    def decode_leaf(self, payload, like):
+        return payload["v"].reshape(like.shape).astype(like.dtype)
+
+    def leaf_bits(self, shape) -> float:
+        return 16.0 * math.prod(shape)
+
+    def price_bits(self, full_bits, ref_bits=F32_BITS):
+        return full_bits * 16.0 / ref_bits
+
+
+class IntCodec(Codec):
+    """Per-tensor absmax-scaled ``bits``-bit integer quantization.
+
+    q = clip(round(x / s), ±qmax), s = absmax / qmax; the wire carries q
+    (``bits`` bits each — int4 values are stored in int8 lanes on-device
+    but PRICED at 4 bits, i.e. two values per wire byte) plus one f32
+    scale per tensor. With a PRNG key the rounding is stochastic
+    (unbiased); without, round-to-nearest.
+    """
+
+    def __init__(self, bits: int):
+        if bits not in (4, 8):
+            raise ValueError(f"IntCodec supports 4/8 bits, got {bits}")
+        self.qbits = bits
+        self.qmax = float(2 ** (bits - 1) - 1)
+        self.name = f"int{bits}"
+        self.bits_per_param = float(bits)
+
+    def encode_leaf(self, x, key=None):
+        xf = jnp.asarray(x, jnp.float32)
+        absmax = jnp.max(jnp.abs(xf))
+        scale = jnp.maximum(absmax, 1e-12) / self.qmax
+        q = _stochastic_round(xf / scale, key)
+        q = jnp.clip(q, -self.qmax, self.qmax).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+
+    def decode_leaf(self, payload, like):
+        y = payload["q"].astype(jnp.float32) * payload["scale"]
+        return y.reshape(like.shape).astype(like.dtype)
+
+    def leaf_bits(self, shape) -> float:
+        return float(self.qbits) * math.prod(shape) + SCALE_BITS
+
+    def price_bits(self, full_bits, ref_bits=F32_BITS):
+        return full_bits * self.qbits / ref_bits
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification over each flattened tensor.
+
+    ``k``: fraction of entries kept when < 1, absolute count otherwise.
+    Wire per tensor: k' (int32 idx, f32 value) pairs, 64 bits each, where
+    k' = max(1, round(k·n)) (fraction) or min(k, n) (absolute).
+    """
+
+    def __init__(self, k: float = 0.05):
+        if k <= 0:
+            raise ValueError(f"top-k needs k > 0, got {k}")
+        self.k = k
+        kname = f"{k:g}"
+        self.name = f"topk:{kname}"
+        # fractional k has a well-defined per-param wire cost; absolute k
+        # depends on the tensor size, so leave it None (assume dense).
+        self.bits_per_param = k * (IDX_BITS + F32_BITS) if k < 1 else None
+
+    def _k_of(self, n: int) -> int:
+        if self.k < 1:
+            return max(1, int(round(self.k * n)))
+        return min(int(self.k), n)
+
+    def encode_leaf(self, x, key=None):
+        flat = jnp.asarray(x, jnp.float32).ravel()
+        k = self._k_of(flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx.astype(jnp.int32), "val": flat[idx]}
+
+    def decode_leaf(self, payload, like):
+        n = math.prod(like.shape)
+        y = jnp.zeros((n,), jnp.float32
+                      ).at[payload["idx"]].set(payload["val"])
+        return y.reshape(like.shape).astype(like.dtype)
+
+    def leaf_bits(self, shape) -> float:
+        return self._k_of(math.prod(shape)) * (IDX_BITS + F32_BITS)
+
+    def price_bits(self, full_bits, ref_bits=F32_BITS):
+        """Static pricing treats the model as ONE flat tensor: fractional
+        k is exact up to the per-leaf max(1, round(...)) granularity, but
+        ABSOLUTE k under-counts a multi-tensor model (the real wire keeps
+        k entries PER TENSOR — use ``model_bits(tree)`` / ``bits(wire)``
+        for the exact figure, or fractional k for pricing sweeps)."""
+        n = full_bits / ref_bits
+        if self.k < 1:
+            kept = max(1.0, round(self.k * n))
+        else:
+            kept = min(float(self.k), n)
+        return kept * (IDX_BITS + F32_BITS)
+
+
+class ErrorFeedback(Codec):
+    """Residual-accumulating wrapper: encode(x + r), r ← (x + r) − x̂.
+
+    The compression error of every round is fed back into the next
+    round's message, so the decoded stream is unbiased over time and
+    compressed consensus keeps the uncompressed fixed point (the
+    standard EF-SGD / CHOCO argument). State is a pytree of f32
+    residuals shaped like the model; thread it through
+    ``encode_stateful``.
+    """
+
+    stateful = True
+
+    def __init__(self, inner: Codec):
+        if isinstance(inner, ErrorFeedback):
+            raise ValueError("cannot nest ErrorFeedback")
+        self.inner = inner
+        self.name = inner.name + "+ef"
+        self.bits_per_param = inner.bits_per_param
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, tree):
+        return jax.tree.map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), tree)
+
+    def init_leaf_state(self, x):
+        return jnp.zeros(jnp.shape(x), jnp.float32)
+
+    # -- leaf level ---------------------------------------------------------
+    def encode_leaf_stateful(self, x, residual, key=None):
+        """Returns (payload, decoded x̂ as f32, new residual)."""
+        m = jnp.asarray(x, jnp.float32) + residual
+        payload = self.inner.encode_leaf(m, key)
+        xhat = self.inner.decode_leaf(
+            payload, jax.ShapeDtypeStruct(jnp.shape(x), jnp.float32))
+        return payload, xhat, m - xhat
+
+    def encode_leaf(self, x, key=None):       # stateless fallback (r = 0)
+        return self.inner.encode_leaf(x, key)
+
+    def decode_leaf(self, payload, like):
+        return self.inner.decode_leaf(payload, like)
+
+    def leaf_bits(self, shape) -> float:
+        return self.inner.leaf_bits(shape)
+
+    # -- pytree level -------------------------------------------------------
+    def encode_stateful(self, tree, state, key=None):
+        """(wire, new_state) — the round's message and carried residual."""
+        leaves, treedef = jax.tree.flatten(tree)
+        res = jax.tree.unflatten(treedef, jax.tree.leaves(state)) \
+            if state is not None else self.init_state(tree)
+        res_leaves = jax.tree.leaves(res)
+        keys = ([None] * len(leaves) if key is None
+                else list(jax.random.split(key, max(len(leaves), 1))))
+        payloads, new_res = [], []
+        for x, r, k in zip(leaves, res_leaves, keys):
+            p, _, nr = self.encode_leaf_stateful(x, r, k)
+            payloads.append(p)
+            new_res.append(nr)
+        wire = Wire(self.name, payloads, treedef,
+                    [_sds(x) for x in leaves])
+        return wire, jax.tree.unflatten(treedef, new_res)
+
+    def price_bits(self, full_bits, ref_bits=F32_BITS):
+        return self.inner.price_bits(full_bits, ref_bits)
+
+
+# ---------------------------------------------------------------------------
+# registry / spec parsing
+# ---------------------------------------------------------------------------
+
+#: canonical sweep order for benchmarks: uncompressed baseline first.
+CODECS = ("none", "bf16", "int8", "int4", "topk:0.05")
+
+
+def get_codec(spec) -> Optional[Codec]:
+    """Parse a codec spec: a Codec (returned as-is), None, or a string —
+    ``none|f32|identity``, ``bf16``, ``int8``, ``int4``, ``topk[:k]``,
+    each with an optional ``+ef`` error-feedback suffix."""
+    if spec is None or isinstance(spec, Codec):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"codec spec must be str/Codec/None, got {spec!r}")
+    name = spec.strip().lower()
+    ef = name.endswith("+ef")
+    if ef:
+        name = name[:-3]
+    if name in ("none", "f32", "identity"):
+        codec = IdentityCodec()
+    elif name == "bf16":
+        codec = Bf16Codec()
+    elif name == "int8":
+        codec = IntCodec(8)
+    elif name == "int4":
+        codec = IntCodec(4)
+    elif name.startswith("topk"):
+        _, _, arg = name.partition(":")
+        codec = TopKCodec(float(arg)) if arg else TopKCodec()
+    else:
+        raise ValueError(f"unknown codec {spec!r}; "
+                         f"choose from {CODECS} (+ optional '+ef')")
+    return ErrorFeedback(codec) if ef else codec
+
+
+def resolve_codec(spec, error_feedback: bool = True) -> Optional[Codec]:
+    """``get_codec`` plus the consensus-path default: wrap lossy codecs in
+    :class:`ErrorFeedback` unless already wrapped or disabled. The
+    identity codec is never wrapped (its residual is identically 0)."""
+    codec = get_codec(spec)
+    if codec is None or isinstance(codec, (ErrorFeedback, IdentityCodec)):
+        return codec
+    return ErrorFeedback(codec) if error_feedback else codec

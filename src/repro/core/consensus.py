@@ -99,18 +99,35 @@ def resolve_mix(mix, data_sizes=None, kind: str = "paper",
     return mix
 
 
-def auto_path(mix) -> str:
+def auto_path(mix, codec=None) -> str:
     """What ``impl="auto"`` resolves to for this (concrete) mix: the sparse
     gather only wins while the graph is actually sparse — on dense graphs
     (max degree > K/4, e.g. star or full) the gathered (K, H, N) neighbour
     tensor exceeds the (K, K) matmul's traffic and ``auto`` falls back to
-    the dense path."""
+    the dense path.
+
+    With an int8 ``codec`` the gathered payload is the WIRE format, not
+    f32 — the fused dequant-consensus kernel consumes int8 neighbour
+    blocks directly, a quarter of the bytes — so the degree is
+    discounted by the codec's bits-per-parameter before comparing
+    against the dense threshold (the dense matmul always runs on decoded
+    f32). The discount applies ONLY to codecs whose sparse path gathers
+    the wire itself (today: int8 through the fused kernel); every other
+    codec decodes to f32 BEFORE the gather, so its degree counts at full
+    width. The old heuristic ignored payload bytes entirely and kicked
+    graphs to the dense path that a compressed gather serves cheaper.
+    """
     M = np.asarray(mix)
     K = M.shape[0]
     off = M.copy()
     np.fill_diagonal(off, 0.0)
     H = int((off != 0).sum(axis=1).max()) if K else 0
-    return "sparse" if H <= max(K // 4, 1) else "dense"
+    codec = getattr(codec, "inner", codec)       # unwrap ErrorFeedback
+    bpp = getattr(codec, "bits_per_param", None) if codec is not None \
+        else None
+    gathers_wire = getattr(codec, "qbits", None) == 8
+    h_eff = H * (bpp / 32.0) if (bpp and gathers_wire) else float(H)
+    return "sparse" if h_eff <= max(K // 4, 1) else "dense"
 
 
 def sparse_structure(mix):
@@ -141,7 +158,9 @@ def sparse_structure(mix):
 
 
 def consensus_step(stacked_params, mix, *, impl: str = "xla",
-                   block_n: Optional[int] = None):
+                   block_n: Optional[int] = None,
+                   codec=None, codec_state=None, key=None,
+                   error_feedback: bool = True, gamma: float = 1.0):
     """Eq. (6) on agent-stacked params (leading axis K). mix: (K, K) σ or a
     :class:`repro.core.topology.Topology` (uniform paper weights).
 
@@ -157,7 +176,26 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
         pure-jnp kernel oracle (bit-identical to
         ``ref.consensus_update_reference`` per agent); for dense graphs
         (star, full — max degree > K/4) it falls back to the dense matmul,
-        which moves strictly fewer bytes there.
+        which moves strictly fewer bytes there. With a codec the
+        threshold is payload-aware (:func:`auto_path`).
+
+    codec — compress the EXCHANGED models (:mod:`repro.comms`): a spec
+    string (``"int8"``, ``"bf16"``, ``"topk:0.05"``, …) or Codec. Every
+    agent consumes its neighbours' DECODED models x̂_h and recenters on
+    its own decoded copy: W_k + Σ_h σ_{k,h} (x̂_h − x̂_k), which keeps the
+    population mean exact under doubly-stochastic σ regardless of the
+    compression (the CHOCO-gossip identity). Lossy codecs are wrapped in
+    :class:`~repro.comms.codecs.ErrorFeedback` by default
+    (``error_feedback=False`` opts out) so the per-round quantization
+    error telescopes instead of accumulating; ``codec_state`` is the
+    stacked residual pytree (None ⇒ zeros) and ``key`` enables
+    stochastic rounding; ``gamma`` damps the off-diagonal σ (CHOCO-style
+    consensus step size — aggressive sparsifiers like top-k need γ < 1
+    to contract). With a codec the return value is
+    ``(new_stacked_params, new_codec_state)``; without, just the params
+    (unchanged API). int8 wires route through the fused
+    dequantize-consensus kernel on the sparse path
+    (:mod:`repro.kernels.quant_consensus`).
 
     The sparse paths need a CONCRETE mix (numpy / non-traced) — the
     neighbour structure is extracted at trace time.
@@ -165,6 +203,16 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
     mix = resolve_mix(mix)
     if impl not in ("xla", "pallas", "auto"):
         raise ValueError(f"unknown impl {impl!r}; use xla/pallas/auto")
+    if codec is None and (codec_state is not None or gamma != 1.0):
+        raise ValueError(
+            "codec_state/gamma only apply to compressed consensus — "
+            "pass codec= (they would be silently ignored otherwise)")
+    if codec is not None:
+        from repro import comms   # deferred: core stays import-light
+        codec = comms.resolve_codec(codec, error_feedback)
+        return _compressed_consensus_step(
+            stacked_params, mix, codec, codec_state, key,
+            impl=impl, block_n=block_n, gamma=gamma)
     if impl == "auto" and auto_path(mix) == "dense":
         impl = "xla"
     if impl == "xla":
@@ -201,6 +249,106 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
         return y.reshape(x.shape).astype(x.dtype)
 
     return jax.tree.map(mix_leaf, stacked_params)
+
+
+def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
+                               key, *, impl: str, block_n: Optional[int],
+                               gamma: float = 1.0):
+    """Eq. (6) over codec'd exchanges (see :func:`consensus_step`).
+
+    Per leaf: (1) each agent encodes its message m_k = W_k + r_k (r = 0
+    without error feedback) to the wire format and decodes x̂_k back,
+    (2) the mixing update runs on the decoded models around the agent's
+    own decoded copy, (3) residuals carry the compression error to the
+    next round. int8 wires take the fused Pallas dequant-consensus
+    kernel on the sparse path; other codecs decode first and reuse the
+    plain consensus kernel.
+    """
+    from repro import comms
+    from repro.kernels import ops
+
+    base = codec.inner if isinstance(codec, comms.ErrorFeedback) else codec
+    stateful = isinstance(codec, comms.ErrorFeedback)
+
+    if impl == "auto":
+        impl = "xla" if auto_path(mix, codec=base) == "dense" else "sparse"
+    use_pallas = impl == "pallas" or (impl == "sparse"
+                                      and jax.default_backend() == "tpu")
+    sparse = impl in ("pallas", "sparse")
+    kernel_impl = ("pallas" if jax.default_backend() == "tpu"
+                   else "interpret") if use_pallas else "xla"
+    kw = {} if block_n is None else {"block_n": block_n}
+
+    if sparse:
+        idx_np, sig_np = sparse_structure(mix)
+        idx, sig = jnp.asarray(idx_np), gamma * jnp.asarray(sig_np)
+    else:
+        M = jnp.asarray(mix, jnp.float32)
+        off = gamma * (M - jnp.diag(jnp.diag(M)))
+        rowsum = off.sum(axis=1)
+
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    if stateful:
+        state_leaves = (jax.tree.leaves(codec_state)
+                        if codec_state is not None
+                        else [jnp.zeros(jnp.shape(x), jnp.float32)
+                              for x in leaves])
+        if len(state_leaves) != len(leaves):
+            raise ValueError("codec_state does not match stacked_params")
+    else:
+        state_leaves = [None] * len(leaves)
+
+    new_leaves, new_state = [], []
+    for li, (x, r) in enumerate(zip(leaves, state_leaves)):
+        K = x.shape[0]
+        xf = x.astype(jnp.float32).reshape(K, -1)
+        agent_keys = (None if key is None else
+                      jax.random.split(jax.random.fold_in(key, li), K))
+
+        if stateful:     # the EF identity lives in ONE place: the codec
+            step_fn = (lambda mm, rr, kk=None:
+                       codec.encode_leaf_stateful(mm, rr, kk))
+            if agent_keys is None:
+                enc, xhat, r_new = jax.vmap(step_fn)(xf, r.reshape(K, -1))
+            else:
+                enc, xhat, r_new = jax.vmap(step_fn)(xf, r.reshape(K, -1),
+                                                     agent_keys)
+        else:
+            if agent_keys is None:
+                enc = jax.vmap(lambda mm: base.encode_leaf(mm, None))(xf)
+            else:
+                enc = jax.vmap(base.encode_leaf)(xf, agent_keys)
+            like = jax.ShapeDtypeStruct(xf.shape[1:], jnp.float32)
+            xhat = jax.vmap(lambda p: base.decode_leaf(p, like))(enc)
+
+        if sparse and isinstance(base, comms.IntCodec) \
+                and base.qbits == 8:
+            q, s = enc["q"], enc["scale"]
+
+            def one(xk, qk, sk, ik, sgk):
+                return ops.quant_consensus_update(
+                    xk, qk, sk, q[ik], s[ik], sgk,
+                    impl=kernel_impl, **kw)
+
+            y = jax.vmap(one)(xf, q, s, idx, sig)
+        elif sparse:
+            def one(xk, xhk, ik, sgk):
+                mixed_hat = ops.consensus_update(
+                    xhk, xhat[ik], sgk, impl=kernel_impl, **kw)
+                return xk + (mixed_hat - xhk)
+
+            y = jax.vmap(one)(xf, xhat, idx, sig)
+        else:
+            y = xf + off @ xhat - rowsum[:, None] * xhat
+
+        new_leaves.append(y.reshape(x.shape).astype(x.dtype))
+        if stateful:
+            new_state.append(r_new.reshape(x.shape))
+
+    new_params = jax.tree.unflatten(treedef, new_leaves)
+    state_out = (jax.tree.unflatten(treedef, new_state)
+                 if stateful else None)
+    return new_params, state_out
 
 
 def consensus_error(stacked_params) -> jnp.ndarray:

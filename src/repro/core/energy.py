@@ -151,27 +151,37 @@ def fl_learning_energy(p: EnergyParams, t_i: float, topology=None) -> float:
     return t_i * devices * p.B_i * p.Ek_C
 
 
-def fl_comm_energy(p: EnergyParams, t_i: float, topology=None) -> float:
+def fl_comm_energy(p: EnergyParams, t_i: float, topology=None,
+                   codec=None) -> float:
     """Eq.-(11) communication term. With a ``topology``
     (:class:`repro.core.topology.Topology`) the link count and per-link
     classes come from the graph's actual directed edges; without one, the
     legacy 2-robot constants ``devices_per_cluster × neighbors_per_device``
     are used (all-SL).
 
+    ``codec`` (spec string or :class:`repro.comms.codecs.Codec`) prices
+    each exchanged model at its WIRE size — ``codec.price_bits(b(W))``
+    instead of the full-precision b(W) — making Eq. (11) codec-aware.
+
     ``topology`` is a SINGLE cluster C_i's graph — pass
     ``ClusterNetwork.cluster_topology()`` / ``topology.clusters(1, per)``.
     Eqs. (10)–(12) sum per task, so passing the whole population graph
     here would price every cluster's links into each task."""
     if topology is not None:
-        return t_i * topology.round_comm_joules(p)
+        return t_i * topology.round_comm_joules(p, codec=codec)
+    bits = p.model_bits
+    if codec is not None:
+        from repro import comms     # deferred: avoid import cycles
+        bits = comms.get_codec(codec).price_bits(bits)
     links = p.devices_per_cluster * p.neighbors_per_device
-    return p.model_bits * t_i * links * sidelink_cost_per_bit(p)
+    return bits * t_i * links * sidelink_cost_per_bit(p)
 
 
-def fl_energy(p: EnergyParams, t_i: float, topology=None) -> float:
+def fl_energy(p: EnergyParams, t_i: float, topology=None,
+              codec=None) -> float:
     """Eq. (10) for one task (cluster graph supplied via ``topology``)."""
     return (fl_learning_energy(p, t_i, topology)
-            + fl_comm_energy(p, t_i, topology))
+            + fl_comm_energy(p, t_i, topology, codec))
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +190,9 @@ def fl_energy(p: EnergyParams, t_i: float, topology=None) -> float:
 
 
 def total_energy(p: EnergyParams, t0: int, Q: int,
-                 t_is: Sequence[float], topology=None) -> float:
-    return maml_energy(p, t0, Q) + sum(fl_energy(p, t, topology)
+                 t_is: Sequence[float], topology=None,
+                 codec=None) -> float:
+    return maml_energy(p, t0, Q) + sum(fl_energy(p, t, topology, codec)
                                        for t in t_is)
 
 

@@ -29,18 +29,28 @@ def local_steps(loss_fn, params, batches, lr: float):
 
 
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
-                           mix, lr: float, impl: str = "xla"):
+                           mix, lr: float, impl: str = "xla",
+                           codec=None, codec_state=None, key=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step with the σ weights.
 
     stacked_params / stacked_batches: leading agent axis K (vmapped).
     ``mix`` may be a (K, K) σ matrix or a Topology; ``impl`` selects the
     consensus execution path (see :func:`consensus.consensus_step`).
+
+    ``codec``: compress the exchanged models (:mod:`repro.comms`) —
+    returns ``(params, new_codec_state)`` and the round's sidelink bytes
+    become the codec's wire size (Eq. 11); without a codec, returns just
+    the params as before. ``key`` enables stochastic rounding.
     """
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
-    return consensus.consensus_step(new_params, mix, impl=impl)
+    if codec is None:
+        return consensus.consensus_step(new_params, mix, impl=impl)
+    return consensus.consensus_step(new_params, mix, impl=impl,
+                                    codec=codec, codec_state=codec_state,
+                                    key=key)
 
 
 def fedavg_round(loss_fn, global_params, stacked_batches, weights,
@@ -64,7 +74,7 @@ def fedavg_round(loss_fn, global_params, stacked_batches, weights,
 
 def run_fl_until(loss_fn, stacked_params, sample_batches, mix, lr: float,
                  *, target_fn: Callable, max_rounds: int, key,
-                 eval_every: int = 1, impl: str = "xla"):
+                 eval_every: int = 1, impl: str = "xla", codec=None):
     """Drive decentralized FL rounds until ``target_fn(stacked_params) >=
     target`` (it returns (reached: bool, metric)) or ``max_rounds``.
 
@@ -72,15 +82,33 @@ def run_fl_until(loss_fn, stacked_params, sample_batches, mix, lr: float,
     t_i (rounds to reach running reward R) is measured. ``mix`` may be a
     σ matrix or a Topology (closed over so the sparse consensus paths see
     the concrete neighbour structure at trace time).
+
+    ``codec``: spec string / Codec — compress every model exchange. The
+    codec's error-feedback residual state is threaded across rounds here
+    (one residual pytree per agent, carried like the params).
     """
-    step = jax.jit(lambda sp, b: decentralized_fl_round(
-        loss_fn, sp, b, mix, lr, impl=impl))
+    if codec is not None:
+        from repro import comms
+        codec = comms.resolve_codec(codec)
+        step = jax.jit(lambda sp, st, b, k: decentralized_fl_round(
+            loss_fn, sp, b, mix, lr, impl=impl, codec=codec,
+            codec_state=st, key=k))
+        codec_state = (codec.init_state(stacked_params)
+                       if codec.stateful else None)
+    else:
+        step = jax.jit(lambda sp, b: decentralized_fl_round(
+            loss_fn, sp, b, mix, lr, impl=impl))
     history = []
     rounds_used = max_rounds
     for t in range(max_rounds):
         key, sk = jax.random.split(key)
         batches = sample_batches(sk, t)
-        stacked_params = step(stacked_params, batches)
+        if codec is not None:
+            key, ck = jax.random.split(key)
+            stacked_params, codec_state = step(stacked_params, codec_state,
+                                               batches, ck)
+        else:
+            stacked_params = step(stacked_params, batches)
         if (t + 1) % eval_every == 0:
             reached, metric = target_fn(stacked_params)
             history.append(float(metric))

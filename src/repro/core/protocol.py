@@ -34,6 +34,9 @@ class ProtocolResult:
     energy_params: energy.EnergyParams
     Q: int
     cluster_topology: Optional[topo_lib.Topology] = None
+    #: model-exchange codec (spec string or Codec) — prices each stage-2
+    #: sidelink message at its wire size in Eq. (11)
+    codec: object = None
 
     @property
     def E_ML(self) -> float:
@@ -42,7 +45,7 @@ class ProtocolResult:
     @property
     def E_FL(self) -> List[float]:
         return [energy.fl_energy(self.energy_params, t,
-                                 self.cluster_topology)
+                                 self.cluster_topology, self.codec)
                 for t in self.rounds_per_task]
 
     @property
@@ -50,9 +53,12 @@ class ProtocolResult:
         return self.E_ML + sum(self.E_FL)
 
     def summary(self) -> Dict:
+        from repro import comms
+        codec = comms.get_codec(self.codec)   # spec strings resolve too
         return {
             "t0": self.t0,
             "t_i": self.rounds_per_task,
+            "codec": codec.name if codec is not None else None,
             "E_ML_kJ": self.E_ML / 1e3,
             "E_FL_kJ": [e / 1e3 for e in self.E_FL],
             "E_total_kJ": self.E_total / 1e3,
@@ -79,7 +85,8 @@ class MTLProtocol:
                  inner_lr=0.01, outer_lr=0.001, fl_lr=0.01,
                  inner_steps=1, fl_local_steps=20,
                  first_order=True,
-                 energy_params: Optional[energy.EnergyParams] = None):
+                 energy_params: Optional[energy.EnergyParams] = None,
+                 codec=None):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.net = network
@@ -99,6 +106,11 @@ class MTLProtocol:
         # one cluster C_i's communication graph — drives BOTH the Eq.-(6)
         # mixing weights and the Eq.-(11) link pricing
         self.cluster_topology = network.cluster_topology()
+        # model-exchange codec: every stage-2 consensus message is sent
+        # (and priced, Eq. 11) in this wire format; lossy codecs get the
+        # error-feedback wrapper so adaptation still converges
+        from repro import comms
+        self.codec = comms.resolve_codec(codec)
 
     # -- stage 1 ------------------------------------------------------------
     def meta_train(self, key, t0: int):
@@ -149,7 +161,8 @@ class MTLProtocol:
 
         return federated.run_fl_until(
             self.loss_fn, stacked, sample_batches, mix, self.fl_lr,
-            target_fn=target, max_rounds=max_rounds, key=key)
+            target_fn=target, max_rounds=max_rounds, key=key,
+            codec=self.codec)
 
     # -- full protocol --------------------------------------------------------
     def run(self, key, t0: int, *, max_rounds: int = 500) -> ProtocolResult:
@@ -165,4 +178,5 @@ class MTLProtocol:
         return ProtocolResult(
             t0=t0, rounds_per_task=rounds, meta_history=meta_hist,
             fl_histories=hists, energy_params=self.energy_params,
-            Q=self.net.Q, cluster_topology=self.cluster_topology)
+            Q=self.net.Q, cluster_topology=self.cluster_topology,
+            codec=self.codec)

@@ -13,7 +13,12 @@ One :class:`Topology` object produces, for a population of K agents:
                          efficiency class;
 * ``round_comm_joules``— the Eq.-(11) communication term for ONE round,
                          priced per link class (SL honours the paper's
-                         UL + γ·DL replacement when sidelink is off).
+                         UL + γ·DL replacement when sidelink is off),
+                         optionally per EDGE (``edge_efficiency`` /
+                         ``with_edge_efficiency`` — heterogeneous
+                         bandwidth) and per CODEC (``codec=`` prices each
+                         message at its :mod:`repro.comms` wire size
+                         instead of the full-precision b(W)).
 
 Link classes follow Sect. III-B: ``SL`` (device↔device sidelink), ``UL``
 (device→infrastructure uplink), ``DL`` (infrastructure→device downlink).
@@ -23,7 +28,9 @@ receive the aggregate over DL; hierarchical gateways backhaul over UL.
 Graph families: ring, full, torus, small-world (Watts–Strogatz), star
 (FedAvg), per-task clusters (the paper's C_i), and hierarchical
 cluster-of-clusters. ``make(name, K)`` is the uniform constructor used by
-the scale benchmark.
+the scale benchmark. :func:`dropout` derives time-varying per-round
+link-failure sequences from any of them (fading / mobility), priced only
+on the messages actually sent.
 """
 from __future__ import annotations
 
@@ -53,6 +60,10 @@ class Topology:                     # would crash on the ndarray fields
     adjacency: np.ndarray
     link_class: np.ndarray
     meta: dict = field(default_factory=dict)
+    #: optional (K, K) per-edge efficiency in bit/J (heterogeneous
+    #: bandwidth): entries > 0 override that directed edge's class-wide
+    #: constant in Eq.-(11) pricing; 0 elsewhere. None ⇒ class constants.
+    edge_efficiency: Optional[np.ndarray] = None
 
     def __post_init__(self):
         A = np.asarray(self.adjacency, bool)
@@ -67,6 +78,17 @@ class Topology:                     # would crash on the ndarray fields
             raise ValueError("link_class must be set exactly on edges")
         object.__setattr__(self, "adjacency", A)
         object.__setattr__(self, "link_class", L)
+        if self.edge_efficiency is not None:
+            E = np.asarray(self.edge_efficiency, np.float64)
+            if E.shape != A.shape:
+                raise ValueError(
+                    f"edge_efficiency shape {E.shape} != {A.shape}")
+            if (E < 0).any():
+                raise ValueError("edge efficiencies must be >= 0 bit/J")
+            if (E[~A] != 0).any():
+                raise ValueError(
+                    "edge_efficiency must be 0 off the edge set")
+            object.__setattr__(self, "edge_efficiency", E)
 
     # -- structure ----------------------------------------------------------
     @property
@@ -122,14 +144,46 @@ class Topology:                     # would crash on the ndarray fields
         return {name: int((self.link_class == cls).sum())
                 for cls, name in LINK_CLASS_NAMES.items()}
 
+    def with_edge_efficiency(self, eff) -> "Topology":
+        """Copy of this graph with per-edge efficiencies (bit/J): ``eff``
+        is (K, K) — entries on edges override the class constants in
+        Eq.-(11) pricing — or a scalar applied to every edge."""
+        eff = np.asarray(eff, np.float64)
+        if eff.ndim == 0:
+            eff = np.where(self.adjacency, float(eff), 0.0)
+        return dataclasses.replace(self, edge_efficiency=eff)
+
     def round_comm_joules(self, p: energy.EnergyParams,
-                          model_bits: Optional[float] = None) -> float:
+                          model_bits: Optional[float] = None,
+                          codec=None) -> float:
         """Eq.-(11) communication energy of ONE consensus round: every
-        directed message carries b(W) bits at its class's efficiency."""
+        directed message carries b(W) bits at its class's efficiency.
+
+        ``codec`` (spec string or :class:`repro.comms.codecs.Codec`)
+        prices each message at the codec's WIRE size instead of the
+        full-precision b(W) — ``codec.price_bits(b(W))`` — which is the
+        whole bits-vs-rounds-vs-joules tradeoff axis. With
+        ``edge_efficiency`` set, the SL/UL/DL sums run per-edge
+        (heterogeneous bandwidth) rather than per class-wide constant;
+        edges left at 0 fall back to their class constant.
+        """
         bits = p.model_bits if model_bits is None else model_bits
-        n = self.links_per_round()
-        return bits * (n["SL"] * energy.sidelink_cost_per_bit(p)
-                       + n["UL"] / p.E_UL + n["DL"] / p.E_DL)
+        if codec is not None:
+            from repro import comms   # deferred: avoid import cycles
+            bits = comms.get_codec(codec).price_bits(bits)
+        if self.edge_efficiency is None:
+            n = self.links_per_round()
+            return bits * (n["SL"] * energy.sidelink_cost_per_bit(p)
+                           + n["UL"] / p.E_UL + n["DL"] / p.E_DL)
+        # per-edge: J/bit of each directed edge, class default where the
+        # per-edge efficiency is unset (0)
+        class_cost = np.zeros(self.adjacency.shape)
+        class_cost[self.link_class == SL] = energy.sidelink_cost_per_bit(p)
+        class_cost[self.link_class == UL] = 1.0 / p.E_UL
+        class_cost[self.link_class == DL] = 1.0 / p.E_DL
+        eff = self.edge_efficiency
+        cost = np.where(eff > 0, 1.0 / np.maximum(eff, 1e-300), class_cost)
+        return float(bits * cost[self.adjacency].sum())
 
     def __repr__(self):  # compact — adjacency can be 1024^2
         lk = {k: v for k, v in self.links_per_round().items() if v}
@@ -261,6 +315,55 @@ def hierarchical(num_clusters: int, devices_per_cluster: int) -> Topology:
 def from_cluster_network(net) -> Topology:
     """Adapter for :class:`repro.core.multitask.ClusterNetwork`."""
     return clusters(net.num_tasks, net.devices_per_cluster)
+
+
+# -- time-varying topologies -------------------------------------------------
+
+
+def dropout(topo: Topology, p: float, seed: int = 0,
+            rounds: Optional[int] = None):
+    """Per-round link-dropout sequence: each round, every link of ``topo``
+    is independently DOWN with probability ``p`` (fading / contention /
+    mobility — the paper's t_i is measured on exactly these rounds).
+
+    Symmetric graphs drop whole undirected PAIRS (a faded channel kills
+    both directions); asymmetric edges (star's UL/DL, hierarchical
+    backhaul) drop per directed edge. Surviving links keep their class
+    and any per-edge efficiency, so Eq.-(11) pricing of a faded round
+    only counts messages actually sent. Mixing weights must be rebuilt
+    from each round's surviving graph (``t.mixing(...)``) — dropping a
+    link reallocates its σ mass, it does not silently zero it.
+
+    With ``rounds`` returns a list of ``rounds`` Topologies; without, an
+    infinite generator. Deterministic in ``seed``.
+    """
+    if not 0 <= p < 1:
+        raise ValueError(f"dropout probability must be in [0, 1), got {p}")
+
+    def _rounds():
+        rng = np.random.default_rng(seed)
+        sym = topo.is_symmetric
+        r = 0
+        while True:
+            keep = rng.random(topo.adjacency.shape) >= p
+            if sym:                      # one draw per undirected pair
+                up = np.triu(keep, 1)
+                keep = up | up.T
+            mask = topo.adjacency & keep
+            eff = (None if topo.edge_efficiency is None
+                   else np.where(mask, topo.edge_efficiency, 0.0))
+            yield Topology(
+                f"{topo.name}~drop", mask,
+                np.where(mask, topo.link_class, NONE).astype(np.int8),
+                {**topo.meta, "dropout_p": p, "dropout_seed": seed,
+                 "round": r},
+                edge_efficiency=eff)
+            r += 1
+
+    gen = _rounds()
+    if rounds is None:
+        return gen
+    return [next(gen) for _ in range(rounds)]
 
 
 # -- uniform constructor for sweeps -----------------------------------------

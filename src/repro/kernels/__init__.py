@@ -1,1 +1,2 @@
-from repro.kernels.ops import flash_attention, rglru_scan, consensus_update
+from repro.kernels.ops import (flash_attention, rglru_scan,
+                               consensus_update, quant_consensus_update)

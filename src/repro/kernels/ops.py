@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import consensus_update as _cu
+from repro.kernels import quant_consensus as _qc
 from repro.kernels import ref as _ref
 
 _ALLOWED_DTYPES = (jnp.float32, jnp.bfloat16)
@@ -72,3 +73,29 @@ def consensus_update(x, neighbors, sigmas, *, block_n: int = 64 * 1024,
         return _ref.consensus_update_reference(x, neighbors, sigmas)
     return _cu.consensus_update(x, neighbors, sigmas, block_n=block_n,
                                 interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "impl"))
+def quant_consensus_update(x, q_self, s_self, q_neighbors, s_neighbors,
+                           sigmas, *, block_n: int = 64 * 1024,
+                           impl: str = "xla"):
+    """Fused int8-dequant + Eq.-(6) update around the agent's own decoded
+    model: x + Σ_h σ_h (s_h·q_h − s_self·q_self). Wire models int8."""
+    _check_dtype(x)
+    if q_self.dtype != jnp.int8 or q_neighbors.dtype != jnp.int8:
+        raise TypeError(
+            f"wire models must be int8, got {q_self.dtype} "
+            f"{q_neighbors.dtype}")
+    if (q_neighbors.ndim != 2 or q_neighbors.shape[1] != x.shape[0]
+            or q_self.shape != x.shape
+            or s_neighbors.shape[0] != q_neighbors.shape[0]
+            or sigmas.shape[0] != q_neighbors.shape[0]):
+        raise ValueError(
+            f"bad shapes {x.shape} {q_self.shape} {q_neighbors.shape} "
+            f"{s_neighbors.shape} {sigmas.shape}")
+    if impl == "xla":
+        return _ref.quant_consensus_update_reference(
+            x, q_self, s_self, q_neighbors, s_neighbors, sigmas)
+    return _qc.quant_consensus_update(
+        x, q_self, s_self, q_neighbors, s_neighbors, sigmas,
+        block_n=block_n, interpret=(impl == "interpret"))

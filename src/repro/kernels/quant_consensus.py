@@ -1,0 +1,78 @@
+"""Fused Pallas TPU kernel: int8 dequantize + Eq.-(6) consensus update.
+
+    W_k  ←  W_k + Σ_h σ_{k,h} (s_h·q_h − s_k·q_k)
+
+where q are per-tensor absmax-quantized int8 models (the sidelink wire
+format of :mod:`repro.comms.codecs`) and s their f32 scales. The unfused
+path materializes H dequantized parameter-sized f32 temporaries before
+mixing; this kernel streams (H, block_n) int8 tiles through VMEM and
+dequantizes INSIDE the combine, so HBM traffic for the neighbour models
+is H·N bytes (int8) instead of 4·H·N (f32) plus the extra round trip —
+the consensus round is purely memory-bound, so wire-dtype traffic is the
+whole game.
+
+Note the mixing recenters on the agent's OWN decoded model s_k·q_k (not
+W_k): with a doubly-stochastic σ this keeps the population mean exact
+under compression (the CHOCO-gossip trick), and it is what the
+error-feedback wrapper assumes.
+
+Grid: (N // block_n,). Oracle: ``ref.quant_consensus_update_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 64 * 1024
+
+
+def _quant_consensus_kernel(x_ref, qs_ref, ss_ref, qn_ref, sn_ref, sig_ref,
+                            o_ref, *, num_neighbors: int):
+    x = x_ref[...].astype(jnp.float32)                     # (bn,)
+    xhat = qs_ref[...].astype(jnp.float32) * ss_ref[0]     # own decoded model
+    acc = jnp.zeros_like(x)
+    for h in range(num_neighbors):
+        nb = qn_ref[h].astype(jnp.float32) * sn_ref[h]     # fused dequant
+        acc = acc + sig_ref[h] * (nb - xhat)
+    o_ref[...] = (x + acc).astype(o_ref.dtype)
+
+
+def quant_consensus_update(x, q_self, s_self, q_neighbors, s_neighbors,
+                           sigmas, *, block_n: int = DEFAULT_BLOCK_N,
+                           interpret: bool = False):
+    """x: (N,) own full-precision params; q_self: (N,) int8 own quantized
+    model with scalar scale s_self; q_neighbors: (H, N) int8 neighbour
+    models with scales s_neighbors: (H,); sigmas: (H,) Eq.-(6) weights.
+
+    Returns the updated (N,) params for one agent, one round.
+    """
+    N = x.shape[0]
+    H = q_neighbors.shape[0]
+    block_n = min(block_n, N)
+    Np = -(-N // block_n) * block_n
+    if Np != N:
+        x = jnp.pad(x, (0, Np - N))
+        q_self = jnp.pad(q_self, (0, Np - N))
+        q_neighbors = jnp.pad(q_neighbors, ((0, 0), (0, Np - N)))
+
+    out = pl.pallas_call(
+        functools.partial(_quant_consensus_kernel, num_neighbors=H),
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((H, block_n), lambda i: (0, i)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), x.dtype),
+        interpret=interpret,
+    )(x, q_self, jnp.reshape(s_self, (1,)).astype(jnp.float32),
+      q_neighbors, s_neighbors.astype(jnp.float32),
+      sigmas.astype(jnp.float32))
+    return out[:N]

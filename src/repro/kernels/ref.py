@@ -39,3 +39,16 @@ def consensus_update_reference(x, neighbors, sigmas):
     delta = (neighbors.astype(jnp.float32) - xf[None, :])
     upd = jnp.einsum("h,hn->n", sigmas.astype(jnp.float32), delta)
     return (xf + upd).astype(x.dtype)
+
+
+def quant_consensus_update_reference(x, q_self, s_self, q_neighbors,
+                                     s_neighbors, sigmas):
+    """Oracle for kernels.quant_consensus_update: dequantize the int8
+    wire models and mix (Eq. 6) around the agent's own DECODED model."""
+    xf = x.astype(jnp.float32)
+    xhat = q_self.astype(jnp.float32) * jnp.asarray(s_self, jnp.float32)
+    nb = (q_neighbors.astype(jnp.float32)
+          * s_neighbors.astype(jnp.float32)[:, None])
+    upd = jnp.einsum("h,hn->n", sigmas.astype(jnp.float32),
+                     nb - xhat[None, :])
+    return (xf + upd).astype(x.dtype)

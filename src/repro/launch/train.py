@@ -76,7 +76,7 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     local_steps: int, batch: int, seq: int, lr: float,
                     consensus_every: int = 1, seed: int = 0,
                     energy_params=None, consensus_dtype=None,
-                    consensus_impl: str = "xla"):
+                    consensus_impl: str = "xla", codec=None):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
@@ -84,9 +84,16 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     sparse/Pallas via ``consensus_impl``). Returns (stacked_params,
     per_round losses, energy J). ``consensus_dtype``: cast exchanged
     models (e.g. bf16) — halves the sidelink bytes of Eq. (11);
-    EXPERIMENTS.md §Perf P3.
+    EXPERIMENTS.md §Perf P3. ``codec`` (spec string, :mod:`repro.comms`)
+    supersedes it: the exchange runs through the codec (error feedback
+    for lossy ones) and the Eq.-(11) estimate prices the codec's wire
+    bits instead of the storage dtype.
     """
     assert agents % tasks == 0
+    if codec is not None:
+        from repro import comms
+        codec = comms.resolve_codec(codec)
+        consensus_dtype = None        # the codec defines the wire format
     per = agents // tasks
     model = get_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -116,7 +123,10 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         return p
 
     @jax.jit
-    def fl_round(stacked, key):
+    def fl_round(stacked, codec_state, key):
+        # same split as the pre-codec trainer — codec=None runs keep
+        # their exact RNG stream (reproducible loss curves); the codec
+        # rounding key is folded out of band
         ks = jax.random.split(key, agents)
 
         def agent_batches(k, task):
@@ -127,7 +137,12 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
 
         batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
-        if consensus_dtype is not None:
+        if codec is not None:
+            new, codec_state = consensus.consensus_step(
+                new, mix, impl=consensus_impl, codec=codec,
+                codec_state=codec_state,
+                key=jax.random.fold_in(key, agents + 1))
+        elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
             mixed = consensus.consensus_step(cast, mix,
@@ -138,29 +153,43 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
-        return new, l
+        return new, codec_state, l
 
     ep = energy_params or energy.paper_calibrated("fig3")
+    n_params = sum(x.size for x in jax.tree.leaves(params))
     n_bytes = sum(x.size * (2 if consensus_dtype is not None
                             else x.dtype.itemsize)
                   for x in jax.tree.leaves(params))
+    # with a codec, b(W) is the FULL-PRECISION reference size (32-bit per
+    # param) that price_bits discounts — deriving it from the storage
+    # itemsize would double-discount bf16-stored models; without a codec
+    # the wire IS the storage (or consensus_dtype) bytes
+    model_bits = (32.0 * n_params if codec is not None
+                  else float(n_bytes) * 8)
     import dataclasses as dc
-    ep = dc.replace(ep, model_bits=float(n_bytes) * 8,
+    ep = dc.replace(ep, model_bits=model_bits,
                     devices_per_cluster=per, B_i=local_steps)
     # one cluster's graph: per·(per−1) directed SL messages per round —
     # NOT the legacy devices_per_cluster × neighbors_per_device constant,
     # which under-priced any cluster larger than 2 robots
     cluster_topo = topo_lib.clusters(1, per)
 
+    codec_state = (codec.init_state(stacked)
+                   if codec is not None and codec.stateful else None)
     hist = []
     for r in range(rounds):
         key, sk = jax.random.split(key)
-        stacked, l = fl_round(stacked, sk)
+        stacked, codec_state, l = fl_round(stacked, codec_state, sk)
         hist.append(float(l))
         print(f"round {r:3d}  loss {float(l):.4f}")
-    E = tasks * energy.fl_energy(ep, rounds, topology=cluster_topo)
+    # Eq.-(11) priced at the codec's wire size (b(W) · bits ratio)
+    E = tasks * energy.fl_energy(ep, rounds, topology=cluster_topo,
+                                 codec=codec)
+    wire_mb = (codec.price_bits(model_bits) / 8e6 if codec is not None
+               else n_bytes / 1e6)
     print(f"estimated FL energy for {rounds} rounds x {tasks} clusters: "
-          f"{E / 1e3:.2f} kJ (model {n_bytes / 1e6:.1f} MB per exchange)")
+          f"{E / 1e3:.2f} kJ ({wire_mb:.2f} MB per exchange"
+          f"{', codec ' + codec.name if codec is not None else ''})")
     return stacked, hist, E
 
 
@@ -181,6 +210,9 @@ def main():
     ap.add_argument("--bf16-consensus", action="store_true")
     ap.add_argument("--consensus-impl", choices=["xla", "pallas", "auto"],
                     default="xla")
+    ap.add_argument("--codec", default=None,
+                    help="model-exchange codec spec (bf16, int8, int4, "
+                         "topk:0.05, +ef suffix; see repro.comms)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -195,7 +227,7 @@ def main():
             local_steps=args.local_steps, batch=args.batch, seq=args.seq,
             lr=args.lr,
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
-            consensus_impl=args.consensus_impl)
+            consensus_impl=args.consensus_impl, codec=args.codec)
 
 
 if __name__ == "__main__":

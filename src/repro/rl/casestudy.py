@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro import comms
 from repro.core import consensus, energy, maml
 from repro.core.multitask import ClusterNetwork
 from repro.core.protocol import ProtocolResult
@@ -110,11 +111,17 @@ class CaseStudy:
     first_order: bool = True
     r_target: float = R_TARGET
     energy_params: object = None
+    #: model-exchange codec spec (e.g. "int8", "int4", "topk:0.05") — the
+    #: cluster's sidelink messages are sent AND Eq.-(11)-priced in this
+    #: wire format (error feedback applied to lossy codecs), so the
+    #: Fig.-3 energy comparison reruns at any compression level
+    codec: object = None
 
     def __post_init__(self):
         self.cfg = self.cfg or get_arch("paper-dqn")
         self.energy_params = (self.energy_params
                               or energy.paper_calibrated("fig3"))
+        self.codec = comms.resolve_codec(self.codec)
         cfg = self.cfg
         base_loss = dqnrl.make_loss_fn(cfg)
 
@@ -162,7 +169,9 @@ class CaseStudy:
         C = self.network.devices_per_cluster
         mix = self.cluster_topology.mixing(kind="paper")
 
-        def fl_round(task_id, stacked_params, key):
+        def fl_round(task_id, stacked_params, codec_state, key):
+            # split C+1 exactly as pre-codec (codec=None rounds keep
+            # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
             target = jax.tree.map(lambda x: x[0], stacked_params)
 
@@ -176,10 +185,15 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
-            new = consensus.consensus_step(new, mix)
+            if self.codec is None:
+                new = consensus.consensus_step(new, mix)
+            else:     # compressed sidelink exchange (wire = codec format)
+                new, codec_state = consensus.consensus_step(
+                    new, mix, codec=self.codec, codec_state=codec_state,
+                    key=jax.random.fold_in(key, C + 1))
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
-            return new, R
+            return new, codec_state, R
 
         self._fl_rounds = {
             tid: jax.jit(functools.partial(fl_round, tid))
@@ -204,12 +218,15 @@ class CaseStudy:
         C = self.network.devices_per_cluster
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), init_params)
+        codec_state = (self.codec.init_state(stacked)
+                       if self.codec is not None and self.codec.stateful
+                       else None)
         hist = []
         rounds = max_rounds
         step = self._fl_rounds[task_id]
         for t in range(max_rounds):
             key, sk = jax.random.split(key)
-            stacked, R = step(stacked, sk)
+            stacked, codec_state, R = step(stacked, codec_state, sk)
             hist.append(float(R))
             if float(R) >= self.r_target:
                 rounds = t + 1
@@ -229,10 +246,13 @@ class CaseStudy:
         return ProtocolResult(
             t0=t0, rounds_per_task=rounds, meta_history=meta_hist,
             fl_histories=hists, energy_params=self.energy_params,
-            Q=self.network.Q, cluster_topology=self.cluster_topology)
+            Q=self.network.Q, cluster_topology=self.cluster_topology,
+            codec=self.codec)
 
 
-def run_case_study(key=None, *, t0: int = 210, max_rounds: int = 400):
-    """One Monte-Carlo run of the full Fig. 3 experiment."""
+def run_case_study(key=None, *, t0: int = 210, max_rounds: int = 400,
+                   codec=None):
+    """One Monte-Carlo run of the full Fig. 3 experiment (optionally with
+    compressed sidelink exchange + codec-priced Eq.-(11) energy)."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    return CaseStudy().run(key, t0, max_rounds=max_rounds)
+    return CaseStudy(codec=codec).run(key, t0, max_rounds=max_rounds)

@@ -20,12 +20,35 @@ def test_case_study_round_and_energy():
     assert np.isfinite(float(m["meta_loss"]))
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p2)
-    stacked2, R = cs._fl_rounds[0](stacked, key)
+    stacked2, _, R = cs._fl_rounds[0](stacked, None, key)
     assert np.isfinite(float(R))
     res_like = cs.run(jax.random.PRNGKey(1), 0, max_rounds=2)
     s = res_like.summary()
     assert s["E_ML_kJ"] == 0.0            # t0 = 0: no MAML energy
     assert s["E_total_kJ"] > 0
+
+
+def test_case_study_codec_round_and_energy():
+    """The same FL round with an int8 sidelink codec: finite reward,
+    error-feedback state threaded, and the Eq.-(11) share of E_FL priced
+    4× below the uncompressed exchange."""
+    from repro.core import energy
+    from repro.rl.casestudy import CaseStudy
+    cs = CaseStudy(codec="int8")
+    assert cs.codec.name == "int8+ef"
+    key = jax.random.PRNGKey(0)
+    p = cs.init_params(key)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p)
+    state = cs.codec.init_state(stacked)
+    stacked2, state2, R = cs._fl_rounds[0](stacked, state, key)
+    assert np.isfinite(float(R))
+    assert jax.tree.structure(state2) == jax.tree.structure(stacked)
+    # codec-priced Eq. (11): comm term drops exactly bits-ratio-fold
+    ep = cs.energy_params
+    comm = energy.fl_comm_energy(ep, 10, cs.cluster_topology, cs.codec)
+    comm_full = energy.fl_comm_energy(ep, 10, cs.cluster_topology)
+    assert comm == pytest.approx(comm_full / 4)
 
 
 def test_protocol_generic_toy():

@@ -228,3 +228,99 @@ def test_train_federated_prices_four_agent_cluster():
     # and the comm share reflects 12 links, not the legacy 4
     assert energy.fl_comm_energy(ep, rounds, topo_lib.clusters(1, 4)) \
         == pytest.approx(3 * energy.fl_comm_energy(ep, rounds))
+
+
+# ---------------------------------------------------------------------------
+# per-edge link efficiencies (heterogeneous bandwidth)
+# ---------------------------------------------------------------------------
+
+
+def test_edge_efficiency_uniform_matches_class_constant():
+    p = energy.paper_calibrated("fig3")
+    r = topo_lib.ring(6)
+    het = r.with_edge_efficiency(p.E_SL)     # scalar: every edge at E_SL
+    assert np.isclose(het.round_comm_joules(p), r.round_comm_joules(p))
+
+
+def test_edge_efficiency_per_edge_sum():
+    """Eq.-(11) must SUM per edge: one slow link dominates the round."""
+    p = energy.paper_calibrated("fig3")
+    r = topo_lib.ring(4)
+    eff = np.where(r.adjacency, p.E_SL, 0.0)
+    eff[0, 1] = eff[1, 0] = p.E_SL / 100.0   # one degraded pair
+    het = r.with_edge_efficiency(eff)
+    base = r.round_comm_joules(p)
+    # 8 links: 6 at 1/E_SL, 2 at 100/E_SL ⇒ (6 + 200)/8 × the uniform cost
+    assert np.isclose(het.round_comm_joules(p), base * (6 + 200) / 8)
+    # codec pricing composes with per-edge efficiencies
+    assert np.isclose(het.round_comm_joules(p, codec="int8"),
+                      base * (6 + 200) / 8 / 4)
+
+
+def test_edge_efficiency_partial_override_falls_back_to_class():
+    p = energy.paper_calibrated("fig3")
+    s = topo_lib.star(4)                     # 3 UL + 3 DL messages
+    eff = np.zeros((4, 4))
+    eff[0, 1] = 2 * p.E_UL                   # one upload twice as efficient
+    het = s.with_edge_efficiency(eff)
+    want = p.model_bits * (1 / (2 * p.E_UL) + 2 / p.E_UL + 3 / p.E_DL)
+    assert np.isclose(het.round_comm_joules(p), want)
+
+
+def test_edge_efficiency_validation():
+    r = topo_lib.ring(4)
+    with pytest.raises(ValueError):          # wrong shape
+        r.with_edge_efficiency(np.ones((3, 3)))
+    with pytest.raises(ValueError):          # efficiency off the edge set
+        topo_lib.Topology("bad", r.adjacency, r.link_class,
+                          edge_efficiency=np.ones((4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# time-varying topologies: per-round link dropout
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_sequence_structure():
+    t = topo_lib.ring(12, hops=2)
+    seq = topo_lib.dropout(t, 0.3, seed=7, rounds=20)
+    assert len(seq) == 20
+    for rt in seq:
+        # dropped graphs are subgraphs with classes preserved on survivors
+        assert not (rt.adjacency & ~t.adjacency).any()
+        assert (rt.link_class[rt.adjacency]
+                == t.link_class[rt.adjacency]).all()
+        assert rt.is_symmetric                   # pairs drop together
+    # deterministic in the seed, and p=0 is the identity
+    seq2 = topo_lib.dropout(t, 0.3, seed=7, rounds=20)
+    for a, b in zip(seq, seq2):
+        np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    for rt in topo_lib.dropout(t, 0.0, seed=0, rounds=3):
+        np.testing.assert_array_equal(rt.adjacency, t.adjacency)
+    with pytest.raises(ValueError):
+        topo_lib.dropout(t, 1.0)
+
+
+def test_dropout_consensus_ring_reaches_oracle_mean(rng_key):
+    """Consensus over a ring with 20% per-round link dropout still reaches
+    the oracle mean of the initial models (metropolis weights are doubly
+    stochastic on EVERY surviving subgraph, so the mean is invariant and
+    the union graph's connectivity drives contraction)."""
+    K = 8
+    s = {"w": jax.random.normal(rng_key, (K, 4, 3))}
+    mean0 = np.asarray(s["w"]).mean(axis=0)
+    for rt in topo_lib.dropout(topo_lib.ring(K), 0.2, seed=11, rounds=400):
+        s = consensus.consensus_step(s, rt.mixing(kind="metropolis"))
+    np.testing.assert_allclose(np.asarray(s["w"][0]), mean0, atol=1e-4)
+    assert float(consensus.consensus_error(s)) < 1e-9
+
+
+def test_dropout_rounds_price_only_sent_messages():
+    p = energy.paper_calibrated("fig3")
+    t = topo_lib.ring(6)
+    seq = topo_lib.dropout(t, 0.5, seed=1, rounds=50)
+    per_round = [rt.round_comm_joules(p) for rt in seq]
+    full = t.round_comm_joules(p)
+    assert all(j <= full + 1e-9 for j in per_round)
+    # ~half the links survive on average ⇒ mean cost well below the full
+    assert np.mean(per_round) < 0.8 * full
