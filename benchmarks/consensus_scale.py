@@ -1,13 +1,16 @@
 """Consensus-round scaling sweep: K × topology × dtype (Eq. 6 hot path),
-plus the model-exchange CODEC sweep (bits-vs-joules axis).
+plus the model-exchange CODEC sweep (bits-vs-joules axis) and the
+SHARDED plan's K ≫ cores rows.
 
-For each population size K ∈ {12, 64, 256, 1024}, graph family, and dtype
-this times one dense-stacked consensus round under both execution paths —
+Every timed step goes through :class:`repro.core.engine.ConsensusEngine`
+(the single consensus entry point). For each population size
+K ∈ {12, 64, 256, 1024}, graph family, and dtype this times one round
+under two plans —
 
-* ``xla``  — the reference (K, K) matmul, O(K²·N);
-* ``auto`` — the batched-over-agents sparse gather through the fused
-  consensus kernel (Pallas on TPU, its bit-identical jnp oracle on CPU),
-  O(K·H·N);
+* ``dense-xla``  — the reference (K, K) matmul, O(K²·N);
+* ``auto``       — the payload-aware heuristic (sparse gather through the
+  fused consensus kernel — Pallas on TPU, its bit-identical jnp oracle
+  on CPU — O(K·H·N); dense fallback on dense graphs);
 
 and prices the round's communication with the paper's Eq. (11) via the
 topology's per-link classes, so the perf trajectory records wall-clock
@@ -16,9 +19,12 @@ per-agent ``ref.consensus_update_reference`` oracle) runs at K=256 for
 every family in the sweep.
 
 The codec sweep (``codec_rows``) times one COMPRESSED consensus round
-(:mod:`repro.comms` wire formats through ``consensus_step(codec=...)``,
-error feedback on) per codec × topology and records the codec-priced
-Eq.-(11) joules; ``casestudy_eq11`` reprices the paper's 12-robot
+(:mod:`repro.comms` wire formats, error feedback on) per codec ×
+topology and records the codec-priced Eq.-(11) joules; ``sharded_rows``
+runs the engine's ``sharded`` plan — blocks of agents under an agent
+axis, codec wires all_gathered, no (K, K) stack in any one program — at
+K ∈ {4096, 16384} per codec, the K ≫ core-count regime no single-program
+path reaches; ``casestudy_eq11`` reprices the paper's 12-robot
 (6 clusters × 2) case study round at every compression level with the
 paper-calibrated b(W) — the headline artifact entry: int8 cuts the
 modeled round joules 4× vs the f32 exchange (2× vs bf16), int4 8×.
@@ -26,7 +32,7 @@ modeled round joules 4× vs the f32 exchange (2× vs bf16), int4 8×.
 Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
 
 Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick|--smoke]
-(``--smoke``: K=64, ring, int8 only — the CI tier-1 benchmark check.)
+(``--smoke``: K=64 ring int8 codec + sharded rows — the CI tier-1 check.)
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ import numpy as np
 from repro import comms
 from repro.core import consensus, energy
 from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine
 from repro.kernels import ref
 
 KS = (12, 64, 256, 1024)
@@ -51,6 +58,9 @@ N_PARAMS = 2048          # flat params per agent (CPU-tractable at K=1024)
 EQUIV_K = 256
 CODECS = comms.CODECS    # none / bf16 / int8 / int4 / topk:0.05
 CODEC_KS = (12, 64)      # codec wall-clock sweep sizes
+SHARDED_KS = (4096, 16384)           # K >> cores: sharded plan only
+SHARDED_CODECS = (None, "bf16", "int8", "int4")
+SHARDED_BLOCKS = 4
 
 
 def _time(fn, *args, reps=3, warmup=1):
@@ -100,14 +110,15 @@ def sweep(ks, families, dtypes, *, equiv_k=EQUIV_K):
                             model_bits=bits,
                             joules_eq11_per_round=joules)
 
-                step_xla = jax.jit(
-                    lambda s: consensus.consensus_step(s, mix, impl="xla"))
-                step_auto = jax.jit(
-                    lambda s: consensus.consensus_step(s, mix, impl="auto"))
+                eng_xla = ConsensusEngine(topo, plan="dense-xla")
+                eng_auto = ConsensusEngine(topo, plan="auto")
+                step_xla = jax.jit(lambda s: eng_xla.step(s)[0])
+                step_auto = jax.jit(lambda s: eng_auto.step(s)[0])
                 us_xla = _time(step_xla, x)
                 us_auto = _time(step_auto, x)
                 rows.append({**base, "impl": "xla", "us_per_round": us_xla})
                 rows.append({**base, "impl": "auto",
+                             "plan": eng_auto.plan.kind,
                              "us_per_round": us_auto,
                              "speedup_vs_xla": us_xla / max(us_auto, 1e-9)})
                 print(f"K={K:5d} {fam:12s} {dtype_name:8s} "
@@ -136,7 +147,7 @@ def sweep(ks, families, dtypes, *, equiv_k=EQUIV_K):
 
 def codec_sweep(ks, families, codecs):
     """Wall-clock + codec-priced Eq.-(11) joules of one COMPRESSED
-    consensus round per codec × topology (error feedback on, impl=auto).
+    consensus round per codec × topology (error feedback on, auto plan).
     """
     p_cal = energy.paper_calibrated("fig3")
     rows = []
@@ -148,21 +159,13 @@ def codec_sweep(ks, families, codecs):
             except ValueError as e:
                 print(f"skip {fam} K={K}: {e}")
                 continue
-            mix = topo.mixing()
             full_bits = N_PARAMS * 32
             for spec in codecs:
-                codec = comms.resolve_codec(spec)
-                joules = topo.round_comm_joules(p_cal, model_bits=full_bits,
-                                                codec=codec)
-                if codec is None:
-                    step = jax.jit(lambda s, st, k: (
-                        consensus.consensus_step(s, mix, impl="auto"), st))
-                    state = None
-                else:
-                    step = jax.jit(lambda s, st, k: consensus.consensus_step(
-                        s, mix, impl="auto", codec=codec, codec_state=st,
-                        key=k))
-                    state = (codec.init_state(x) if codec.stateful else None)
+                eng = ConsensusEngine(topo, codec=spec)
+                codec = eng.codec
+                joules = eng.round_comm_joules(p_cal, model_bits=full_bits)
+                step = jax.jit(lambda s, st, k, e=eng: e.step(s, st, k))
+                state = eng.init_state(x)
                 key = jax.random.PRNGKey(0)
 
                 def run(s, st, k):
@@ -178,10 +181,49 @@ def codec_sweep(ks, families, codecs):
                                          else float(full_bits)),
                     joules_eq11_per_round=joules,
                     us_per_round=us,
-                    auto_path=consensus.auto_path(
-                        mix, getattr(codec, "inner", codec))))
+                    plan=eng.plan.kind))
                 print(f"K={K:5d} {fam:12s} codec={name:10s} "
                       f"{us:10.1f}us  eq11 {joules:10.4f} J/round")
+    return rows
+
+
+def sharded_rows(ks=SHARDED_KS, families=("ring",),
+                 codecs=SHARDED_CODECS, num_blocks=SHARDED_BLOCKS):
+    """The engine's ``sharded`` plan at K >> core count: blocks of
+    K/num_blocks agents per mesh position (vmap-emulated off a real
+    mesh), codec WIRES all_gathered along the agent axis, no (K, K)
+    stack in any single program. Wall-clock + codec-priced Eq.-(11)
+    joules per codec — the compressed-exchange-at-scale regime."""
+    p_cal = energy.paper_calibrated("fig3")
+    rows = []
+    for K in ks:
+        x = _stacked(K, jnp.float32)
+        for fam in families:
+            try:
+                topo = topo_lib.make(fam, K)
+            except ValueError as e:
+                print(f"skip {fam} K={K}: {e}")
+                continue
+            full_bits = N_PARAMS * 32
+            for spec in codecs:
+                eng = ConsensusEngine(topo, codec=spec, plan="sharded",
+                                      num_blocks=num_blocks)
+                joules = eng.round_comm_joules(p_cal, model_bits=full_bits)
+                step = jax.jit(lambda s, st, k, e=eng: e.step(s, st, k)[0])
+                state = eng.init_state(x)
+                key = jax.random.PRNGKey(0)
+                us = _time(step, x, state, key)
+                name = eng.codec.name if eng.codec is not None else "none"
+                rows.append(dict(
+                    K=K, topology=fam, codec=name, plan="sharded",
+                    num_blocks=num_blocks,
+                    wire_bits_per_model=(eng.codec.price_bits(full_bits)
+                                         if eng.codec is not None
+                                         else float(full_bits)),
+                    joules_eq11_per_round=joules,
+                    us_per_round=us))
+                print(f"K={K:5d} {fam:12s} sharded codec={name:10s} "
+                      f"{us:12.1f}us  eq11 {joules:10.4f} J/round")
     return rows
 
 
@@ -221,6 +263,9 @@ def main():
     if args.smoke:
         ks, families, dtypes = (64,), ("ring",), ("float32",)
         rows, codec_rows = [], codec_sweep((64,), ("ring",), ("int8",))
+        # one sharded row: the shard_map-plan path must stay runnable in CI
+        shard_rows = sharded_rows((64,), ("ring",), ("int8",), num_blocks=4)
+        assert shard_rows and shard_rows[0]["us_per_round"] > 0
         cs = casestudy_eq11((None, "int8"))
         assert cs["int8+ef"]["drop_vs_uncompressed"] >= 3.0
     else:
@@ -229,6 +274,7 @@ def main():
         families = FAMILIES
         rows = sweep(ks, families, dtypes)
         codec_rows = codec_sweep(CODEC_KS, families, codecs)
+        shard_rows = sharded_rows()
         cs = casestudy_eq11(codecs)
     payload = {
         "bench": "consensus_scale",
@@ -238,6 +284,7 @@ def main():
         "dtypes": list(dtypes),
         "rows": rows,
         "codec_rows": codec_rows,
+        "sharded_rows": shard_rows,
         "casestudy_eq11": cs,
     }
     if args.smoke:

@@ -20,3 +20,7 @@ from repro.comms.codecs import (           # noqa: F401
     get_codec,
     resolve_codec,
 )
+from repro.comms.select import (       # noqa: F401
+    link_efficiencies,
+    select_codec,
+)

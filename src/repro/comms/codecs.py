@@ -15,9 +15,11 @@ Implementations
 * ``IdentityCodec``  — f32 passthrough (32 bit/param), the uncompressed
   baseline every sweep is measured against.
 * ``Bf16Codec``      — bf16 cast (16 bit/param), the paper-era default.
-* ``IntCodec(8|4)``  — per-tensor absmax-scaled integer quantization
-  (8 or 4 bit/param + one f32 scale per tensor) with optional stochastic
-  rounding (pass a PRNG key to ``encode``) so the quantizer is unbiased.
+* ``IntCodec(8|4)``  — absmax-scaled integer quantization (8 or 4
+  bit/param + f32 scales: one per tensor by default, or per-channel
+  block-wise scales via ``block=``/``"int8:b64"``) with optional
+  stochastic rounding (pass a PRNG key to ``encode``) so the quantizer
+  is unbiased.
 * ``TopKCodec``      — magnitude top-k sparsification; the wire is
   (int32 index, f32 value) pairs, 64 bit per kept entry.
 * ``ErrorFeedback``  — wrapper holding a per-round residual r: each round
@@ -173,40 +175,84 @@ class Bf16Codec(Codec):
 
 
 class IntCodec(Codec):
-    """Per-tensor absmax-scaled ``bits``-bit integer quantization.
+    """Absmax-scaled ``bits``-bit integer quantization.
 
     q = clip(round(x / s), ±qmax), s = absmax / qmax; the wire carries q
     (``bits`` bits each — int4 values are stored in int8 lanes on-device
-    but PRICED at 4 bits, i.e. two values per wire byte) plus one f32
-    scale per tensor. With a PRNG key the rounding is stochastic
-    (unbiased); without, round-to-nearest.
+    but PRICED at 4 bits, i.e. two values per wire byte) plus the f32
+    scales. With a PRNG key the rounding is stochastic (unbiased);
+    without, round-to-nearest.
+
+    ``block`` selects the scale granularity: ``None`` (default) keeps ONE
+    scale per tensor; an integer quantizes each consecutive ``block``-long
+    run of the flattened tensor with its own absmax scale (per-channel /
+    block-wise quantization). Block scales bound the round-trip error by
+    the LOCAL absmax — a tensor mixing large and small channels loses
+    ~absmax(tensor)/qmax/2 per entry under one global scale but only
+    ~absmax(block)/qmax/2 with block scales — at SCALE_BITS·⌈n/block⌉
+    extra wire bits, which ``leaf_bits``/``price_bits`` account exactly.
     """
 
-    def __init__(self, bits: int):
+    def __init__(self, bits: int, block: Optional[int] = None):
         if bits not in (4, 8):
             raise ValueError(f"IntCodec supports 4/8 bits, got {bits}")
+        if block is not None and block < 1:
+            raise ValueError(f"block size must be >= 1, got {block}")
         self.qbits = bits
         self.qmax = float(2 ** (bits - 1) - 1)
-        self.name = f"int{bits}"
+        self.block = block
+        self.name = f"int{bits}" + ("" if block is None else f":b{block}")
         self.bits_per_param = float(bits)
+
+    def _blocked(self, flat):
+        """(nb, block) view of a flat tensor, zero-padded on the right."""
+        n = flat.shape[0]
+        nb = -(-n // self.block)
+        pad = nb * self.block - n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(nb, self.block)
 
     def encode_leaf(self, x, key=None):
         xf = jnp.asarray(x, jnp.float32)
-        absmax = jnp.max(jnp.abs(xf))
+        if self.block is None:
+            absmax = jnp.max(jnp.abs(xf))
+            scale = jnp.maximum(absmax, 1e-12) / self.qmax
+            q = _stochastic_round(xf / scale, key)
+            q = jnp.clip(q, -self.qmax, self.qmax).astype(jnp.int8)
+            return {"q": q, "scale": scale.astype(jnp.float32)}
+        n = xf.size
+        rows = self._blocked(xf.ravel())
+        absmax = jnp.max(jnp.abs(rows), axis=1)
         scale = jnp.maximum(absmax, 1e-12) / self.qmax
-        q = _stochastic_round(xf / scale, key)
+        q = _stochastic_round(rows / scale[:, None], key)
         q = jnp.clip(q, -self.qmax, self.qmax).astype(jnp.int8)
-        return {"q": q, "scale": scale.astype(jnp.float32)}
+        return {"q": q.ravel()[:n].reshape(xf.shape),
+                "scale": scale.astype(jnp.float32)}
 
     def decode_leaf(self, payload, like):
-        y = payload["q"].astype(jnp.float32) * payload["scale"]
+        if self.block is None:
+            y = payload["q"].astype(jnp.float32) * payload["scale"]
+            return y.reshape(like.shape).astype(like.dtype)
+        n = math.prod(like.shape)
+        rows = self._blocked(payload["q"].ravel().astype(jnp.float32))
+        y = (rows * payload["scale"][:, None]).ravel()[:n]
         return y.reshape(like.shape).astype(like.dtype)
 
+    def _num_scales(self, n: int) -> int:
+        return 1 if self.block is None else -(-n // self.block)
+
     def leaf_bits(self, shape) -> float:
-        return float(self.qbits) * math.prod(shape) + SCALE_BITS
+        n = math.prod(shape)
+        return float(self.qbits) * n + SCALE_BITS * self._num_scales(n)
 
     def price_bits(self, full_bits, ref_bits=F32_BITS):
-        return full_bits * self.qbits / ref_bits
+        wire = full_bits * self.qbits / ref_bits
+        if self.block is not None:
+            # block scales are NOT negligible at small blocks: price them
+            # (treating the model as one flat tensor, like TopKCodec)
+            wire += SCALE_BITS * math.ceil(full_bits / ref_bits / self.block)
+        return wire
 
 
 class TopKCodec(Codec):
@@ -339,8 +385,9 @@ CODECS = ("none", "bf16", "int8", "int4", "topk:0.05")
 
 def get_codec(spec) -> Optional[Codec]:
     """Parse a codec spec: a Codec (returned as-is), None, or a string —
-    ``none|f32|identity``, ``bf16``, ``int8``, ``int4``, ``topk[:k]``,
-    each with an optional ``+ef`` error-feedback suffix."""
+    ``none|f32|identity``, ``bf16``, ``int8``, ``int4`` (optionally with
+    block-wise scales: ``int8:b64``), ``topk[:k]``, each with an optional
+    ``+ef`` error-feedback suffix."""
     if spec is None or isinstance(spec, Codec):
         return spec
     if not isinstance(spec, str):
@@ -353,10 +400,11 @@ def get_codec(spec) -> Optional[Codec]:
         codec = IdentityCodec()
     elif name == "bf16":
         codec = Bf16Codec()
-    elif name == "int8":
-        codec = IntCodec(8)
-    elif name == "int4":
-        codec = IntCodec(4)
+    elif name in ("int8", "int4") or name.startswith(("int8:", "int4:")):
+        bits = int(name[3])
+        _, _, arg = name.partition(":")
+        block = int(arg.lstrip("b")) if arg else None
+        codec = IntCodec(bits, block=block)
     elif name.startswith("topk"):
         _, _, arg = name.partition(":")
         codec = TopKCodec(float(arg)) if arg else TopKCodec()

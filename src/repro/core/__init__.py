@@ -1,5 +1,6 @@
 """The paper's contribution: MAML meta-learning (Eqs. 2-5), decentralized
 consensus FL (Eq. 6), the energy/communication footprint model (Eqs. 8-12),
 and the two-stage MTL protocol tying them together."""
-from repro.core import (consensus, energy, federated, maml, multitask,
-                        protocol, topology)
+from repro.core import (consensus, energy, engine, federated, maml,
+                        multitask, protocol, topology)
+from repro.core.engine import ConsensusEngine  # noqa: F401

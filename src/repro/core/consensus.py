@@ -3,22 +3,30 @@
     W^{(k)}_{t+1} = W^{(k)}_t + Σ_{h∈N_k} σ_{k,h} (W^{(h)}_t − W^{(k)}_t),
     σ_{k,h} = |E_h| / Σ_{j∈N_k} |E_j|                       (paper / ref [5])
 
-Two execution modes:
+Execution primitives (pick via :class:`repro.core.engine.ConsensusEngine`
+rather than calling these directly):
 
 * ``consensus_step``           — dense: agent-stacked params (K on the
   leading axis) mixed by a (K, K) matrix. This is the reference semantics
-  and the CPU path for the paper's 12-robot case study.
-* ``ring_consensus_step``      — distributed: each mesh position along
-  ``axis_name`` holds ONE agent's replica; neighbour exchange is
-  ``jax.lax.ppermute`` on the ICI ring (sidelink SL in the paper's terms).
-  Run under ``shard_map``. Communication per round per agent =
-  2 · b(W) — exactly the quantity the paper's Eq. (11) prices.
+  and the CPU path for the paper's 12-robot case study; ``impl`` selects
+  the dense matmul or the batched sparse gather / fused Pallas kernel.
+* ``sharded_consensus_step``   — the population split into per-mesh-
+  position BLOCKS of agents under shard_map; each block all_gathers the
+  codec WIRE along the agent axis and mixes its own rows (K ≫ cores).
+* ``distributed_consensus_step`` — each mesh position holds ONE agent;
+  neighbour exchange is ``jax.lax.ppermute`` rounds from
+  :func:`permutation_schedule`, shipping the codec wire format (int8
+  lanes + scales, bf16, …) — the paper's sidelink SL traffic, priced by
+  Eq. (11) at exactly the permuted bytes.
+* ``ring_consensus_step``      — the legacy ring-only ppermute path
+  (``message_dtype`` casts the wire); kept for the volume benchmark.
 
 Also provides Metropolis–Hastings weights (symmetric, doubly-stochastic —
 the consensus-theory default) behind ``kind="metropolis"``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -125,7 +133,8 @@ def auto_path(mix, codec=None) -> str:
     codec = getattr(codec, "inner", codec)       # unwrap ErrorFeedback
     bpp = getattr(codec, "bits_per_param", None) if codec is not None \
         else None
-    gathers_wire = getattr(codec, "qbits", None) == 8
+    gathers_wire = (getattr(codec, "qbits", None) == 8
+                    and getattr(codec, "block", None) is None)
     h_eff = H * (bpp / 32.0) if (bpp and gathers_wire) else float(H)
     return "sparse" if h_eff <= max(K // 4, 1) else "dense"
 
@@ -171,6 +180,10 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
       * ``"pallas"`` — batched-over-agents sparse gather feeding the fused
         :mod:`repro.kernels.consensus_update` kernel (interpret mode off
         TPU), O(K·H·N);
+      * ``"sparse"`` — the same sparse gather, but off TPU it runs the
+        pure-jnp kernel oracle instead of interpret mode (what the
+        engine's ``sparse-pallas`` plan uses: Pallas where it compiles,
+        the bit-identical oracle elsewhere);
       * ``"auto"``   — for sparse graphs (see :func:`auto_path`), pallas on
         TPU and otherwise the same sparse gather applied through the
         pure-jnp kernel oracle (bit-identical to
@@ -201,8 +214,8 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
     neighbour structure is extracted at trace time.
     """
     mix = resolve_mix(mix)
-    if impl not in ("xla", "pallas", "auto"):
-        raise ValueError(f"unknown impl {impl!r}; use xla/pallas/auto")
+    if impl not in ("xla", "pallas", "auto", "sparse"):
+        raise ValueError(f"unknown impl {impl!r}; use xla/pallas/sparse/auto")
     if codec is None and (codec_state is not None or gamma != 1.0):
         raise ValueError(
             "codec_state/gamma only apply to compressed consensus — "
@@ -225,7 +238,7 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
 
         return jax.tree.map(mix_leaf, stacked_params)
 
-    use_pallas = impl == "pallas" or (impl == "auto"
+    use_pallas = impl == "pallas" or (impl in ("auto", "sparse")
                                       and jax.default_backend() == "tpu")
     idx_np, sig_np = sparse_structure(mix)
     idx, sig = jnp.asarray(idx_np), jnp.asarray(sig_np)
@@ -322,7 +335,7 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
             xhat = jax.vmap(lambda p: base.decode_leaf(p, like))(enc)
 
         if sparse and isinstance(base, comms.IntCodec) \
-                and base.qbits == 8:
+                and base.qbits == 8 and base.block is None:
             q, s = enc["q"], enc["scale"]
 
             def one(xk, qk, sk, ik, sgk):
@@ -419,6 +432,320 @@ def ring_consensus_step(params, data_size, axis_name: str, hops: int = 1,
         return (x.astype(jnp.float32) + upd).astype(x.dtype)
 
     return jax.tree.map(combine, params)
+
+
+def permutation_schedule(mix, gamma: float = 1.0):
+    """Decompose a CONCRETE σ matrix into ppermute rounds for the
+    distributed path: a list of ``(pairs, sig)`` where ``pairs`` is a full
+    source→target permutation of the K mesh positions and ``sig`` is the
+    (K,) vector of Eq.-(6) weights each target applies to the message it
+    receives that round (γ·σ_{tgt,src}; 0 where the round carries no real
+    edge for that target).
+
+    Greedy maximal-matching cover: every directed edge of the graph is
+    carried by exactly one round, so the number of ppermutes is ≥ the max
+    degree and usually equal to it (ring hops=1 ⇒ 2 rounds). Each matching
+    is completed to a FULL permutation — vmap's ppermute batching rule
+    (and a clean SPMD lowering) wants every position as source and target
+    exactly once — and the padding lanes land with σ = 0, an exact no-op
+    in Eq. (6). Eq.-(11) pricing is untouched: it counts the graph's
+    directed edges, not the permutation padding.
+    """
+    M = np.asarray(mix, np.float32)
+    K = M.shape[0]
+    off = M.copy()
+    np.fill_diagonal(off, 0.0)
+    edges = {(k, h) for k in range(K)
+             for h in np.flatnonzero(off[k] != 0.0)}
+    schedule = []
+    while edges:
+        used_src, used_tgt = set(), set()
+        pairs, sig = [], np.zeros(K, np.float32)
+        for k, h in sorted(edges):
+            if h in used_src or k in used_tgt:
+                continue
+            pairs.append((h, k))
+            sig[k] = gamma * off[k, h]
+            used_src.add(h)
+            used_tgt.add(k)
+        edges -= {(tgt, src) for src, tgt in pairs}
+        free_src = [s for s in range(K) if s not in used_src]
+        free_tgt = [t for t in range(K) if t not in used_tgt]
+        pairs.extend(zip(free_src, free_tgt))
+        schedule.append((tuple(pairs), sig))
+    return schedule
+
+
+def _permute_agent_step(params, residual, sigs, akey, *, pairs_list,
+                        axis_name: str, codec, stateful: bool,
+                        pin_wire: bool = False):
+    """One agent's Eq.-(6) round on the ppermute path (runs per mesh
+    position under shard_map, or per vmapped lane in the emulation).
+
+    The agent encodes its message once (m = W + r with error feedback),
+    the WIRE payload (int8 q + scales, bf16, top-k pairs, …) rides every
+    scheduled ppermute, and each received payload is decoded INSIDE the
+    combine around the agent's own decoded copy x̂_k — the same CHOCO
+    recentering as the dense path, so the population mean stays exact
+    under doubly-stochastic σ regardless of the wire format.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    res_leaves = (jax.tree.leaves(residual) if residual is not None
+                  else [None] * len(leaves))
+    new_leaves, new_res = [], []
+    for li, (x, r) in enumerate(zip(leaves, res_leaves)):
+        xf = jnp.asarray(x, jnp.float32).ravel()
+        kk = None if akey is None else jax.random.fold_in(akey, li)
+        like = jax.ShapeDtypeStruct(xf.shape, jnp.float32)
+        if codec is None:
+            payload, xhat = {"v": xf}, xf
+        elif stateful:
+            payload, xhat, r_new = codec.encode_leaf_stateful(
+                xf, r.ravel(), kk)
+            new_res.append(r_new.reshape(jnp.shape(x)))
+        else:
+            payload = codec.encode_leaf(xf, kk)
+            xhat = codec.decode_leaf(payload, like)
+        if pin_wire:
+            # pin the wire format: XLA commutes pure-convert encodes
+            # (bf16) past collective-permutes and would ship f32
+            # otherwise (the barrier has no vmap batching rule, so the
+            # emulation path — where no bytes cross a real link — skips it)
+            payload = jax.lax.optimization_barrier(payload)
+        acc = jnp.zeros_like(xf)
+        for m, pairs in enumerate(pairs_list):
+            nb = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis_name, pairs), payload)
+            nb_hat = nb["v"] if codec is None else codec.decode_leaf(nb, like)
+            acc = acc + sigs[m] * (nb_hat - xhat)
+        new_leaves.append((xf + acc).reshape(jnp.shape(x)).astype(x.dtype))
+    new_params = jax.tree.unflatten(treedef, new_leaves)
+    res_out = jax.tree.unflatten(treedef, new_res) if stateful else None
+    return new_params, res_out
+
+
+def _mesh_axis(mesh, axis_name: str):
+    if mesh is None:
+        return None
+    return dict(mesh.shape).get(axis_name)
+
+
+def distributed_consensus_step(stacked_params, mix, *,
+                               axis_name: str = "agents", mesh=None,
+                               codec=None, codec_state=None, key=None,
+                               gamma: float = 1.0,
+                               error_feedback: bool = True,
+                               schedule=None):
+    """Eq. (6) on the DISTRIBUTED path with codec-aware wires: one agent
+    per mesh position, neighbour exchange via ``jax.lax.ppermute`` rounds
+    from :func:`permutation_schedule` (works for ANY concrete graph, not
+    just rings), and the permuted payload is the CODEC wire — int8/int4
+    lanes plus their scales for :class:`~repro.comms.codecs.IntCodec`,
+    bf16 for the cast codec — so ``Topology.round_comm_joules(codec=)``
+    prices exactly what this path ships.
+
+    With ``mesh`` holding an ``axis_name`` axis of size K, runs under
+    shard_map (one agent per device; the ppermutes are ICI sidelink
+    traffic). Otherwise runs the vmap-with-axis_name emulation, which
+    shares the collective semantics — the CPU test path.
+
+    Returns ``(new_stacked_params, new_codec_state)``; the state is the
+    stacked error-feedback residual (None for stateless codecs).
+    """
+    mix = resolve_mix(mix)
+    if codec is not None:
+        from repro import comms   # deferred: core stays import-light
+        codec = comms.resolve_codec(codec, error_feedback)
+    stateful = codec is not None and codec.stateful
+    if schedule is None:
+        schedule = permutation_schedule(mix, gamma)
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    pairs_list = [p for p, _ in schedule]
+    sig_stack = (jnp.stack([jnp.asarray(s) for _, s in schedule], axis=1)
+                 if schedule else jnp.zeros((K, 0), jnp.float32))
+    keys = None if key is None else jax.random.split(key, K)
+    if stateful and codec_state is None:
+        codec_state = jax.tree.map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), stacked_params)
+    if not stateful:
+        codec_state = None
+
+    use_mesh = _mesh_axis(mesh, axis_name) == K
+
+    def agent_fn(p, r, sg, kk):
+        return _permute_agent_step(p, r, sg, kk, pairs_list=pairs_list,
+                                   axis_name=axis_name, codec=codec,
+                                   stateful=stateful, pin_wire=use_mesh)
+
+    if use_mesh:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        spec = PartitionSpec(axis_name)
+
+        def block_fn(p, r, sg, kk):     # each position holds ONE agent
+            sq = lambda t: jax.tree.map(lambda a: a[0], t)
+            out, res = agent_fn(sq(p), sq(r), sq(sg), sq(kk))
+            un = lambda t: jax.tree.map(lambda a: a[None], t)
+            return un(out), un(res)
+
+        new, res = shard_map(
+            block_fn, mesh=mesh, in_specs=(spec,) * 4,
+            out_specs=(spec, spec), check_rep=False)(
+            stacked_params, codec_state, sig_stack, keys)
+    else:
+        new, res = jax.vmap(agent_fn, axis_name=axis_name)(
+            stacked_params, codec_state, sig_stack, keys)
+    return new, (res if stateful else None)
+
+
+def _sharded_block_leaf(x_blk, r_blk, idx_blk, sig_blk, keys_blk, *, K: int,
+                        codec, stateful: bool, axis_name: str,
+                        kernel_impl: str, kw: dict,
+                        pin_wire: bool = False):
+    """One mesh position's block of agents, one leaf: encode the owned
+    rows, all_gather the WIRE along the agent axis, then mix every owned
+    row from the gathered wire (fused int8 dequant-consensus kernel for
+    per-tensor IntCodec wires; generic decode-then-combine otherwise)."""
+    like = jax.ShapeDtypeStruct(x_blk.shape[1:], jnp.float32)
+    r_new = None
+    if codec is None:
+        payload, xhat_blk = {"v": x_blk}, x_blk
+    elif stateful:
+        if keys_blk is None:
+            payload, xhat_blk, r_new = jax.vmap(
+                lambda m, rr: codec.encode_leaf_stateful(m, rr, None))(
+                x_blk, r_blk)
+        else:
+            payload, xhat_blk, r_new = jax.vmap(
+                codec.encode_leaf_stateful)(x_blk, r_blk, keys_blk)
+    else:
+        if keys_blk is None:
+            payload = jax.vmap(lambda m: codec.encode_leaf(m, None))(x_blk)
+        else:
+            payload = jax.vmap(codec.encode_leaf)(x_blk, keys_blk)
+        xhat_blk = jax.vmap(lambda p: codec.decode_leaf(p, like))(payload)
+    if pin_wire:    # pin the wire dtype (no batching rule: mesh path only)
+        payload = jax.lax.optimization_barrier(payload)
+    gathered = jax.tree.map(
+        lambda a: jax.lax.all_gather(a, axis_name
+                                     ).reshape((K,) + a.shape[1:]),
+        payload)
+
+    from repro.kernels import ops   # deferred: keeps consensus importable
+
+    base = getattr(codec, "inner", codec)
+    if codec is not None and getattr(base, "qbits", None) is not None \
+            and getattr(base, "block", None) is None:
+        # per-tensor int wire: neighbour tiles stay int8 lanes through the
+        # gather; dequant happens INSIDE the fused combine
+        def one(xk, qk, sk, ik, sgk):
+            return ops.quant_consensus_update(
+                xk, qk, sk, gathered["q"][ik], gathered["scale"][ik], sgk,
+                impl=kernel_impl, **kw)
+
+        y = jax.vmap(one)(x_blk, payload["q"], payload["scale"],
+                          idx_blk, sig_blk)
+    else:
+        xhat_all = (gathered["v"] if codec is None else
+                    jax.vmap(lambda p: codec.decode_leaf(p, like))(gathered))
+
+        def one(xk, xhk, ik, sgk):
+            mixed_hat = ops.consensus_update(xhk, xhat_all[ik], sgk,
+                                             impl=kernel_impl, **kw)
+            return xk + (mixed_hat - xhk)
+
+        y = jax.vmap(one)(x_blk, xhat_blk, idx_blk, sig_blk)
+    return y, r_new
+
+
+def sharded_consensus_step(stacked_params, mix, *, num_blocks: int,
+                           axis_name: str = "agents", mesh=None,
+                           codec=None, codec_state=None, key=None,
+                           gamma: float = 1.0,
+                           error_feedback: bool = True,
+                           block_n: Optional[int] = None):
+    """Eq. (6) on the SHARDED path: the K-agent population is split into
+    ``num_blocks`` contiguous blocks of B = K/num_blocks agents, each
+    owned by one mesh position. Per round, every position encodes its own
+    block's wires, ``all_gather``s the (K, ·) WIRE along the agent axis
+    (codec-compressed bytes, not f32), and mixes its owned rows through
+    the sparse gather — so no single program ever materializes the
+    (K, K) mixing stack or the K×H f32 neighbour tensor, which is what
+    lifts the single-program vmap limit for K ≫ core count.
+
+    With ``mesh`` holding an ``axis_name`` axis of size ``num_blocks``,
+    runs under shard_map; otherwise the vmap-with-axis_name emulation
+    (identical collective semantics — the CPU test path).
+
+    Returns ``(new_stacked_params, new_codec_state)`` like the other
+    compressed paths; the sparse structure needs a CONCRETE mix.
+    """
+    mix = resolve_mix(mix)
+    if codec is not None:
+        from repro import comms
+        codec = comms.resolve_codec(codec, error_feedback)
+    stateful = codec is not None and codec.stateful
+    leaves, treedef = jax.tree.flatten(stacked_params)
+    K = leaves[0].shape[0]
+    if num_blocks < 1 or K % num_blocks:
+        raise ValueError(
+            f"num_blocks={num_blocks} must divide the population K={K}")
+    B = K // num_blocks
+    idx_np, sig_np = sparse_structure(mix)
+    idx = jnp.asarray(idx_np)
+    sig = gamma * jnp.asarray(sig_np)
+    kernel_impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    kw = {} if block_n is None else {"block_n": block_n}
+
+    if stateful:
+        state_leaves = (jax.tree.leaves(codec_state)
+                        if codec_state is not None
+                        else [jnp.zeros(jnp.shape(x), jnp.float32)
+                              for x in leaves])
+        if len(state_leaves) != len(leaves):
+            raise ValueError("codec_state does not match stacked_params")
+    else:
+        state_leaves = [None] * len(leaves)
+
+    use_mesh = _mesh_axis(mesh, axis_name) == num_blocks
+
+    def _run(fn, *args):
+        """Map ``fn`` over the block axis: shard_map on a real mesh,
+        vmap(axis_name) emulation otherwise. args are (K, ...) or None."""
+        if use_mesh:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+
+            spec = PartitionSpec(axis_name)
+            return shard_map(fn, mesh=mesh, in_specs=(spec,) * len(args),
+                             out_specs=(spec, spec),
+                             check_rep=False)(*args)
+        blk = jax.tree.map(
+            lambda a: a.reshape((num_blocks, B) + a.shape[1:]), args)
+        out, res = jax.vmap(fn, axis_name=axis_name)(*blk)
+        return jax.tree.map(
+            lambda a: a.reshape((K,) + a.shape[2:]), (out, res))
+
+    new_leaves, new_state = [], []
+    for li, (x, r) in enumerate(zip(leaves, state_leaves)):
+        xf = x.astype(jnp.float32).reshape(K, -1)
+        rf = None if r is None else r.reshape(K, -1)
+        keys_leaf = (None if key is None else
+                     jax.random.split(jax.random.fold_in(key, li), K))
+        block_fn = functools.partial(
+            _sharded_block_leaf, K=K, codec=codec, stateful=stateful,
+            axis_name=axis_name, kernel_impl=kernel_impl, kw=kw,
+            pin_wire=use_mesh)
+        y, r_new = _run(block_fn, xf, rf, idx, sig, keys_leaf)
+        new_leaves.append(y.reshape(x.shape).astype(x.dtype))
+        if stateful:
+            new_state.append(r_new.reshape(x.shape))
+
+    new_params = jax.tree.unflatten(treedef, new_leaves)
+    state_out = (jax.tree.unflatten(treedef, new_state)
+                 if stateful else None)
+    return new_params, state_out
 
 
 def cluster_ring_consensus_step(params, data_size, axis_name: str,

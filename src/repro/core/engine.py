@@ -1,0 +1,242 @@
+"""ConsensusEngine — the single entry point for one Eq.-(6) mixing round.
+
+The paper's energy balance (Eqs. 6/11) is evaluated per consensus round,
+so the round executor is the hot path of every scaling experiment. This
+module turns a ``(Topology, K, codec, mesh)`` description into an
+execution **plan** once, at construction, and every caller
+(:mod:`repro.core.protocol`, :mod:`repro.core.federated`,
+:mod:`repro.rl.casestudy`, :mod:`repro.launch.train`, the scale
+benchmark) drives the same ``engine.step(stacked_params, codec_state,
+key) -> (params, codec_state)`` — no ``impl=`` strings or per-caller
+path wiring.
+
+Plans
+-----
+* ``dense-xla``     — the reference (K, K) matmul per leaf; the only plan
+  that accepts a TRACED per-round mix override (time-varying topologies,
+  :func:`repro.core.topology.dropout`).
+* ``sparse-pallas`` — batched-over-agents sparse gather through the fused
+  Pallas consensus kernels (the bit-identical jnp oracle off TPU);
+  O(K·H·N) instead of O(K²·N).
+* ``sharded``       — the sparse gather under shard_map over an agent
+  axis: each mesh position owns a block of K/num_blocks agents, encodes
+  its own block's wires, ``all_gather``s the (K, ·) WIRE (codec bytes,
+  not f32), and mixes only its rows. No single program materializes the
+  (K, K) stack, which is what lets K = 16384 populations mix on meshes
+  of any size (and on one CPU via the vmap-with-axis_name emulation).
+* ``distributed``   — one agent per mesh position; neighbour exchange is
+  ``jax.lax.ppermute`` rounds from a host-computed permutation schedule,
+  and the permuted payload is the CODEC wire: int8/int4 lanes + scales,
+  bf16 casts. This makes ``Topology.round_comm_joules(codec=)`` pricing
+  truthful on the one path that actually distributes across a mesh —
+  an int8 wire ships (and prices) 4× below f32.
+
+Wire formats per path: ``dense-xla`` mixes DECODED f32 models (the wire
+is an accounting construct priced by Eq. 11); ``sparse-pallas`` and
+``sharded`` gather the int-quantized wire itself through the fused
+dequant-consensus kernel (other codecs decode before the gather);
+``distributed`` permutes the wire payload for every codec.
+
+CHOCO mean-exactness invariant: every compressed plan recenters each
+agent's update on its OWN decoded copy — W_k + Σ_h σ_{k,h}(x̂_h − x̂_k) —
+so under doubly-stochastic σ the population mean is exactly preserved no
+matter how lossy the codec; the error-feedback wrapper (on by default
+for lossy codecs) telescopes the per-round quantization error. All four
+plans therefore agree with the dense-f32 oracle to within the codec's
+round-trip tolerance (tested at K = 256 in ``tests/test_engine.py``).
+
+``plan="auto"`` selection: with no mesh, the payload-aware density
+heuristic (:func:`repro.core.consensus.auto_path`) picks dense-xla vs
+sparse-pallas; with a mesh carrying the agent axis, one-agent-per-
+position meshes take ``distributed`` and everything else ``sharded``
+(blocks = mesh axis size).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import consensus
+
+PLAN_KINDS = ("dense-xla", "sparse-pallas", "sharded", "distributed")
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """A resolved consensus execution strategy (see module docstring)."""
+
+    kind: str
+    reason: str
+    num_blocks: int = 1
+    axis_name: str = "agents"
+
+    def __post_init__(self):
+        if self.kind not in PLAN_KINDS:
+            raise ValueError(f"unknown plan {self.kind!r}; "
+                             f"choose from {PLAN_KINDS} or 'auto'")
+
+
+class ConsensusEngine:
+    """One Eq.-(6) round behind one entry point (see module docstring).
+
+    Arguments
+    ---------
+    topology:   a :class:`repro.core.topology.Topology` (preferred — also
+                enables :meth:`round_comm_joules`) or a concrete (K, K)
+                σ matrix.
+    codec:      model-exchange codec spec/Codec (:mod:`repro.comms`);
+                lossy codecs get the error-feedback wrapper unless
+                ``error_feedback=False``.
+    mesh:       optional ``jax.sharding.Mesh`` whose ``axis_name`` axis
+                carries agents (one per position ⇒ distributed; blocks
+                ⇒ sharded). ``None`` runs every plan in one program
+                (sharded/distributed fall back to the vmap-with-
+                axis_name emulation, which shares collective semantics).
+    plan:       "auto" (default) or one of :data:`PLAN_KINDS`.
+    num_blocks: block count for the sharded plan (default: mesh axis
+                size, else 1).
+    data_sizes / mix_kind / include_self: forwarded to the topology's
+                ``mixing`` (uniform paper weights by default).
+    gamma:      CHOCO consensus step size (damps off-diagonal σ).
+    """
+
+    def __init__(self, topology, *, codec=None, mesh=None,
+                 plan: str = "auto", axis_name: str = "agents",
+                 num_blocks: Optional[int] = None, data_sizes=None,
+                 mix_kind: str = "paper", include_self: bool = True,
+                 gamma: float = 1.0, error_feedback: bool = True,
+                 block_n: Optional[int] = None):
+        from repro import comms   # deferred: core stays import-light
+        if isinstance(topology, ConsensusEngine):
+            raise TypeError("pass a Topology or mix, not an engine "
+                            "(use ConsensusEngine.wrap)")
+        self.topology = topology if hasattr(topology, "mixing") else None
+        self.mix = np.asarray(
+            topology.mixing(data_sizes, kind=mix_kind,
+                            include_self=include_self)
+            if self.topology is not None else topology, np.float32)
+        self.K = self.mix.shape[0]
+        self.codec = comms.resolve_codec(codec, error_feedback)
+        self.mesh = mesh
+        self.gamma = float(gamma)
+        self.block_n = block_n
+        self.plan = self._resolve_plan(plan, axis_name, num_blocks)
+        self._schedule = None          # distributed ppermute rounds, lazy
+
+    # -- plan selection -----------------------------------------------------
+    def _resolve_plan(self, plan: str, axis_name: str,
+                      num_blocks: Optional[int]) -> ExecutionPlan:
+        mesh_axis = consensus._mesh_axis(self.mesh, axis_name)
+        if plan == "auto":
+            if mesh_axis is not None:
+                if mesh_axis == self.K:
+                    return ExecutionPlan(
+                        "distributed", "mesh holds one agent per "
+                        f"'{axis_name}' position", 1, axis_name)
+                nb = num_blocks or mesh_axis
+                if self.K % nb:
+                    # a mesh was given: honour it — fall back to the
+                    # largest block count that divides K rather than
+                    # silently reverting to a single-program plan
+                    nb = next(d for d in range(min(nb, self.K), 0, -1)
+                              if self.K % d == 0)
+                return ExecutionPlan(
+                    "sharded", f"K={self.K} agents in {nb} blocks over "
+                    f"the {mesh_axis}-wide '{axis_name}' mesh axis",
+                    nb, axis_name)
+            base = getattr(self.codec, "inner", self.codec)
+            dense = consensus.auto_path(self.mix, codec=base) == "dense"
+            return ExecutionPlan(
+                "dense-xla" if dense else "sparse-pallas",
+                "payload-aware density heuristic "
+                f"(max degree vs K={self.K})", 1, axis_name)
+        if plan == "sharded":
+            nb = num_blocks or mesh_axis or 1
+            return ExecutionPlan("sharded", "explicit", nb, axis_name)
+        return ExecutionPlan(plan, "explicit", num_blocks or 1, axis_name)
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, stacked_params):
+        """Initial codec state (stacked EF residuals; None if stateless)."""
+        if self.codec is None or not self.codec.stateful:
+            return None
+        return self.codec.init_state(stacked_params)
+
+    # -- the round ----------------------------------------------------------
+    def step(self, stacked_params, codec_state=None, key=None, *, mix=None):
+        """One Eq.-(6) consensus round on agent-stacked params (leading
+        axis K). Returns ``(new_stacked_params, new_codec_state)`` for
+        EVERY plan and codec (state is None for codec-free rounds).
+
+        ``key`` enables stochastic rounding for quantizing codecs.
+        ``mix`` overrides the engine's σ matrix for THIS round (may be
+        traced — time-varying topologies under jit); only the dense-xla
+        plan supports it, every other plan bakes the neighbour structure
+        in at trace time.
+        """
+        kind = self.plan.kind
+        if mix is not None and kind != "dense-xla":
+            raise ValueError(
+                f"per-round mix overrides need the dense-xla plan, not "
+                f"{kind!r} (sparse structure is fixed at trace time)")
+        mix_ = self.mix if mix is None else mix
+        if kind == "dense-xla" or kind == "sparse-pallas":
+            impl = "xla" if kind == "dense-xla" else "sparse"
+            if self.codec is None:
+                return consensus.consensus_step(
+                    stacked_params, mix_, impl=impl,
+                    block_n=self.block_n), None
+            # error_feedback=False: self.codec is ALREADY resolved (the
+            # EF default was applied at engine construction) — the step
+            # functions must not re-wrap it
+            return consensus.consensus_step(
+                stacked_params, mix_, impl=impl, block_n=self.block_n,
+                codec=self.codec, codec_state=codec_state, key=key,
+                gamma=self.gamma, error_feedback=False)
+        if kind == "sharded":
+            return consensus.sharded_consensus_step(
+                stacked_params, mix_, num_blocks=self.plan.num_blocks,
+                axis_name=self.plan.axis_name, mesh=self.mesh,
+                codec=self.codec, codec_state=codec_state, key=key,
+                gamma=self.gamma, block_n=self.block_n,
+                error_feedback=False)
+        if self._schedule is None:
+            self._schedule = consensus.permutation_schedule(
+                self.mix, self.gamma)
+        return consensus.distributed_consensus_step(
+            stacked_params, mix_, axis_name=self.plan.axis_name,
+            mesh=self.mesh, codec=self.codec, codec_state=codec_state,
+            key=key, gamma=self.gamma, schedule=self._schedule,
+            error_feedback=False)
+
+    # -- Eq.-(11) pricing ---------------------------------------------------
+    def round_comm_joules(self, energy_params,
+                          model_bits: Optional[float] = None) -> float:
+        """Eq.-(11) communication energy of ONE round at THIS engine's
+        wire format (delegates to the topology's codec-aware pricing)."""
+        if self.topology is None:
+            raise ValueError("engine was built from a raw mix matrix; "
+                             "construct it from a Topology to price rounds")
+        return self.topology.round_comm_joules(
+            energy_params, model_bits=model_bits, codec=self.codec)
+
+    # -- conveniences -------------------------------------------------------
+    @classmethod
+    def wrap(cls, obj, **kw) -> "ConsensusEngine":
+        """Coerce ``obj`` (engine, Topology, or concrete mix) to an
+        engine; extra kwargs only apply when constructing a new one."""
+        if isinstance(obj, cls):
+            if any(v is not None for v in kw.values()):
+                raise ValueError(
+                    f"{sorted(k for k, v in kw.items() if v is not None)} "
+                    "cannot be re-specified for an existing engine")
+            return obj
+        return cls(obj, **kw)
+
+    def __repr__(self):
+        codec = self.codec.name if self.codec is not None else None
+        return (f"ConsensusEngine(K={self.K}, plan={self.plan.kind!r}, "
+                f"codec={codec!r}, blocks={self.plan.num_blocks})")

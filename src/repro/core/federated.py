@@ -10,7 +10,7 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import consensus
+from repro.core.engine import ConsensusEngine
 from repro.optim import sgd, apply_updates
 
 
@@ -29,28 +29,30 @@ def local_steps(loss_fn, params, batches, lr: float):
 
 
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
-                           mix, lr: float, impl: str = "xla",
+                           engine, lr: float,
                            codec=None, codec_state=None, key=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
-    steps, then one consensus mixing step with the σ weights.
+    steps, then one consensus mixing step through the engine.
 
     stacked_params / stacked_batches: leading agent axis K (vmapped).
-    ``mix`` may be a (K, K) σ matrix or a Topology; ``impl`` selects the
-    consensus execution path (see :func:`consensus.consensus_step`).
+    ``engine``: a :class:`repro.core.engine.ConsensusEngine` (the single
+    consensus entry point), or a (K, K) σ matrix / Topology that is
+    wrapped into one (``codec`` then applies to the wrapped engine;
+    passing ``codec`` alongside a ready engine is an error).
 
-    ``codec``: compress the exchanged models (:mod:`repro.comms`) —
-    returns ``(params, new_codec_state)`` and the round's sidelink bytes
-    become the codec's wire size (Eq. 11); without a codec, returns just
-    the params as before. ``key`` enables stochastic rounding.
+    With a codec the return value is ``(params, new_codec_state)`` and
+    the round's sidelink bytes are the codec's wire size (Eq. 11);
+    without one it returns just the params as before. ``key`` enables
+    stochastic rounding.
     """
+    engine = ConsensusEngine.wrap(engine, codec=codec)
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
-    if codec is None:
-        return consensus.consensus_step(new_params, mix, impl=impl)
-    return consensus.consensus_step(new_params, mix, impl=impl,
-                                    codec=codec, codec_state=codec_state,
-                                    key=key)
+    params, state = engine.step(new_params, codec_state, key)
+    if engine.codec is None:
+        return params
+    return params, state
 
 
 def fedavg_round(loss_fn, global_params, stacked_batches, weights,
@@ -72,38 +74,36 @@ def fedavg_round(loss_fn, global_params, stacked_batches, weights,
     return jax.tree.map(avg, locals_)
 
 
-def run_fl_until(loss_fn, stacked_params, sample_batches, mix, lr: float,
-                 *, target_fn: Callable, max_rounds: int, key,
-                 eval_every: int = 1, impl: str = "xla", codec=None):
+def run_fl_until(loss_fn, stacked_params, sample_batches, engine,
+                 lr: float, *, target_fn: Callable, max_rounds: int, key,
+                 eval_every: int = 1, codec=None):
     """Drive decentralized FL rounds until ``target_fn(stacked_params) >=
     target`` (it returns (reached: bool, metric)) or ``max_rounds``.
 
     Returns (params, rounds_used, metric_history). This is how the paper's
-    t_i (rounds to reach running reward R) is measured. ``mix`` may be a
-    σ matrix or a Topology (closed over so the sparse consensus paths see
-    the concrete neighbour structure at trace time).
+    t_i (rounds to reach running reward R) is measured. ``engine`` may be
+    a :class:`repro.core.engine.ConsensusEngine`, a σ matrix, or a
+    Topology (the latter two are wrapped, with ``codec`` applied — the
+    engine's plan bakes the concrete neighbour structure in at trace
+    time).
 
-    ``codec``: spec string / Codec — compress every model exchange. The
-    codec's error-feedback residual state is threaded across rounds here
-    (one residual pytree per agent, carried like the params).
+    The engine codec's error-feedback residual state is threaded across
+    rounds here (one residual pytree per agent, carried like the params).
     """
-    if codec is not None:
-        from repro import comms
-        codec = comms.resolve_codec(codec)
+    engine = ConsensusEngine.wrap(engine, codec=codec)
+    if engine.codec is not None:
         step = jax.jit(lambda sp, st, b, k: decentralized_fl_round(
-            loss_fn, sp, b, mix, lr, impl=impl, codec=codec,
-            codec_state=st, key=k))
-        codec_state = (codec.init_state(stacked_params)
-                       if codec.stateful else None)
+            loss_fn, sp, b, engine, lr, codec_state=st, key=k))
+        codec_state = engine.init_state(stacked_params)
     else:
         step = jax.jit(lambda sp, b: decentralized_fl_round(
-            loss_fn, sp, b, mix, lr, impl=impl))
+            loss_fn, sp, b, engine, lr))
     history = []
     rounds_used = max_rounds
     for t in range(max_rounds):
         key, sk = jax.random.split(key)
         batches = sample_batches(sk, t)
-        if codec is not None:
+        if engine.codec is not None:
             key, ck = jax.random.split(key)
             stacked_params, codec_state = step(stacked_params, codec_state,
                                                batches, ck)

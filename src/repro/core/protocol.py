@@ -37,6 +37,21 @@ class ProtocolResult:
     #: model-exchange codec (spec string or Codec) — prices each stage-2
     #: sidelink message at its wire size in Eq. (11)
     codec: object = None
+    #: per-task Eq.-(11) comm joules MEASURED on the links actually up
+    #: each round (time-varying graphs, :func:`topology.dropout`); None
+    #: for static topologies, where the modeled E_FL term is exact
+    fl_comm_joules_measured: Optional[List[float]] = None
+
+    @property
+    def E_FL_comm(self) -> List[float]:
+        """Per-task Eq.-(11) comm term: measured per-round joules when a
+        time-varying topology recorded them, else modeled from the
+        static graph."""
+        if self.fl_comm_joules_measured is not None:
+            return list(self.fl_comm_joules_measured)
+        return [energy.fl_comm_energy(self.energy_params, t,
+                                      self.cluster_topology, self.codec)
+                for t in self.rounds_per_task]
 
     @property
     def E_ML(self) -> float:
@@ -44,9 +59,9 @@ class ProtocolResult:
 
     @property
     def E_FL(self) -> List[float]:
-        return [energy.fl_energy(self.energy_params, t,
-                                 self.cluster_topology, self.codec)
-                for t in self.rounds_per_task]
+        return [energy.fl_learning_energy(self.energy_params, t,
+                                          self.cluster_topology) + c
+                for t, c in zip(self.rounds_per_task, self.E_FL_comm)]
 
     @property
     def E_total(self) -> float:
@@ -104,13 +119,14 @@ class MTLProtocol:
             self.energy_params = dataclasses.replace(
                 self.energy_params, beta=2.0)
         # one cluster C_i's communication graph — drives BOTH the Eq.-(6)
-        # mixing weights and the Eq.-(11) link pricing
+        # mixing weights and the Eq.-(11) link pricing. The engine is the
+        # single consensus entry point: it resolves the codec (lossy ones
+        # get the error-feedback wrapper so adaptation still converges)
+        # and picks the execution plan for the cluster graph.
+        from repro.core.engine import ConsensusEngine
         self.cluster_topology = network.cluster_topology()
-        # model-exchange codec: every stage-2 consensus message is sent
-        # (and priced, Eq. 11) in this wire format; lossy codecs get the
-        # error-feedback wrapper so adaptation still converges
-        from repro import comms
-        self.codec = comms.resolve_codec(codec)
+        self.engine = ConsensusEngine(self.cluster_topology, codec=codec)
+        self.codec = self.engine.codec
 
     # -- stage 1 ------------------------------------------------------------
     def meta_train(self, key, t0: int):
@@ -147,7 +163,6 @@ class MTLProtocol:
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape)
             if hasattr(x, "shape") else x, init_params)
-        mix = self.cluster_topology.mixing(kind="paper")
 
         def sample_batches(k, _t):
             ks = jax.random.split(k, C)
@@ -160,9 +175,8 @@ class MTLProtocol:
             return self.target_fn(p0, task_id)
 
         return federated.run_fl_until(
-            self.loss_fn, stacked, sample_batches, mix, self.fl_lr,
-            target_fn=target, max_rounds=max_rounds, key=key,
-            codec=self.codec)
+            self.loss_fn, stacked, sample_batches, self.engine,
+            self.fl_lr, target_fn=target, max_rounds=max_rounds, key=key)
 
     # -- full protocol --------------------------------------------------------
     def run(self, key, t0: int, *, max_rounds: int = 500) -> ProtocolResult:

@@ -18,3 +18,13 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_agent_mesh(positions: int = 0, axis_name: str = "agents"):
+    """1-D mesh whose axis carries consensus AGENTS (one agent per
+    position for the engine's ``distributed`` plan; a block of agents
+    per position for ``sharded``). ``positions`` 0 ⇒ all local devices;
+    values above the device count are clamped."""
+    n = len(jax.devices())
+    positions = n if positions <= 0 else min(positions, n)
+    return jax.make_mesh((positions,), (axis_name,))

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.core import consensus, energy
+from repro.core import energy
 from repro.core import topology as topo_lib
+from repro.core.engine import PLAN_KINDS, ConsensusEngine
 from repro.data import TaskTokenDistribution
 from repro.launch import steps as steps_lib
 from repro.models import frontend
@@ -76,36 +77,45 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     local_steps: int, batch: int, seq: int, lr: float,
                     consensus_every: int = 1, seed: int = 0,
                     energy_params=None, consensus_dtype=None,
-                    consensus_impl: str = "xla", codec=None):
+                    consensus_plan: str = "auto", codec=None, mesh=None):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
-    consensus only mixes within a cluster (per-task Topology, dense or
-    sparse/Pallas via ``consensus_impl``). Returns (stacked_params,
-    per_round losses, energy J). ``consensus_dtype``: cast exchanged
-    models (e.g. bf16) — halves the sidelink bytes of Eq. (11);
-    EXPERIMENTS.md §Perf P3. ``codec`` (spec string, :mod:`repro.comms`)
-    supersedes it: the exchange runs through the codec (error feedback
-    for lossy ones) and the Eq.-(11) estimate prices the codec's wire
-    bits instead of the storage dtype.
+    consensus only mixes within a cluster (per-task Topology) through one
+    :class:`repro.core.engine.ConsensusEngine` — ``consensus_plan``
+    picks the execution plan ("auto", "dense-xla", "sparse-pallas",
+    "sharded", "distributed"; a ``mesh`` with an ``agents`` axis enables
+    the multi-position plans). Returns (stacked_params, per_round losses,
+    energy J). ``consensus_dtype``: cast exchanged models (e.g. bf16) —
+    halves the sidelink bytes of Eq. (11); EXPERIMENTS.md §Perf P3.
+    ``codec`` (spec string, :mod:`repro.comms`) supersedes it: the
+    exchange runs through the codec (error feedback for lossy ones) and
+    the Eq.-(11) estimate prices the codec's wire bits instead of the
+    storage dtype. ``codec="auto"`` picks the wire format from the
+    graph's bottleneck link efficiency (:func:`repro.comms.select_codec`).
     """
     assert agents % tasks == 0
+    per = agents // tasks
+
+    # the population graph (per-task SL clusters) drives the Eq.-(6)
+    # mixing weights, the engine plan, AND the Eq.-(11) link pricing
+    topo = topo_lib.clusters(tasks, per)
+    ep = energy_params or energy.paper_calibrated("fig3")
     if codec is not None:
         from repro import comms
-        codec = comms.resolve_codec(codec)
+        codec = (comms.select_codec(topo, ep) if codec == "auto"
+                 else comms.resolve_codec(codec))
         consensus_dtype = None        # the codec defines the wire format
-    per = agents // tasks
+    engine = ConsensusEngine(topo, codec=codec, mesh=mesh,
+                             plan=consensus_plan)
+    codec = engine.codec
+
     model = get_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key, cfg)
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (agents,) + x.shape), params)
     dist = TaskTokenDistribution(vocab_size=cfg.vocab_size, num_tasks=tasks)
-
-    # the population graph (per-task SL clusters) drives BOTH the Eq.-(6)
-    # mixing weights and the Eq.-(11) link pricing below
-    topo = topo_lib.clusters(tasks, per)
-    mix = topo.mixing(kind="paper")
     task_of_agent = jnp.arange(agents, dtype=jnp.int32) // per
 
     def loss_fn(p, b):
@@ -138,24 +148,20 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
         if codec is not None:
-            new, codec_state = consensus.consensus_step(
-                new, mix, impl=consensus_impl, codec=codec,
-                codec_state=codec_state,
-                key=jax.random.fold_in(key, agents + 1))
+            new, codec_state = engine.step(
+                new, codec_state, jax.random.fold_in(key, agents + 1))
         elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
-            mixed = consensus.consensus_step(cast, mix,
-                                             impl=consensus_impl)
+            mixed, _ = engine.step(cast)
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
-            new = consensus.consensus_step(new, mix, impl=consensus_impl)
+            new, _ = engine.step(new)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
         return new, codec_state, l
 
-    ep = energy_params or energy.paper_calibrated("fig3")
     n_params = sum(x.size for x in jax.tree.leaves(params))
     n_bytes = sum(x.size * (2 if consensus_dtype is not None
                             else x.dtype.itemsize)
@@ -208,11 +214,13 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--bf16-consensus", action="store_true")
-    ap.add_argument("--consensus-impl", choices=["xla", "pallas", "auto"],
-                    default="xla")
+    ap.add_argument("--consensus-plan",
+                    choices=["auto"] + list(PLAN_KINDS), default="auto",
+                    help="consensus execution plan (repro.core.engine)")
     ap.add_argument("--codec", default=None,
                     help="model-exchange codec spec (bf16, int8, int4, "
-                         "topk:0.05, +ef suffix; see repro.comms)")
+                         "int8:b64 block scales, topk:0.05, +ef suffix; "
+                         "'auto' picks from link quality; see repro.comms)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -227,7 +235,7 @@ def main():
             local_steps=args.local_steps, batch=args.batch, seq=args.seq,
             lr=args.lr,
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
-            consensus_impl=args.consensus_impl, codec=args.codec)
+            consensus_plan=args.consensus_plan, codec=args.codec)
 
 
 if __name__ == "__main__":

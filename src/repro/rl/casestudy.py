@@ -28,7 +28,9 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro import comms
-from repro.core import consensus, energy, maml
+from repro.core import energy, maml
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine
 from repro.core.multitask import ClusterNetwork
 from repro.core.protocol import ProtocolResult
 from repro.models import dqn as qmodel
@@ -116,6 +118,12 @@ class CaseStudy:
     #: wire format (error feedback applied to lossy codecs), so the
     #: Fig.-3 energy comparison reruns at any compression level
     codec: object = None
+    #: per-round link-failure probability (fading / contention — the
+    #: paper's t_i is then MEASURED under a time-varying graph from
+    #: :func:`repro.core.topology.dropout`, and the Eq.-(11) comm term
+    #: is accumulated only over messages actually sent)
+    dropout_p: float = 0.0
+    dropout_seed: int = 0
 
     def __post_init__(self):
         self.cfg = self.cfg or get_arch("paper-dqn")
@@ -166,10 +174,17 @@ class CaseStudy:
         self._meta_round = meta_round
 
         # ---- jitted FL round per task (Eq. 6 cluster) ---------------------
+        # dense-xla is the one engine plan that accepts a TRACED per-round
+        # mix — which is how the dropout_p > 0 path swaps each round's
+        # surviving graph in without recompiling (2-robot clusters have
+        # only two distinct mixes, but the mix rides as a traced array)
         C = self.network.devices_per_cluster
-        mix = self.cluster_topology.mixing(kind="paper")
+        self.engine = ConsensusEngine(self.cluster_topology,
+                                      codec=self.codec, plan="dense-xla")
+        self._static_mix = jnp.asarray(
+            self.cluster_topology.mixing(kind="paper"))
 
-        def fl_round(task_id, stacked_params, codec_state, key):
+        def fl_round(task_id, stacked_params, codec_state, key, mix):
             # split C+1 exactly as pre-codec (codec=None rounds keep
             # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
@@ -185,12 +200,11 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
-            if self.codec is None:
-                new = consensus.consensus_step(new, mix)
-            else:     # compressed sidelink exchange (wire = codec format)
-                new, codec_state = consensus.consensus_step(
-                    new, mix, codec=self.codec, codec_state=codec_state,
-                    key=jax.random.fold_in(key, C + 1))
+            new, codec_state = self.engine.step(
+                new, codec_state,
+                None if self.codec is None
+                else jax.random.fold_in(key, C + 1),
+                mix=mix)
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
             return new, codec_state, R
@@ -215,44 +229,67 @@ class CaseStudy:
 
     def adapt_task(self, key, task_id: int, init_params, *,
                    max_rounds: int = 400):
+        """Decentralized FL adaptation of one task; measures t_i. With
+        ``dropout_p > 0`` every round mixes over that round's SURVIVING
+        links (deterministic in ``dropout_seed`` + task) and the Eq.-(11)
+        comm joules of the adaptation are accumulated per sent message in
+        ``self.last_adapt_comm_joules``."""
         C = self.network.devices_per_cluster
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), init_params)
         codec_state = (self.codec.init_state(stacked)
                        if self.codec is not None and self.codec.stateful
                        else None)
+        topo_seq = (topo_lib.dropout(self.cluster_topology, self.dropout_p,
+                                     seed=self.dropout_seed + task_id)
+                    if self.dropout_p > 0 else None)
         hist = []
         rounds = max_rounds
+        comm_joules = 0.0
         step = self._fl_rounds[task_id]
         for t in range(max_rounds):
             key, sk = jax.random.split(key)
-            stacked, codec_state, R = step(stacked, codec_state, sk)
+            if topo_seq is None:
+                mix_t = self._static_mix
+                comm_joules += self.cluster_topology.round_comm_joules(
+                    self.energy_params, codec=self.codec)
+            else:
+                topo_t = next(topo_seq)
+                mix_t = jnp.asarray(topo_t.mixing(kind="paper"))
+                comm_joules += topo_t.round_comm_joules(
+                    self.energy_params, codec=self.codec)
+            stacked, codec_state, R = step(stacked, codec_state, sk, mix_t)
             hist.append(float(R))
             if float(R) >= self.r_target:
                 rounds = t + 1
                 break
+        self.last_adapt_comm_joules = comm_joules
         return stacked, rounds, hist
 
     def run(self, key, t0: int, *, max_rounds: int = 400) -> ProtocolResult:
         kmeta, kfl = jax.random.split(key)
         meta_params, meta_hist = self.meta_train(kmeta, t0)
-        rounds, hists = [], []
+        rounds, hists, comm = [], [], []
         for tid in range(self.network.num_tasks):
             kfl, kt = jax.random.split(kfl)
             _, t_i, h = self.adapt_task(kt, tid, meta_params,
                                         max_rounds=max_rounds)
             rounds.append(t_i)
             hists.append(h)
+            comm.append(self.last_adapt_comm_joules)
         return ProtocolResult(
             t0=t0, rounds_per_task=rounds, meta_history=meta_hist,
             fl_histories=hists, energy_params=self.energy_params,
             Q=self.network.Q, cluster_topology=self.cluster_topology,
-            codec=self.codec)
+            codec=self.codec,
+            fl_comm_joules_measured=(comm if self.dropout_p > 0 else None))
 
 
 def run_case_study(key=None, *, t0: int = 210, max_rounds: int = 400,
-                   codec=None):
+                   codec=None, dropout_p: float = 0.0):
     """One Monte-Carlo run of the full Fig. 3 experiment (optionally with
-    compressed sidelink exchange + codec-priced Eq.-(11) energy)."""
+    compressed sidelink exchange + codec-priced Eq.-(11) energy, and/or
+    p-probability per-round link failures)."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    return CaseStudy(codec=codec).run(key, t0, max_rounds=max_rounds)
+    return CaseStudy(codec=codec, dropout_p=dropout_p).run(
+        key, t0, max_rounds=max_rounds)

@@ -79,6 +79,125 @@ def test_topk_keeps_largest(rng_key):
 
 
 # ---------------------------------------------------------------------------
+# block-wise (per-channel) int scales
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,qmax", [(8, 127.0), (4, 7.0)])
+def test_blockwise_scales_tighten_roundtrip_bound(rng_key, bits, qmax):
+    """Per-channel absmax scales bound the error by the LOCAL absmax:
+    on a tensor mixing a tiny and a huge channel, the per-tensor scale
+    drowns the tiny half in one global quantization step while block
+    scales keep its relative error; the bound is provably tighter."""
+    small = 1e-3 * jax.random.normal(rng_key, (64,))
+    big = 1e2 * jax.random.normal(jax.random.fold_in(rng_key, 1), (64,))
+    x = {"w": jnp.concatenate([small, big])}
+    per_tensor = comms.get_codec(f"int{bits}")
+    blockwise = comms.get_codec(f"int{bits}:b64")
+    err_t = np.abs(np.asarray(per_tensor.decode(per_tensor.encode(x))["w"])
+                   - np.asarray(x["w"]))
+    err_b = np.abs(np.asarray(blockwise.decode(blockwise.encode(x))["w"])
+                   - np.asarray(x["w"]))
+    # each 64-block is bounded by ITS OWN absmax step...
+    for sl in (slice(0, 64), slice(64, 128)):
+        local_step = np.abs(np.asarray(x["w"][sl])).max() / qmax
+        assert err_b[sl].max() <= 0.5 * local_step + 1e-7
+    # ...which on the small half is orders of magnitude below the
+    # per-tensor bound (and below its realized error)
+    global_step = np.abs(np.asarray(x["w"])).max() / qmax
+    assert err_b[:64].max() < 1e-3 * global_step
+    assert err_b[:64].max() < err_t[:64].max()
+
+
+def test_blockwise_bits_and_pricing_exact():
+    c = comms.get_codec("int8:b16")
+    x = {"w": jnp.ones((6, 5)), "b": jnp.ones((9,))}
+    # 30 params -> 2 blocks of 16 (padded), 9 params -> 1 block
+    assert c.leaf_bits((6, 5)) == 30 * 8 + 2 * 32
+    assert c.leaf_bits((9,)) == 9 * 8 + 1 * 32
+    assert c.model_bits(x) == 30 * 8 + 2 * 32 + 9 * 8 + 32
+    assert c.bits(c.encode(x)) == c.model_bits(x)
+    # price_bits includes the (non-negligible) block scales
+    assert c.price_bits(39 * 32) == 39 * 8 + 32 * int(np.ceil(39 / 16))
+    # spec round-trips, EF wraps, unknown block size form rejected
+    assert comms.get_codec("int8:b16").name == "int8:b16"
+    assert comms.resolve_codec("int4:b8").name == "int4:b8+ef"
+    with pytest.raises(ValueError):
+        comms.get_codec("int8:b0")
+
+
+def test_blockwise_consensus_round_runs(rng_key):
+    """Block-scaled wires thread the full compressed consensus path
+    (decode-before-gather — the fused int8 kernel wants scalar scales)."""
+    K = 8
+    s = {"w": jax.random.normal(rng_key, (K, 24))}
+    mix = topo_lib.ring(K).mixing()
+    want = consensus.consensus_step(s, mix)
+    out, state = consensus.consensus_step(s, mix, codec="int8:b8")
+    assert state is not None
+    step = np.abs(np.asarray(s["w"])).max() / 127.0
+    assert np.abs(np.asarray(out["w"])
+                  - np.asarray(want["w"])).max() <= 3 * step
+
+
+# ---------------------------------------------------------------------------
+# adaptive codec selection from link quality
+# ---------------------------------------------------------------------------
+
+
+def test_select_codec_thresholds():
+    """Cheap links afford wide wires; the graph's bottleneck link picks
+    the codec. Paper calibration: SL = 4e6 bit/J (ring -> bf16), UL/DL =
+    1.6e6 (star -> int8); an order-of-magnitude degraded edge -> int4."""
+    assert comms.select_codec(topo_lib.ring(8)).name == "bf16+ef"
+    assert comms.select_codec(topo_lib.star(8)).name == "int8+ef"
+    degraded = topo_lib.ring(8).with_edge_efficiency(1e5)
+    assert comms.select_codec(degraded).name == "int4+ef"
+    # explicit link-quality dict + EF opt-out
+    c = comms.select_codec(topo_lib.ring(8), {"SL": 1e6},
+                           error_feedback=False)
+    assert c.name == "int8"
+    # hierarchical mixes SL + UL backhaul: the UL bottleneck decides
+    assert comms.select_codec(
+        topo_lib.hierarchical(3, 2)).name == "int8+ef"
+
+
+def test_select_codec_edgeless_graph_returns_none():
+    lonely = topo_lib.clusters(2, 1)          # 1-device clusters: no links
+    assert comms.select_codec(lonely) is None
+
+
+def test_link_efficiencies_reports_present_classes():
+    effs = comms.link_efficiencies(topo_lib.star(6))
+    assert set(effs) == {"UL", "DL"}
+    # every edge overridden: the class constant prices NOTHING and must
+    # not enter the bottleneck (round_comm_joules uses it only for
+    # eff==0 edges) — only the per-edge worst case remains
+    effs = comms.link_efficiencies(
+        topo_lib.ring(6).with_edge_efficiency(2e5))
+    assert set(effs) == {"edge"}
+    assert effs["edge"] == pytest.approx(2e5)
+    # partial override: both the unset edges' class and the edge min
+    topo = topo_lib.ring(6)
+    eff = np.where(topo.adjacency, 0.0, 0.0)
+    first = tuple(np.argwhere(topo.adjacency)[0])
+    eff[first] = 3e6
+    effs = comms.link_efficiencies(topo.with_edge_efficiency(eff))
+    assert set(effs) == {"SL", "edge"}
+    # select_codec follows round_comm_joules: all-overridden cheap edges
+    # afford bf16 even when the class constant would have said int8
+    fast = topo_lib.ring(6).with_edge_efficiency(3e6)
+    assert comms.select_codec(fast, {"SL": 1e6}).name == "bf16+ef"
+
+
+def test_link_quality_dict_must_cover_present_classes():
+    """A quality dict missing a class the graph USES is an error, not a
+    silent fall-back to the uncompressed wire."""
+    with pytest.raises(ValueError):
+        comms.select_codec(topo_lib.star(8), {"SL": 1e6})
+
+
+# ---------------------------------------------------------------------------
 # bits() exactness + static Eq.-(11) pricing
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,203 @@
+"""ConsensusEngine contract tests: plan selection, the four-plans-vs-
+dense-f32-oracle parity matrix at K = 256 (ring / cluster / small-world,
+uncompressed + int8 wires), the permutation-schedule invariants behind
+the distributed path, and the codec-aware Eq.-(11) pricing acceptance
+(int8 distributed wire >= 3.5x below f32)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus, energy
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine, ExecutionPlan, PLAN_KINDS
+
+K = 256
+N = 40
+
+
+def _topo(fam):
+    if fam == "ring":
+        return topo_lib.ring(K)
+    if fam == "cluster":
+        return topo_lib.make("cluster", K)     # 64 clusters x 4
+    return topo_lib.small_world(K, k=4, seed=1)
+
+
+def _stacked(key):
+    return {"w": jax.random.normal(key, (K, N)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (K, 7))}
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix — every plan must agree with the dense f32 oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", [None, "int8"])
+@pytest.mark.parametrize("plan", PLAN_KINDS)
+@pytest.mark.parametrize("fam", ["ring", "cluster", "small_world"])
+def test_all_plans_match_dense_oracle(rng_key, fam, plan, codec):
+    """dense-xla / sparse-pallas / sharded / distributed all compute the
+    same Eq.-(6) round: exactly (up to fp reassociation) without a codec,
+    and within the quantizer's round-trip tolerance with the int8 wire
+    (round-to-nearest, EF residual starting at zero — the CHOCO
+    recentering keeps the compressed round anchored to the oracle)."""
+    topo = _topo(fam)
+    s = _stacked(rng_key)
+    want = consensus.consensus_step(s, topo.mixing(), impl="xla")
+    eng = ConsensusEngine(topo, codec=codec, plan=plan, num_blocks=8)
+    out, state = eng.step(s, eng.init_state(s))
+    assert (state is None) == (codec is None)
+    for leaf in s:
+        x = np.asarray(s[leaf], np.float32)
+        # int8 tolerance: |x̂ - x| <= step/2 per model; the mixed result
+        # touches own + neighbour decoded copies, so a few steps total
+        atol = 1e-4 if codec is None else 3.0 * np.abs(x).max() / 127.0
+        np.testing.assert_allclose(
+            np.asarray(out[leaf], np.float32),
+            np.asarray(want[leaf], np.float32), rtol=0, atol=atol,
+            err_msg=f"{fam}/{plan}/{codec}/{leaf}")
+
+
+def test_sharded_and_distributed_keep_population_mean(rng_key):
+    """The CHOCO mean-exactness invariant on the new paths: with a
+    doubly-stochastic σ the population mean survives int8 compression
+    EXACTLY (up to fp summation), not just to quantizer tolerance."""
+    topo = topo_lib.ring(16)
+    mix = np.asarray(topo.mixing(kind="metropolis"))
+    s = {"w": jax.random.normal(rng_key, (16, 33))}
+    mean0 = np.asarray(s["w"], np.float32).mean(axis=0)
+    for plan, kw in [("sharded", dict(num_blocks=4)), ("distributed", {})]:
+        eng = ConsensusEngine(mix, codec="int8", plan=plan, **kw)
+        out, _ = eng.step(s, eng.init_state(s))
+        np.testing.assert_allclose(
+            np.asarray(out["w"], np.float32).mean(axis=0), mean0,
+            atol=1e-5, err_msg=plan)
+
+
+# ---------------------------------------------------------------------------
+# plan selection
+# ---------------------------------------------------------------------------
+
+
+def test_auto_plan_without_mesh_follows_density():
+    assert ConsensusEngine(topo_lib.ring(64)).plan.kind == "sparse-pallas"
+    # star is dense (max degree K-1): auto falls back to the matmul
+    assert ConsensusEngine(topo_lib.star(12)).plan.kind == "dense-xla"
+    # ...but an int8 wire discounts the gather payload 4x
+    assert ConsensusEngine(topo_lib.star(12),
+                           codec="int8").plan.kind == "sparse-pallas"
+
+
+def test_auto_plan_with_mesh_goes_multi_position():
+    mesh = jax.make_mesh((1,), ("agents",))
+    eng = ConsensusEngine(topo_lib.ring(8), mesh=mesh)
+    assert eng.plan.kind == "sharded"
+    assert eng.plan.num_blocks == 1
+    # one agent per position => distributed (only reachable here at K=1
+    # per the single local device; the selection rule is what's tested)
+    eng1 = ConsensusEngine(np.zeros((1, 1), np.float32), mesh=mesh)
+    assert eng1.plan.kind == "distributed"
+
+
+def test_auto_plan_honours_mesh_when_blocks_do_not_divide():
+    """A provided mesh must not be silently dropped: when the requested
+    block count doesn't divide K, auto falls back to the largest block
+    count that does — still the sharded plan, never a single-program
+    density fallback."""
+    mesh = jax.make_mesh((1,), ("agents",))
+    eng = ConsensusEngine(topo_lib.ring(12), mesh=mesh, num_blocks=8)
+    assert eng.plan.kind == "sharded"
+    assert eng.plan.num_blocks == 6           # largest divisor of 12 <= 8
+    s = {"w": jnp.ones((12, 5))}
+    out, _ = eng.step(s)                      # and it actually runs
+    assert out["w"].shape == (12, 5)
+
+
+def test_engine_rejects_unknown_plan_and_bad_blocks():
+    with pytest.raises(ValueError):
+        ConsensusEngine(topo_lib.ring(8), plan="bogus")
+    eng = ConsensusEngine(topo_lib.ring(8), plan="sharded", num_blocks=3)
+    with pytest.raises(ValueError):           # 3 does not divide K=8
+        eng.step({"w": jnp.ones((8, 4))})
+
+
+def test_engine_wrap():
+    topo = topo_lib.ring(6)
+    eng = ConsensusEngine(topo)
+    assert ConsensusEngine.wrap(eng) is eng
+    wrapped = ConsensusEngine.wrap(topo, codec="int8")
+    assert wrapped.codec.name == "int8+ef"
+    with pytest.raises(ValueError):           # can't re-codec an engine
+        ConsensusEngine.wrap(eng, codec="int8")
+    with pytest.raises(TypeError):
+        ConsensusEngine(eng)
+
+
+def test_mix_override_dense_only(rng_key):
+    """Per-round (traced) mix overrides power time-varying topologies —
+    dense-xla honours them; structure-baking plans must refuse."""
+    topo = topo_lib.ring(4)
+    s = {"w": jax.random.normal(rng_key, (4, 5))}
+    eng = ConsensusEngine(topo, plan="dense-xla")
+    dead = jnp.zeros((4, 4), jnp.float32)     # every link faded
+    out, _ = jax.jit(lambda p, m: eng.step(p, mix=m))(s, dead)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(s["w"]),
+                               atol=1e-6)     # no links -> no mixing
+    with pytest.raises(ValueError):
+        ConsensusEngine(topo, plan="sharded").step(s, mix=dead)
+
+
+# ---------------------------------------------------------------------------
+# the permutation schedule (distributed path backbone)
+# ---------------------------------------------------------------------------
+
+
+def test_permutation_schedule_covers_graph_exactly():
+    topo = topo_lib.small_world(32, k=4, seed=3)
+    mix = np.asarray(topo.mixing())
+    sched = consensus.permutation_schedule(mix)
+    K = 32
+    covered = np.zeros((K, K), np.float32)
+    for pairs, sig in sched:
+        assert sorted(s for s, _ in pairs) == list(range(K))   # full perm
+        assert sorted(t for _, t in pairs) == list(range(K))
+        for src, tgt in pairs:
+            covered[tgt, src] += sig[tgt] if sig[tgt] else 0.0
+    off = mix.copy()
+    np.fill_diagonal(off, 0.0)
+    np.testing.assert_allclose(covered, off, atol=1e-6)
+
+
+def test_permutation_schedule_ring_is_two_rounds():
+    sched = consensus.permutation_schedule(
+        np.asarray(topo_lib.ring(8).mixing()))
+    assert len(sched) == 2                   # one per direction
+
+
+# ---------------------------------------------------------------------------
+# codec-aware Eq.-(11) pricing through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_int8_wire_prices_at_least_3p5x_below_f32():
+    """Acceptance: the distributed plan's int8 wire is >= 3.5x cheaper
+    per round than the f32 exchange under Eq. (11) — the wire IS what
+    ppermute ships, so round_comm_joules(codec=) is truthful."""
+    p = energy.paper_calibrated("fig3")
+    topo = topo_lib.ring(64)
+    eng = ConsensusEngine(topo, codec="int8", plan="distributed")
+    ratio = topo.round_comm_joules(p) / eng.round_comm_joules(p)
+    assert ratio >= 3.5
+    assert ratio == pytest.approx(4.0)       # 8-bit lanes vs 32-bit
+
+def test_engine_pricing_requires_topology():
+    eng = ConsensusEngine(np.asarray(topo_lib.ring(4).mixing()))
+    with pytest.raises(ValueError):
+        eng.round_comm_joules(energy.paper_calibrated("fig3"))
+
+
+def test_execution_plan_validates_kind():
+    with pytest.raises(ValueError):
+        ExecutionPlan("warp-drive", "nope")

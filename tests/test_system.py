@@ -20,7 +20,7 @@ def test_case_study_round_and_energy():
     assert np.isfinite(float(m["meta_loss"]))
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p2)
-    stacked2, _, R = cs._fl_rounds[0](stacked, None, key)
+    stacked2, _, R = cs._fl_rounds[0](stacked, None, key, cs._static_mix)
     assert np.isfinite(float(R))
     res_like = cs.run(jax.random.PRNGKey(1), 0, max_rounds=2)
     s = res_like.summary()
@@ -41,7 +41,8 @@ def test_case_study_codec_round_and_energy():
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p)
     state = cs.codec.init_state(stacked)
-    stacked2, state2, R = cs._fl_rounds[0](stacked, state, key)
+    stacked2, state2, R = cs._fl_rounds[0](stacked, state, key,
+                                           cs._static_mix)
     assert np.isfinite(float(R))
     assert jax.tree.structure(state2) == jax.tree.structure(stacked)
     # codec-priced Eq. (11): comm term drops exactly bits-ratio-fold
@@ -49,6 +50,53 @@ def test_case_study_codec_round_and_energy():
     comm = energy.fl_comm_energy(ep, 10, cs.cluster_topology, cs.codec)
     comm_full = energy.fl_comm_energy(ep, 10, cs.cluster_topology)
     assert comm == pytest.approx(comm_full / 4)
+
+
+def test_case_study_dropout_measures_ti_and_prices_sent_messages():
+    """End-to-end RL sweep under p = 0.2 link failures: t_i is measured
+    on the time-varying graph (each round mixes only surviving links) and
+    the adaptation's Eq.-(11) comm term sums EXACTLY the per-round joules
+    of the links actually up — deterministic in the dropout seed."""
+    import pytest
+    from repro.core import energy, topology as topo_lib
+    from repro.rl.casestudy import CaseStudy
+    cs = CaseStudy(dropout_p=0.2)
+    key = jax.random.PRNGKey(2)
+    p = cs.init_params(key)
+    _, rounds, hist = cs.adapt_task(key, 0, p, max_rounds=3)
+    assert 1 <= rounds <= 3 and len(hist) <= 3
+    assert all(np.isfinite(h) for h in hist)
+    # measured pricing == replaying the same deterministic fade sequence
+    topos = topo_lib.dropout(cs.cluster_topology, 0.2,
+                             seed=cs.dropout_seed + 0, rounds=len(hist))
+    want = sum(t.round_comm_joules(cs.energy_params) for t in topos)
+    assert cs.last_adapt_comm_joules == pytest.approx(want)
+    # never above the static graph's bill (faded rounds send less)
+    static = len(hist) * cs.cluster_topology.round_comm_joules(
+        cs.energy_params)
+    assert cs.last_adapt_comm_joules <= static + 1e-9
+
+
+def test_protocol_result_uses_measured_comm_joules():
+    """ProtocolResult prefers per-round MEASURED Eq.-(11) joules (dropout
+    runs) over the static-graph model in E_FL."""
+    import pytest
+    from repro.core import energy, topology as topo_lib
+    from repro.core.protocol import ProtocolResult
+    ep = energy.paper_calibrated("fig3")
+    topo = topo_lib.clusters(1, 2)
+    res = ProtocolResult(
+        t0=0, rounds_per_task=[4], meta_history=[], fl_histories=[[0.0]],
+        energy_params=ep, Q=1, cluster_topology=topo,
+        fl_comm_joules_measured=[5.0])
+    assert res.E_FL_comm == [5.0]
+    assert res.E_FL[0] == pytest.approx(
+        energy.fl_learning_energy(ep, 4, topo) + 5.0)
+    res_static = ProtocolResult(
+        t0=0, rounds_per_task=[4], meta_history=[], fl_histories=[[0.0]],
+        energy_params=ep, Q=1, cluster_topology=topo)
+    assert res_static.E_FL[0] == pytest.approx(
+        energy.fl_energy(ep, 4, topo))
 
 
 def test_protocol_generic_toy():
