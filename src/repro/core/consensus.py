@@ -107,6 +107,18 @@ def resolve_mix(mix, data_sizes=None, kind: str = "paper",
     return mix
 
 
+#: K · max-degree floor below which the batched sparse gather cannot
+#: amortize its per-agent dispatch overhead and ``auto`` keeps the
+#: dense (K, K) matmul (the overhead scales with agents × neighbours,
+#: not payload bytes, so the floor is codec-independent). Calibrated
+#: against the recorded ``BENCH_consensus_scale.json`` rows: every f32
+#: sparse-pallas pick at K·H < 512 LOST to dense-xla (K=12 ring 0.59×,
+#: K=12 cluster 0.66×, K=64 ring 0.80× … small_world 0.30×), while the
+#: first winning row is exactly at the floor (K=256 ring, K·H = 512,
+#: 1.46×).
+SPARSE_GATHER_FLOOR = 512
+
+
 def auto_path(mix, codec=None) -> str:
     """What ``impl="auto"`` resolves to for this (concrete) mix: the sparse
     gather only wins while the graph is actually sparse — on dense graphs
@@ -114,28 +126,45 @@ def auto_path(mix, codec=None) -> str:
     tensor exceeds the (K, K) matmul's traffic and ``auto`` falls back to
     the dense path.
 
-    With an int8 ``codec`` the gathered payload is the WIRE format, not
-    f32 — the fused dequant-consensus kernel consumes int8 neighbour
-    blocks directly, a quarter of the bytes — so the degree is
-    discounted by the codec's bits-per-parameter before comparing
-    against the dense threshold (the dense matmul always runs on decoded
-    f32). The discount applies ONLY to codecs whose sparse path gathers
-    the wire itself (today: int8 through the fused kernel); every other
-    codec decodes to f32 BEFORE the gather, so its degree counts at full
-    width. The old heuristic ignored payload bytes entirely and kicked
-    graphs to the dense path that a compressed gather serves cheaper.
+    Small/dense-ish populations also stay dense: below
+    :data:`SPARSE_GATHER_FLOOR` total gather work (K · max degree) the
+    vmapped per-agent gather is pure overhead against one small matmul
+    — the benchmark recorded the K=12 ring sparse pick running at
+    0.59× dense — so ``auto`` keeps them on the (K, K) path regardless
+    of sparsity. The floor uses the RAW K·H (per-agent gather dispatch
+    overhead scales with agents × neighbours, not with payload bytes),
+    so a codec never demotes a population the f32 rows showed winning.
+
+    With an int ``codec`` the gathered payload is the WIRE format, not
+    f32 — the fused dequant-consensus kernel consumes int8-lane
+    neighbour blocks directly (plus per-block scales when the codec
+    quantizes block-wise), a quarter of the bytes — so the degree is
+    discounted by the wire's DEVICE bytes per parameter (int8 lanes for
+    both int8 and int4: what the gather actually moves) before
+    comparing against the dense threshold (the dense matmul always runs
+    on decoded f32). The discount applies ONLY to codecs whose sparse
+    path gathers the wire itself (IntCodec through the fused
+    dequant-consensus kernel, per-tensor or block-wise scales); every
+    other codec decodes to f32 BEFORE the gather, so its degree counts
+    at full width. The old heuristic ignored payload bytes entirely and
+    kicked graphs to the dense path that a compressed gather serves
+    cheaper.
     """
     M = np.asarray(mix)
     K = M.shape[0]
     off = M.copy()
     np.fill_diagonal(off, 0.0)
     H = int((off != 0).sum(axis=1).max()) if K else 0
+    if K * max(float(H), 1.0) < SPARSE_GATHER_FLOOR:
+        return "dense"
     codec = getattr(codec, "inner", codec)       # unwrap ErrorFeedback
-    bpp = getattr(codec, "bits_per_param", None) if codec is not None \
-        else None
-    gathers_wire = (getattr(codec, "qbits", None) == 8
-                    and getattr(codec, "block", None) is None)
-    h_eff = H * (bpp / 32.0) if (bpp and gathers_wire) else float(H)
+    qblock = getattr(codec, "block", None)
+    gathers_wire = getattr(codec, "qbits", None) is not None
+    # the gather moves int8 LANES for every IntCodec (int4 values ride
+    # int8 storage on-device) plus one f32 scale per qblock params
+    wire_bits = (8.0 + (32.0 / qblock if qblock else 0.0)
+                 if gathers_wire else None)
+    h_eff = H * (wire_bits / 32.0) if wire_bits else float(H)
     return "sparse" if h_eff <= max(K // 4, 1) else "dense"
 
 
@@ -206,7 +235,8 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
     consensus step size — aggressive sparsifiers like top-k need γ < 1
     to contract). With a codec the return value is
     ``(new_stacked_params, new_codec_state)``; without, just the params
-    (unchanged API). int8 wires route through the fused
+    (unchanged API). Int wires (int8/int4 lanes, per-tensor or
+    block-wise ``int8:b64`` scales) route through the fused
     dequantize-consensus kernel on the sparse path
     (:mod:`repro.kernels.quant_consensus`).
 
@@ -273,9 +303,9 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
     without error feedback) to the wire format and decodes x̂_k back,
     (2) the mixing update runs on the decoded models around the agent's
     own decoded copy, (3) residuals carry the compression error to the
-    next round. int8 wires take the fused Pallas dequant-consensus
-    kernel on the sparse path; other codecs decode first and reuse the
-    plain consensus kernel.
+    next round. Int wires (per-tensor or block-wise scales) take the
+    fused Pallas dequant-consensus kernel on the sparse path; other
+    codecs decode first and reuse the plain consensus kernel.
     """
     from repro import comms
     from repro.kernels import ops
@@ -334,14 +364,18 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
             like = jax.ShapeDtypeStruct(xf.shape[1:], jnp.float32)
             xhat = jax.vmap(lambda p: base.decode_leaf(p, like))(enc)
 
-        if sparse and isinstance(base, comms.IntCodec) \
-                and base.qbits == 8 and base.block is None:
+        if sparse and isinstance(base, comms.IntCodec):
+            # int wire (per-tensor OR block-wise scales): neighbour
+            # tiles stay int8 lanes through the gather; dequant happens
+            # INSIDE the fused combine
             q, s = enc["q"], enc["scale"]
+            qkw = dict(kw) if base.block is None \
+                else dict(kw, qblock=base.block)
 
             def one(xk, qk, sk, ik, sgk):
                 return ops.quant_consensus_update(
                     xk, qk, sk, q[ik], s[ik], sgk,
-                    impl=kernel_impl, **kw)
+                    impl=kernel_impl, **qkw)
 
             y = jax.vmap(one)(xf, q, s, idx, sig)
         elif sparse:
@@ -605,8 +639,9 @@ def _sharded_block_leaf(x_blk, r_blk, idx_blk, sig_blk, keys_blk, *, K: int,
                         pin_wire: bool = False):
     """One mesh position's block of agents, one leaf: encode the owned
     rows, all_gather the WIRE along the agent axis, then mix every owned
-    row from the gathered wire (fused int8 dequant-consensus kernel for
-    per-tensor IntCodec wires; generic decode-then-combine otherwise)."""
+    row from the gathered wire (fused dequant-consensus kernel for every
+    IntCodec wire — per-tensor AND block-wise scales stay int8 lanes
+    through the gather; generic decode-then-combine otherwise)."""
     like = jax.ShapeDtypeStruct(x_blk.shape[1:], jnp.float32)
     r_new = None
     if codec is None:
@@ -635,14 +670,18 @@ def _sharded_block_leaf(x_blk, r_blk, idx_blk, sig_blk, keys_blk, *, K: int,
     from repro.kernels import ops   # deferred: keeps consensus importable
 
     base = getattr(codec, "inner", codec)
-    if codec is not None and getattr(base, "qbits", None) is not None \
-            and getattr(base, "block", None) is None:
-        # per-tensor int wire: neighbour tiles stay int8 lanes through the
-        # gather; dequant happens INSIDE the fused combine
+    if codec is not None and getattr(base, "qbits", None) is not None:
+        # int wire (per-tensor OR block-wise scales): neighbour tiles
+        # stay int8 lanes through the gather; dequant happens INSIDE the
+        # fused combine — block-scaled wires no longer decode-then-
+        # combine on the sharded plan
+        qblock = getattr(base, "block", None)
+        qkw = dict(kw) if qblock is None else dict(kw, qblock=qblock)
+
         def one(xk, qk, sk, ik, sgk):
             return ops.quant_consensus_update(
                 xk, qk, sk, gathered["q"][ik], gathered["scale"][ik], sgk,
-                impl=kernel_impl, **kw)
+                impl=kernel_impl, **qkw)
 
         y = jax.vmap(one)(x_blk, payload["q"], payload["scale"],
                           idx_blk, sig_blk)

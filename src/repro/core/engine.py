@@ -34,8 +34,17 @@ Plans
 Wire formats per path: ``dense-xla`` mixes DECODED f32 models (the wire
 is an accounting construct priced by Eq. 11); ``sparse-pallas`` and
 ``sharded`` gather the int-quantized wire itself through the fused
-dequant-consensus kernel (other codecs decode before the gather);
-``distributed`` permutes the wire payload for every codec.
+dequant-consensus kernel — int8/int4 lanes with per-tensor OR
+block-wise ``int8:b64`` scales (other codecs decode before the
+gather); ``distributed`` permutes the wire payload for every codec.
+
+Multi-round programs: :meth:`ConsensusEngine.scan_rounds` runs R rounds
+inside one ``lax.scan`` with the codec/EF state in the carry — the
+building block of the chunked protocol drivers
+(:func:`repro.core.federated.run_fl_until_scan`,
+:func:`repro.core.maml.maml_train_scan`), which compile whole stretches
+of the round loop into single programs and sync the host once per
+chunk.
 
 CHOCO mean-exactness invariant: every compressed plan recenters each
 agent's update on its OWN decoded copy — W_k + Σ_h σ_{k,h}(x̂_h − x̂_k) —
@@ -211,6 +220,47 @@ class ConsensusEngine:
             mesh=self.mesh, codec=self.codec, codec_state=codec_state,
             key=key, gamma=self.gamma, schedule=self._schedule,
             error_feedback=False)
+
+    def scan_rounds(self, stacked_params, codec_state=None, keys=None, *,
+                    rounds: Optional[int] = None):
+        """Run many Eq.-(6) rounds inside ONE ``jax.lax.scan`` program.
+
+        ``keys``: optional (R, …) stacked PRNG keys, one per round
+        (stochastic rounding); without them pass ``rounds=R`` and every
+        round runs key-free. The codec / error-feedback state threads
+        through the scan carry for all four plans (``codec_state=None``
+        initializes stacked zero residuals for stateful codecs), and the
+        distributed plan's host-side ppermute permutation schedule is
+        resolved HERE, before the scan body is traced, so the loop body
+        contains only the collectives. Returns ``(params, codec_state)``
+        after R rounds — bit-identical to R successive :meth:`step`
+        calls. Trace-time structure (sparse gathers, schedules) is baked
+        once per program instead of once per round, which is what the
+        chunked drivers (:func:`repro.core.federated.run_fl_until_scan`,
+        :func:`repro.core.maml.maml_train_scan`) and the ``rounds_loop``
+        benchmark build on.
+        """
+        if keys is None and rounds is None:
+            raise ValueError("pass per-round keys or rounds=")
+        if codec_state is None:
+            codec_state = self.init_state(stacked_params)
+        if self.plan.kind == "distributed" and self._schedule is None:
+            # hoist the host-computed schedule out of the scan body
+            self._schedule = consensus.permutation_schedule(
+                self.mix, self.gamma)
+
+        def body(carry, k):
+            p, st = self.step(carry[0], carry[1], k)
+            return (p, st), None
+
+        if keys is None:
+            (p, st), _ = jax.lax.scan(
+                lambda c, _x: body(c, None), (stacked_params, codec_state),
+                None, length=int(rounds))
+        else:
+            (p, st), _ = jax.lax.scan(
+                body, (stacked_params, codec_state), keys)
+        return p, st
 
     # -- Eq.-(11) pricing ---------------------------------------------------
     def round_comm_joules(self, energy_params,

@@ -9,7 +9,9 @@ from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import scanloop
 from repro.core.engine import ConsensusEngine
 from repro.optim import sgd, apply_updates
 
@@ -74,45 +76,188 @@ def fedavg_round(loss_fn, global_params, stacked_batches, weights,
     return jax.tree.map(avg, locals_)
 
 
+def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
+                     target_fn, stacked_params, key, max_rounds: int,
+                     eval_every: int):
+    """The ONE compiled FL round-loop program both drivers share: local
+    SGD + ``engine.step`` + in-scan ``target_fn`` evaluation per round,
+    with a ``lax.cond`` that FREEZES the carry (params, EF codec state,
+    key) once an evaluated round reaches the target — every later round
+    of the chunk is a no-op, so the params/state that come back are
+    exactly the host loop's early-``break`` values, and the first-hit
+    round (the paper's t_i) is recovered bit-exactly from the per-round
+    reached mask. Rounds past ``max_rounds`` freeze the same way, which
+    lets every chunk reuse one program when ``chunk ∤ max_rounds``.
+
+    Batches are sampled INSIDE the scan from per-round split keys (same
+    split order as the legacy host loop — identical PRNG stream);
+    ``sample_batches``/``target_fn`` go through
+    :func:`repro.core.scanloop.traceable`, so non-traceable host
+    functions still work via ``jax.pure_callback``. ``lax.scan``
+    compiles the same loop-body HLO for every chunk length, so a
+    length-1 ``ts`` (host loop) and a length-``chunk`` ``ts`` produce
+    bit-identical params, t_i, history, and codec state. The stacked
+    params + EF-residual buffers are donated where the backend supports
+    it (scanloop's donation invariant: never reuse a pytree after
+    passing it in).
+
+    Returns ``run_chunk(params, codec_state, key, reached, ts) ->
+    ((params, codec_state, key, reached), (hit, evaled, metric))`` with
+    one per-round row per ``ts`` entry.
+    """
+    has_codec = engine.codec is not None
+    sampler, _ = scanloop.traceable(sample_batches, key, jnp.int32(0),
+                                    name="sample_batches")
+    tfn, _ = scanloop.traceable(target_fn, stacked_params, name="target_fn")
+    _, metric_sds = jax.eval_shape(tfn, stacked_params)
+
+    def body(carry, t):
+        def live(c):
+            p, st, k, _ = c
+            k, sk = jax.random.split(k)
+            batches = sampler(sk, t)
+            if has_codec:
+                k, ck = jax.random.split(k)
+                p, st = decentralized_fl_round(
+                    loss_fn, p, batches, engine, lr, codec_state=st, key=ck)
+            else:
+                p = decentralized_fl_round(loss_fn, p, batches, engine, lr)
+            if eval_every == 1:
+                r, metric = tfn(p)
+                hit = jnp.asarray(r, bool)
+                do_eval = jnp.asarray(True)
+            else:
+                # off-grid rounds skip the evaluation entirely (it may
+                # be an expensive rollout or a pure_callback host trip)
+                do_eval = (t + 1) % eval_every == 0
+
+                def evaluate(p_):
+                    r_, m_ = tfn(p_)
+                    return (jnp.asarray(r_, bool),
+                            jnp.asarray(m_, metric_sds.dtype))
+
+                def skip(p_):
+                    return (jnp.asarray(False),
+                            jnp.zeros(metric_sds.shape, metric_sds.dtype))
+
+                hit, metric = jax.lax.cond(do_eval, evaluate, skip, p)
+            return ((p, st, k, hit),
+                    (hit, do_eval, jnp.asarray(metric, metric_sds.dtype)))
+
+        def frozen(c):
+            return c, (c[3], jnp.asarray(False),
+                       jnp.zeros(metric_sds.shape, metric_sds.dtype))
+
+        pred = jnp.logical_and(jnp.logical_not(carry[3]), t < max_rounds)
+        return jax.lax.cond(pred, live, frozen, carry)
+
+    return scanloop.donating_jit(
+        lambda p, st, k, r, ts: jax.lax.scan(body, (p, st, k, r), ts),
+        donate_argnums=(0, 1))
+
+
+def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
+                    target_fn, max_rounds, key, eval_every, codec, chunk,
+                    return_state):
+    """Shared chunked loop behind :func:`run_fl_until` (chunk=1) and
+    :func:`run_fl_until_scan`: one program dispatch and ONE host sync
+    (the chunk's reached mask + metric row) per chunk, early exit
+    between chunks when any round hit."""
+    engine = ConsensusEngine.wrap(engine, codec=codec)
+    # copy-on-entry (donating backends only): donation then consumes
+    # driver-owned buffers, never the caller's pytree
+    stacked_params = scanloop.own(stacked_params)
+    codec_state = (engine.init_state(stacked_params)
+                   if engine.codec is not None else None)
+    chunk = max(1, min(int(chunk), max_rounds))
+    run_chunk = _fl_scan_program(
+        loss_fn, engine, lr, sample_batches=sample_batches,
+        target_fn=target_fn, stacked_params=stacked_params, key=key,
+        max_rounds=max_rounds, eval_every=eval_every)
+
+    history = []
+    rounds_used = max_rounds
+    reached = jnp.asarray(False)
+    for start in range(0, max_rounds, chunk):
+        ts = jnp.arange(start, start + chunk, dtype=jnp.int32)
+        (stacked_params, codec_state, key, reached), ys = run_chunk(
+            stacked_params, codec_state, key, reached, ts)
+        hits, evaled, metrics = (np.asarray(y) for y in ys)  # ONE sync
+        history.extend(float(m) for m, v in zip(metrics, evaled) if v)
+        h = scanloop.first_hit(hits)
+        if h is not None:
+            rounds_used = start + h + 1
+            break
+    if return_state:
+        return stacked_params, rounds_used, history, codec_state
+    return stacked_params, rounds_used, history
+
+
 def run_fl_until(loss_fn, stacked_params, sample_batches, engine,
                  lr: float, *, target_fn: Callable, max_rounds: int, key,
-                 eval_every: int = 1, codec=None):
+                 eval_every: int = 1, codec=None,
+                 return_state: bool = False):
     """Drive decentralized FL rounds until ``target_fn(stacked_params) >=
     target`` (it returns (reached: bool, metric)) or ``max_rounds``.
 
-    Returns (params, rounds_used, metric_history). This is how the paper's
-    t_i (rounds to reach running reward R) is measured. ``engine`` may be
-    a :class:`repro.core.engine.ConsensusEngine`, a σ matrix, or a
+    Returns (params, rounds_used, metric_history) — plus the final codec
+    state with ``return_state=True``. This is how the paper's t_i (rounds
+    to reach running reward R) is measured. ``engine`` may be a
+    :class:`repro.core.engine.ConsensusEngine`, a σ matrix, or a
     Topology (the latter two are wrapped, with ``codec`` applied — the
     engine's plan bakes the concrete neighbour structure in at trace
     time).
 
     The engine codec's error-feedback residual state is threaded across
     rounds here (one residual pytree per agent, carried like the params).
+
+    Host-loop driver: one program dispatch and one blocking
+    device→host sync per ROUND. It drives the same compiled round
+    program as :func:`run_fl_until_scan` (which syncs once per CHUNK
+    and reproduces this loop's params, t_i, history, and codec state
+    bit for bit) — use the scanned driver for sweeps, this one when a
+    host decision is genuinely needed every round.
     """
-    engine = ConsensusEngine.wrap(engine, codec=codec)
-    if engine.codec is not None:
-        step = jax.jit(lambda sp, st, b, k: decentralized_fl_round(
-            loss_fn, sp, b, engine, lr, codec_state=st, key=k))
-        codec_state = engine.init_state(stacked_params)
-    else:
-        step = jax.jit(lambda sp, b: decentralized_fl_round(
-            loss_fn, sp, b, engine, lr))
-    history = []
-    rounds_used = max_rounds
-    for t in range(max_rounds):
-        key, sk = jax.random.split(key)
-        batches = sample_batches(sk, t)
-        if engine.codec is not None:
-            key, ck = jax.random.split(key)
-            stacked_params, codec_state = step(stacked_params, codec_state,
-                                               batches, ck)
-        else:
-            stacked_params = step(stacked_params, batches)
-        if (t + 1) % eval_every == 0:
-            reached, metric = target_fn(stacked_params)
-            history.append(float(metric))
-            if bool(reached):
-                rounds_used = t + 1
-                break
-    return stacked_params, rounds_used, history
+    return _run_fl_chunked(
+        loss_fn, stacked_params, sample_batches, engine, lr,
+        target_fn=target_fn, max_rounds=max_rounds, key=key,
+        eval_every=eval_every, codec=codec, chunk=1,
+        return_state=return_state)
+
+
+def run_fl_until_scan(loss_fn, stacked_params, sample_batches, engine,
+                      lr: float, *, target_fn: Callable, max_rounds: int,
+                      key, eval_every: int = 1, codec=None,
+                      chunk: int = 32, return_state: bool = False):
+    """Device-resident :func:`run_fl_until`: ``chunk`` FL rounds (local
+    SGD + ``engine.step`` + in-scan ``target_fn`` evaluation) per
+    compiled ``lax.scan`` program, ONE host sync per chunk instead of
+    one per round.
+
+    Exactness contract — this is NOT an approximation of the host loop
+    (see :func:`_fl_scan_program` for how each property is enforced):
+
+    * same PRNG stream: the key is carried through the scan and split
+      per round in the host loop's order, with batches sampled in-scan
+      (``sample_batches(key, round)`` should satisfy the traced-sampler
+      contract of :mod:`repro.core.scanloop`; non-traceable samplers
+      fall back to a ``jax.pure_callback`` round-trip with identical
+      values);
+    * ``lax.cond`` freeze on target hit: params, EF codec state, and
+      key stop updating mid-chunk, and the exact first-hit round — the
+      paper's t_i — is recovered from the per-round reached mask, so
+      ``rounds_used``, params, history, and codec state are
+      bit-identical to the host loop's early ``break``;
+    * ``max_rounds`` need not be a multiple of ``chunk`` — tail rounds
+      past it freeze the same way, keeping one compiled program.
+
+    The chunk program donates the stacked params and EF-residual
+    buffers on backends with donation support, so K-stacked populations
+    update in place instead of doubling peak memory (never reuse the
+    pytrees passed in — scanloop's donation invariant).
+    """
+    return _run_fl_chunked(
+        loss_fn, stacked_params, sample_batches, engine, lr,
+        target_fn=target_fn, max_rounds=max_rounds, key=key,
+        eval_every=eval_every, codec=codec, chunk=chunk,
+        return_state=return_state)

@@ -23,6 +23,9 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scanloop
 
 
 def inner_adapt(loss_fn: Callable, params, batch, lr: float,
@@ -93,22 +96,100 @@ def maml_meta_step(loss_fn: Callable, meta_params, support, query, *,
     return new_params, metrics
 
 
+def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
+                        inner_lr: float, outer_lr: float, inner_steps: int,
+                        first_order: bool):
+    """The ONE compiled MAML round-loop program both drivers share.
+
+    Data is sampled INSIDE the scan from per-round derived keys (the
+    carried key is split per round exactly like the legacy host loop,
+    so the PRNG stream — and therefore every batch — is unchanged), and
+    the per-round metrics accumulate as stacked device arrays, synced
+    only when the caller pulls them. Samplers that satisfy the
+    ``sample_tasks_traced`` contract (pure traced jax function of
+    ``(key, int32 round)``; vmapped task samplers qualify) run
+    on-device; anything else is transparently routed through
+    ``jax.pure_callback`` by :func:`repro.core.scanloop.traceable`.
+
+    ``jax.lax.scan`` compiles the SAME loop-body HLO for every chunk
+    length, so driving this program with length-1 ``ts`` (the host
+    loop) or length-``chunk`` ``ts`` produces bit-identical params and
+    losses — which is the whole parity contract between
+    :func:`maml_train` and :func:`maml_train_scan`. The params buffer
+    is donated on backends with donation support (scanloop's donation
+    invariant: don't reuse a pytree after passing it in).
+    """
+    step = functools.partial(
+        maml_meta_step, loss_fn, inner_lr=inner_lr, outer_lr=outer_lr,
+        inner_steps=inner_steps, first_order=first_order)
+    sampler, _ = scanloop.traceable(sample_tasks, key, jnp.int32(0),
+                                    name="sample_tasks")
+
+    def body(carry, t):
+        p, k = carry
+        k, sk = jax.random.split(k)
+        support, query = sampler(sk, t)
+        p, m = step(p, support, query)
+        return (p, k), m
+
+    return scanloop.donating_jit(
+        lambda p, k, ts: jax.lax.scan(body, (p, k), ts),
+        donate_argnums=(0,))
+
+
 def maml_train(loss_fn: Callable, meta_params, sample_tasks: Callable,
                *, rounds: int, inner_lr: float, outer_lr: float,
                inner_steps: int = 1, first_order: bool = True,
                key=None, callback: Optional[Callable] = None):
     """Run ``rounds`` MAML rounds. ``sample_tasks(key, round) -> (support,
-    query)`` with leading task axis. Host-loop driver (each round jitted)."""
+    query)`` with leading task axis. Host-loop driver: one dispatch and
+    one blocking ``float(meta_loss)`` sync per round — the
+    ``chunk=1``-equivalent fallback of :func:`maml_train_scan` (both
+    drive the same compiled round program, so their params and history
+    agree bit for bit), and the only driver with a per-round host
+    ``callback(t, params, metrics)``."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    step = jax.jit(functools.partial(
-        maml_meta_step, loss_fn, inner_lr=inner_lr, outer_lr=outer_lr,
-        inner_steps=inner_steps, first_order=first_order))
+    meta_params = scanloop.own(meta_params)    # donation never touches
+    run_round = _scan_round_program(           # the caller's pytree
+        loss_fn, sample_tasks, key, inner_lr=inner_lr, outer_lr=outer_lr,
+        inner_steps=inner_steps, first_order=first_order)
     history = []
     for t in range(rounds):
-        key, sk = jax.random.split(key)
-        support, query = sample_tasks(sk, t)
-        meta_params, m = step(meta_params, support, query)
-        history.append(float(m["meta_loss"]))
+        (meta_params, key), ms = run_round(
+            meta_params, key, jnp.arange(t, t + 1, dtype=jnp.int32))
+        history.append(float(ms["meta_loss"][0]))
         if callback is not None:
-            callback(t, meta_params, m)
+            callback(t, meta_params, jax.tree.map(lambda x: x[0], ms))
+    return meta_params, history
+
+
+def maml_train_scan(loss_fn: Callable, meta_params, sample_tasks: Callable,
+                    *, rounds: int, inner_lr: float, outer_lr: float,
+                    inner_steps: int = 1, first_order: bool = True,
+                    key=None, chunk: int = 32):
+    """Device-resident MAML driver: ``chunk`` rounds per compiled program.
+
+    Bit-identical to :func:`maml_train` — same PRNG stream (the key is
+    carried through the scan and split per round in the same order),
+    same round body, same compiled scan program — but the host loop
+    drops from O(rounds) jit dispatches + blocking ``float(meta_loss)``
+    syncs to O(rounds/chunk): the meta-loss history accumulates as a
+    device array and is synced once per chunk. See
+    :func:`_scan_round_program` for the traced-sampler contract and the
+    buffer-donation invariant. ``rounds`` need not be a multiple of
+    ``chunk`` (the remainder runs as one shorter scan — at most two
+    compiled programs in total)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if rounds <= 0:
+        return meta_params, []
+    chunk = max(1, min(int(chunk), rounds))
+    meta_params = scanloop.own(meta_params)    # donation never touches
+    run_chunk = _scan_round_program(           # the caller's pytree
+        loss_fn, sample_tasks, key, inner_lr=inner_lr, outer_lr=outer_lr,
+        inner_steps=inner_steps, first_order=first_order)
+    history = []
+    for start in range(0, rounds, chunk):
+        ts = jnp.arange(start, min(start + chunk, rounds), dtype=jnp.int32)
+        (meta_params, key), ms = run_chunk(meta_params, key, ts)
+        history.extend(float(x) for x in np.asarray(ms["meta_loss"]))
     return meta_params, history

@@ -93,6 +93,14 @@ class MTLProtocol:
     sample_query:   (key, task_id) -> batch (meta-update data).
     target_fn:      (params, task_id) -> (reached, metric) — the paper's
                     per-task accuracy target (running reward R).
+    chunk:          rounds per compiled program for BOTH stages (the
+                    scanned drivers :func:`repro.core.maml.
+                    maml_train_scan` / :func:`repro.core.federated.
+                    run_fl_until_scan`): the host syncs once per chunk
+                    instead of once per round, with t0 / t_i trajectories
+                    bit-identical to ``chunk=1`` (the host-loop
+                    fallback). Samplers/target_fn that don't trace fall
+                    back to ``jax.pure_callback`` transparently.
     """
 
     def __init__(self, *, loss_fn, init_fn, network: ClusterNetwork,
@@ -101,7 +109,7 @@ class MTLProtocol:
                  inner_steps=1, fl_local_steps=20,
                  first_order=True,
                  energy_params: Optional[energy.EnergyParams] = None,
-                 codec=None):
+                 codec=None, chunk: int = 16):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.net = network
@@ -114,6 +122,7 @@ class MTLProtocol:
         self.inner_steps = inner_steps
         self.fl_local_steps = fl_local_steps
         self.first_order = first_order
+        self.chunk = max(int(chunk), 1)
         self.energy_params = energy_params or energy.paper_calibrated()
         if not first_order:
             self.energy_params = dataclasses.replace(
@@ -130,7 +139,9 @@ class MTLProtocol:
 
     # -- stage 1 ------------------------------------------------------------
     def meta_train(self, key, t0: int):
-        """t0 MAML rounds over the Q meta tasks. Returns (meta_params,
+        """t0 MAML rounds over the Q meta tasks, driven by the chunked
+        scan driver (``self.chunk`` rounds per compiled program; the
+        meta-loss history syncs once per chunk). Returns (meta_params,
         history)."""
         kinit, kdata = jax.random.split(key)
         meta_params = self.init_fn(kinit)
@@ -148,17 +159,19 @@ class MTLProtocol:
                 lambda *xs: jnp.stack(xs), *bs)
             return stack(sup), stack(qry)
 
-        return maml.maml_train(
+        return maml.maml_train_scan(
             self.loss_fn, meta_params, sample_tasks, rounds=t0,
             inner_lr=self.inner_lr, outer_lr=self.outer_lr,
             inner_steps=self.inner_steps, first_order=self.first_order,
-            key=kdata)
+            key=kdata, chunk=self.chunk)
 
     # -- stage 2 ------------------------------------------------------------
     def adapt_task(self, key, task_id: int, init_params, *,
                    max_rounds: int = 500):
-        """Decentralized FL (Eq. 6) within cluster C_i from ``init_params``.
-        Returns (params, rounds_used t_i, history)."""
+        """Decentralized FL (Eq. 6) within cluster C_i from ``init_params``,
+        driven by the chunked scan driver (``self.chunk`` rounds per
+        program; t_i recovered bit-exactly from the in-scan reached
+        mask). Returns (params, rounds_used t_i, history)."""
         C = self.net.devices_per_cluster
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape)
@@ -174,9 +187,10 @@ class MTLProtocol:
             p0 = jax.tree.map(lambda x: x[0], stacked_params)
             return self.target_fn(p0, task_id)
 
-        return federated.run_fl_until(
+        return federated.run_fl_until_scan(
             self.loss_fn, stacked, sample_batches, self.engine,
-            self.fl_lr, target_fn=target, max_rounds=max_rounds, key=key)
+            self.fl_lr, target_fn=target, max_rounds=max_rounds, key=key,
+            chunk=self.chunk)
 
     # -- full protocol --------------------------------------------------------
     def run(self, key, t0: int, *, max_rounds: int = 500) -> ProtocolResult:

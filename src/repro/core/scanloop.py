@@ -1,0 +1,133 @@
+"""Shared machinery for the device-resident (chunked ``lax.scan``) round
+loops of :mod:`repro.core.maml` and :mod:`repro.core.federated`.
+
+The paper's energy balance is measured in ROUNDS (t0 meta rounds, t_i
+adaptation rounds per task), so Monte-Carlo sweeps execute tens of
+thousands of them — and a host loop pays a Python-level jit dispatch
+plus a blocking device→host sync per round. The scanned drivers compile
+``chunk`` rounds into ONE XLA program and sync once per chunk, which
+drops the host overhead from O(rounds) to O(rounds/chunk). Three pieces
+are shared:
+
+* :func:`donating_jit` — ``jax.jit`` with ``donate_argnums`` on backends
+  that implement buffer donation, so the K-stacked population params and
+  error-feedback residuals are updated IN PLACE chunk over chunk instead
+  of doubling peak memory. CPU does not support donation (XLA would warn
+  and copy anyway), so the gate keeps the test path quiet. The DONATION
+  INVARIANT: arrays passed as donated arguments are dead after the
+  call. The public drivers keep this INTERNAL — they :func:`own` (copy
+  once, on donating backends only) any caller-provided pytree before
+  the first chunk, so callers may freely reuse their own params across
+  driver calls; only the driver-owned carries are donated.
+* :func:`traceable` — the ``sample_tasks_traced`` contract probe: a
+  sampler that traces under abstract (key, round) arguments — AND whose
+  output actually depends on them — runs INSIDE the scan; anything
+  else (host RNG, ``int(t)`` round logic, file I/O, stateful iterators
+  whose trace would bake one batch in as a constant) is transparently
+  wrapped in ``jax.pure_callback`` so the scanned drivers accept every
+  sampler the host-loop drivers did, at the cost of one host round-trip
+  per round for that sampler only.
+* :func:`first_hit` — recover the EXACT first round that hit the target
+  from a per-round reached mask (the scanned FL driver freezes state
+  with ``lax.cond`` once the target is reached, so t_i is bit-identical
+  to the host loop's early ``break``, not approximated by the chunk
+  grid).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def donating_jit(fn: Callable, donate_argnums=(), **jit_kwargs):
+    """``jax.jit`` that donates ``donate_argnums`` where the backend
+    supports it (TPU/GPU). On CPU donation is unimplemented — XLA logs a
+    "donated buffers were not usable" warning and copies — so the gate
+    compiles without donation there. See the module docstring for the
+    donation invariant callers must respect."""
+    if jax.default_backend() == "cpu":
+        return jax.jit(fn, **jit_kwargs)
+    return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+
+
+def own(tree):
+    """Driver-owned copy of a CALLER-provided pytree on donating
+    backends (no-op on CPU, where :func:`donating_jit` never donates).
+    The chunked drivers copy incoming params/state once before the
+    first chunk so donation consumes only driver-owned buffers — the
+    caller's pytree stays valid across repeated driver calls (e.g.
+    Monte-Carlo sweeps from one meta-init)."""
+    if jax.default_backend() == "cpu":
+        return tree
+    return jax.tree.map(jnp.copy, tree)
+
+
+def _outputs_all_constant(closed_jaxpr) -> bool:
+    """True when no output of a traced function (transitively) depends
+    on any input — i.e. everything it returns is a baked-in constant.
+    That is the signature of an IMPURE sampler (``next(iterator)``,
+    cached host arrays): it traces fine, but inside a scan its single
+    traced value would replay every round. Dependence is propagated
+    conservatively through equations, so mixed const/input ops count as
+    input-dependent (classified traced, never falsely demoted)."""
+    j = closed_jaxpr.jaxpr
+    dependent = set(j.invars)
+    for eqn in j.eqns:
+        if any(not hasattr(v, "val") and v in dependent
+               for v in eqn.invars):
+            dependent.update(eqn.outvars)
+    return all(hasattr(v, "val") or v not in dependent
+               for v in j.outvars)
+
+
+def traceable(fn: Callable, *probe_args, name: str = "sampler"):
+    """Return a scan-safe version of ``fn`` plus whether it traced.
+
+    ``fn(*probe_args)`` is probed with ``jax.make_jaxpr`` (abstract
+    values, nothing executes): success — with outputs that actually
+    DEPEND on the inputs — means ``fn`` satisfies the traced contract
+    (pure jax ops, no host concretization of the round index or key)
+    and it is returned as-is to run on-device inside the scan.
+
+    Everything else falls back: functions that fail to trace, and
+    traceable-but-impure ones whose outputs are input-independent
+    constants (a stateful ``next(batch_iter)`` sampler would otherwise
+    silently bake ONE batch into the compiled loop). The fallback calls
+    ``fn`` once CONCRETELY to learn the output structure, then wraps it
+    in ``jax.pure_callback``: the scanned loop stays one compiled
+    program, and this one function round-trips to the host each round
+    with concrete (numpy) arguments — exactly the values the host-loop
+    driver would have passed, so results are unchanged, only slower.
+    Samplers should migrate to the traced contract to drop the round
+    trip.
+    """
+    try:
+        if not _outputs_all_constant(jax.make_jaxpr(fn)(*probe_args)):
+            return fn, True
+    except Exception:
+        pass
+    out = fn(*probe_args)
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        out)
+
+    def host_fn(*args):
+        np_args = jax.tree.map(np.asarray, args)
+        return jax.tree.map(np.asarray, fn(*np_args))
+
+    def wrapped(*args):
+        return jax.pure_callback(host_fn, sds, *args)
+
+    wrapped.__name__ = f"host_callback_{name}"
+    return wrapped, False
+
+
+def first_hit(reached_mask) -> Optional[int]:
+    """Index of the first True in a per-round reached mask (host-side,
+    one chunk), or None if the chunk never hit the target."""
+    mask = np.asarray(reached_mask)
+    idx = np.flatnonzero(mask)
+    return int(idx[0]) if idx.size else None

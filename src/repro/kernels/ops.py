@@ -75,12 +75,15 @@ def consensus_update(x, neighbors, sigmas, *, block_n: int = 64 * 1024,
                                 interpret=(impl == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "impl"))
+@functools.partial(jax.jit, static_argnames=("block_n", "impl", "qblock"))
 def quant_consensus_update(x, q_self, s_self, q_neighbors, s_neighbors,
                            sigmas, *, block_n: int = 64 * 1024,
-                           impl: str = "xla"):
-    """Fused int8-dequant + Eq.-(6) update around the agent's own decoded
-    model: x + Σ_h σ_h (s_h·q_h − s_self·q_self). Wire models int8."""
+                           impl: str = "xla", qblock=None):
+    """Fused int-dequant + Eq.-(6) update around the agent's own decoded
+    model: x + Σ_h σ_h (s_h·q_h − s_self·q_self). Wire models ride int8
+    lanes. ``qblock=None``: one scale per model (s_self scalar,
+    s_neighbors (H,)); ``qblock=B``: per-channel block-wise scales
+    (``"int8:b64"`` wires) — s_self (⌈N/B⌉,), s_neighbors (H, ⌈N/B⌉)."""
     _check_dtype(x)
     if q_self.dtype != jnp.int8 or q_neighbors.dtype != jnp.int8:
         raise TypeError(
@@ -93,9 +96,16 @@ def quant_consensus_update(x, q_self, s_self, q_neighbors, s_neighbors,
         raise ValueError(
             f"bad shapes {x.shape} {q_self.shape} {q_neighbors.shape} "
             f"{s_neighbors.shape} {sigmas.shape}")
+    if qblock is not None:
+        nb = -(-x.shape[0] // int(qblock))
+        if s_self.shape != (nb,) or s_neighbors.shape[1:] != (nb,):
+            raise ValueError(
+                f"qblock={qblock} wants {nb} scales per model, got "
+                f"{s_self.shape} {s_neighbors.shape}")
     if impl == "xla":
         return _ref.quant_consensus_update_reference(
-            x, q_self, s_self, q_neighbors, s_neighbors, sigmas)
+            x, q_self, s_self, q_neighbors, s_neighbors, sigmas,
+            qblock=qblock)
     return _qc.quant_consensus_update(
         x, q_self, s_self, q_neighbors, s_neighbors, sigmas,
-        block_n=block_n, interpret=(impl == "interpret"))
+        block_n=block_n, interpret=(impl == "interpret"), qblock=qblock)

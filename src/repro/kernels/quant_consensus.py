@@ -2,14 +2,19 @@
 
     W_k  ←  W_k + Σ_h σ_{k,h} (s_h·q_h − s_k·q_k)
 
-where q are per-tensor absmax-quantized int8 models (the sidelink wire
-format of :mod:`repro.comms.codecs`) and s their f32 scales. The unfused
-path materializes H dequantized parameter-sized f32 temporaries before
-mixing; this kernel streams (H, block_n) int8 tiles through VMEM and
-dequantizes INSIDE the combine, so HBM traffic for the neighbour models
-is H·N bytes (int8) instead of 4·H·N (f32) plus the extra round trip —
-the consensus round is purely memory-bound, so wire-dtype traffic is the
-whole game.
+where q are absmax-quantized int models in int8 lanes (the sidelink wire
+format of :mod:`repro.comms.codecs`) and s their f32 scales — ONE scale
+per tensor by default, or per-channel BLOCK-WISE scales (``qblock``:
+each consecutive ``qblock``-long run of the flattened tensor carries its
+own scale, the ``"int8:b64"`` wire). The unfused path materializes H
+dequantized parameter-sized f32 temporaries before mixing; this kernel
+streams (H, block_n) int8 tiles through VMEM and dequantizes INSIDE the
+combine, so HBM traffic for the neighbour models is H·N bytes (int8)
+instead of 4·H·N (f32) plus the extra round trip — the consensus round
+is purely memory-bound, so wire-dtype traffic is the whole game. Block
+scales ride along as one (H, block_n/qblock) f32 tile per grid step
+(the kernel tile is snapped to a multiple of ``qblock`` so every scale
+block lives wholly inside one tile).
 
 Note the mixing recenters on the agent's OWN decoded model s_k·q_k (not
 W_k): with a doubly-stochastic σ this keeps the population mean exact
@@ -40,39 +45,98 @@ def _quant_consensus_kernel(x_ref, qs_ref, ss_ref, qn_ref, sn_ref, sig_ref,
     o_ref[...] = (x + acc).astype(o_ref.dtype)
 
 
+def _quant_consensus_kernel_blocked(x_ref, qs_ref, ss_ref, qn_ref, sn_ref,
+                                    sig_ref, o_ref, *, num_neighbors: int,
+                                    qblock: int):
+    x = x_ref[...].astype(jnp.float32)                     # (bn,)
+    bn = x.shape[0]
+    sb = bn // qblock
+
+    def dequant(q, s):                 # q: (bn,) int8 lanes, s: (sb,) f32
+        rows = q.astype(jnp.float32).reshape(sb, qblock)
+        return (rows * s[:, None]).reshape(bn)
+
+    xhat = dequant(qs_ref[...], ss_ref[...])
+    acc = jnp.zeros_like(x)
+    for h in range(num_neighbors):
+        nb = dequant(qn_ref[h], sn_ref[h])                 # fused dequant
+        acc = acc + sig_ref[h] * (nb - xhat)
+    o_ref[...] = (x + acc).astype(o_ref.dtype)
+
+
 def quant_consensus_update(x, q_self, s_self, q_neighbors, s_neighbors,
                            sigmas, *, block_n: int = DEFAULT_BLOCK_N,
-                           interpret: bool = False):
-    """x: (N,) own full-precision params; q_self: (N,) int8 own quantized
-    model with scalar scale s_self; q_neighbors: (H, N) int8 neighbour
-    models with scales s_neighbors: (H,); sigmas: (H,) Eq.-(6) weights.
+                           interpret: bool = False, qblock=None):
+    """x: (N,) own full-precision params; q_self: (N,) own quantized model
+    (int8 lanes); q_neighbors: (H, N) neighbour models; sigmas: (H,)
+    Eq.-(6) weights.
 
-    Returns the updated (N,) params for one agent, one round.
+    Scale layout — ``qblock=None`` (per-tensor): s_self scalar,
+    s_neighbors (H,). ``qblock=B`` (block-wise, the ``"int8:b64"``
+    wire): s_self (⌈N/B⌉,), s_neighbors (H, ⌈N/B⌉) — scale j dequantizes
+    the flat run [j·B, (j+1)·B), exactly the codec's blocking, and the
+    dequant stays fused inside the combine. Returns the updated (N,)
+    params for one agent, one round.
     """
     N = x.shape[0]
     H = q_neighbors.shape[0]
-    block_n = min(block_n, N)
-    Np = -(-N // block_n) * block_n
-    if Np != N:
-        x = jnp.pad(x, (0, Np - N))
-        q_self = jnp.pad(q_self, (0, Np - N))
-        q_neighbors = jnp.pad(q_neighbors, ((0, 0), (0, Np - N)))
-
-    out = pl.pallas_call(
-        functools.partial(_quant_consensus_kernel, num_neighbors=H),
-        grid=(Np // block_n,),
-        in_specs=[
+    if qblock is None:
+        block_n = min(block_n, N)
+        Np = -(-N // block_n) * block_n
+        if Np != N:
+            x = jnp.pad(x, (0, Np - N))
+            q_self = jnp.pad(q_self, (0, Np - N))
+            q_neighbors = jnp.pad(q_neighbors, ((0, 0), (0, Np - N)))
+        kernel = functools.partial(_quant_consensus_kernel,
+                                   num_neighbors=H)
+        in_specs = [
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((H, block_n), lambda i: (0, i)),
             pl.BlockSpec((H,), lambda i: (0,)),
             pl.BlockSpec((H,), lambda i: (0,)),
-        ],
+        ]
+        args = (x, q_self, jnp.reshape(s_self, (1,)).astype(jnp.float32),
+                q_neighbors, s_neighbors.astype(jnp.float32),
+                sigmas.astype(jnp.float32))
+    else:
+        qblock = int(qblock)
+        # snap the tile to a whole number of scale blocks so each grid
+        # step sees its scales in one contiguous (sb,) slice
+        block_n = max(qblock, (min(block_n, -(-N // qblock) * qblock)
+                               // qblock) * qblock)
+        sb = block_n // qblock
+        Np = -(-N // block_n) * block_n
+        nb = Np // qblock                      # padded scale count
+        n_scales = -(-N // qblock)             # the codec's scale count
+        if Np != N:
+            x = jnp.pad(x, (0, Np - N))
+            q_self = jnp.pad(q_self, (0, Np - N))
+            q_neighbors = jnp.pad(q_neighbors, ((0, 0), (0, Np - N)))
+        if nb != n_scales:                     # padded q is 0: scale moot
+            s_self = jnp.pad(s_self, (0, nb - n_scales))
+            s_neighbors = jnp.pad(s_neighbors, ((0, 0), (0, nb - n_scales)))
+        kernel = functools.partial(_quant_consensus_kernel_blocked,
+                                   num_neighbors=H, qblock=qblock)
+        in_specs = [
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((sb,), lambda i: (i,)),
+            pl.BlockSpec((H, block_n), lambda i: (0, i)),
+            pl.BlockSpec((H, sb), lambda i: (0, i)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+        ]
+        args = (x, q_self, s_self.astype(jnp.float32),
+                q_neighbors, s_neighbors.astype(jnp.float32),
+                sigmas.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(Np // block_n,),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Np,), x.dtype),
         interpret=interpret,
-    )(x, q_self, jnp.reshape(s_self, (1,)).astype(jnp.float32),
-      q_neighbors, s_neighbors.astype(jnp.float32),
-      sigmas.astype(jnp.float32))
+    )(*args)
     return out[:N]

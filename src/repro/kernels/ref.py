@@ -42,13 +42,34 @@ def consensus_update_reference(x, neighbors, sigmas):
 
 
 def quant_consensus_update_reference(x, q_self, s_self, q_neighbors,
-                                     s_neighbors, sigmas):
+                                     s_neighbors, sigmas, qblock=None):
     """Oracle for kernels.quant_consensus_update: dequantize the int8
-    wire models and mix (Eq. 6) around the agent's own DECODED model."""
+    wire models and mix (Eq. 6) around the agent's own DECODED model.
+
+    ``qblock=None``: one scale per model (s_self scalar, s_neighbors
+    (H,)). ``qblock=B``: per-channel block-wise scales — s_self
+    (⌈N/B⌉,), s_neighbors (H, ⌈N/B⌉), scale j covering the flat run
+    [j·B, (j+1)·B) exactly like ``IntCodec(bits, block=B)``."""
     xf = x.astype(jnp.float32)
-    xhat = q_self.astype(jnp.float32) * jnp.asarray(s_self, jnp.float32)
-    nb = (q_neighbors.astype(jnp.float32)
-          * s_neighbors.astype(jnp.float32)[:, None])
+    if qblock is None:
+        xhat = q_self.astype(jnp.float32) * jnp.asarray(s_self, jnp.float32)
+        nb = (q_neighbors.astype(jnp.float32)
+              * s_neighbors.astype(jnp.float32)[:, None])
+    else:
+        N = x.shape[0]
+        n_scales = -(-N // qblock)
+        pad = n_scales * qblock - N
+
+        def dequant(q, s):                       # q (..., N), s (..., nb)
+            qp = jnp.pad(q.astype(jnp.float32),
+                         [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+            rows = qp.reshape(q.shape[:-1] + (n_scales, qblock))
+            y = (rows * s.astype(jnp.float32)[..., None]).reshape(
+                q.shape[:-1] + (n_scales * qblock,))
+            return y[..., :N]
+
+        xhat = dequant(q_self, s_self)
+        nb = dequant(q_neighbors, s_neighbors)
     upd = jnp.einsum("h,hn->n", sigmas.astype(jnp.float32),
                      nb - xhat[None, :])
     return (xf + upd).astype(x.dtype)

@@ -25,6 +25,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.core import energy
@@ -77,7 +78,8 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     local_steps: int, batch: int, seq: int, lr: float,
                     consensus_every: int = 1, seed: int = 0,
                     energy_params=None, consensus_dtype=None,
-                    consensus_plan: str = "auto", codec=None, mesh=None):
+                    consensus_plan: str = "auto", codec=None, mesh=None,
+                    chunk: int = 1):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
@@ -93,6 +95,11 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     the Eq.-(11) estimate prices the codec's wire bits instead of the
     storage dtype. ``codec="auto"`` picks the wire format from the
     graph's bottleneck link efficiency (:func:`repro.comms.select_codec`).
+    ``chunk`` compiles that many FL rounds into one ``lax.scan`` program
+    (loss history synced per chunk, bit-identical to ``chunk=1`` — the
+    per-round host loop); the chunk program donates the stacked params +
+    EF-residual buffers where the backend supports donation, so the
+    agent population updates in place.
     """
     assert agents % tasks == 0
     per = agents // tasks
@@ -132,7 +139,6 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         p, _ = jax.lax.scan(one, p, b)
         return p
 
-    @jax.jit
     def fl_round(stacked, codec_state, key):
         # same split as the pre-codec trainer — codec=None runs keep
         # their exact RNG stream (reproducible loss curves); the codec
@@ -162,6 +168,21 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     jax.tree.map(lambda x: x[0][0], batches))
         return new, codec_state, l
 
+    # the one compiled round-loop program (chunk=1 == the legacy host
+    # loop, one dispatch + sync per round; chunk=N syncs once per chunk;
+    # stacked params + EF residuals donated where supported)
+    from repro.core import scanloop
+
+    def fl_body(carry, _t):
+        stacked, codec_state, key = carry
+        key, sk = jax.random.split(key)
+        stacked, codec_state, l = fl_round(stacked, codec_state, sk)
+        return (stacked, codec_state, key), l
+
+    fl_chunk = scanloop.donating_jit(
+        lambda s, cs, k, ts: jax.lax.scan(fl_body, (s, cs, k), ts),
+        donate_argnums=(0, 1))
+
     n_params = sum(x.size for x in jax.tree.leaves(params))
     n_bytes = sum(x.size * (2 if consensus_dtype is not None
                             else x.dtype.itemsize)
@@ -183,11 +204,15 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     codec_state = (codec.init_state(stacked)
                    if codec is not None and codec.stateful else None)
     hist = []
-    for r in range(rounds):
-        key, sk = jax.random.split(key)
-        stacked, codec_state, l = fl_round(stacked, codec_state, sk)
-        hist.append(float(l))
-        print(f"round {r:3d}  loss {float(l):.4f}")
+    chunk = max(int(chunk), 1)
+    for start in range(0, rounds, chunk):
+        n = min(chunk, rounds - start)
+        ts = jnp.arange(start, start + n, dtype=jnp.int32)
+        (stacked, codec_state, key), ls = fl_chunk(stacked, codec_state,
+                                                   key, ts)
+        for r, l in enumerate(np.asarray(ls), start):   # one sync/chunk
+            hist.append(float(l))
+            print(f"round {r:3d}  loss {float(l):.4f}")
     # Eq.-(11) priced at the codec's wire size (b(W) · bits ratio)
     E = tasks * energy.fl_energy(ep, rounds, topology=cluster_topo,
                                  codec=codec)
@@ -221,6 +246,10 @@ def main():
                     help="model-exchange codec spec (bf16, int8, int4, "
                          "int8:b64 block scales, topk:0.05, +ef suffix; "
                          "'auto' picks from link quality; see repro.comms)")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="FL rounds per compiled scan program (1 = "
+                         "per-round host loop; larger chunks sync once "
+                         "per chunk, bit-identical results)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -235,7 +264,8 @@ def main():
             local_steps=args.local_steps, batch=args.batch, seq=args.seq,
             lr=args.lr,
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
-            consensus_plan=args.consensus_plan, codec=args.codec)
+            consensus_plan=args.consensus_plan, codec=args.codec,
+            chunk=args.chunk)
 
 
 if __name__ == "__main__":

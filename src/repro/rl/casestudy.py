@@ -12,10 +12,13 @@ Experience follows the paper's Sect. IV-A budget: each robot gathers ONE
 motions) and takes B_i = 20 local SGD minibatch steps on it. The ε-greedy
 behaviour is wrapped around the agent's own current Q — this is exactly
 why a good meta-initialization cuts t_i: it walks on-trajectory from
-round one, while a random init explores blindly. Every protocol round
-(sampling + local SGD + consensus + greedy evaluation) is ONE jitted XLA
-program; the host loop only checks the reached-target flag, which is what
-makes Monte-Carlo sweeps over t0 tractable on CPU.
+round one, while a random init explores blindly. CHUNKS of ``chunk``
+protocol rounds (sampling + local SGD + consensus + greedy evaluation,
+each) compile into ONE ``lax.scan`` XLA program; the host checks the
+per-round reached-target flags once per chunk and recovers the exact t_i
+from the in-scan reached mask (a ``lax.cond`` freezes the population
+after the hit), which is what makes Monte-Carlo sweeps over t0 tractable
+on CPU — O(rounds/chunk) dispatches and syncs instead of O(rounds).
 """
 from __future__ import annotations
 
@@ -25,10 +28,11 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro import comms
-from repro.core import energy, maml
+from repro.core import energy, maml, scanloop
 from repro.core import topology as topo_lib
 from repro.core.engine import ConsensusEngine
 from repro.core.multitask import ClusterNetwork
@@ -124,9 +128,18 @@ class CaseStudy:
     #: is accumulated only over messages actually sent)
     dropout_p: float = 0.0
     dropout_seed: int = 0
+    #: protocol rounds per compiled program: both stages run inside
+    #: chunked ``lax.scan`` programs, so the host syncs (the per-round
+    #: reached flags / meta losses) once per CHUNK instead of once per
+    #: round — t0 and t_i trajectories are bit-identical to ``chunk=1``
+    #: (the per-round host loop), the Monte-Carlo sweeps just stop
+    #: paying O(rounds) dispatches. Dropout rounds prefetch each
+    #: chunk's surviving mixes and ride the scan as a stacked input.
+    chunk: int = 8
 
     def __post_init__(self):
         self.cfg = self.cfg or get_arch("paper-dqn")
+        self.chunk = max(int(self.chunk), 1)
         self.energy_params = (self.energy_params
                               or energy.paper_calibrated("fig3"))
         self.codec = comms.resolve_codec(self.codec)
@@ -173,6 +186,19 @@ class CaseStudy:
 
         self._meta_round = meta_round
 
+        # chunked stage-1 driver: `chunk` meta rounds per compiled scan
+        # program, key split per round exactly like the host loop (same
+        # PRNG stream, bit-identical history), losses synced per chunk
+        def meta_body(carry, _t):
+            p, k = carry
+            k, sk = jax.random.split(k)
+            p, m = meta_round(p, sk)     # jit-of-jit inlines when traced
+            return (p, k), m["meta_loss"]
+
+        self._meta_chunk = scanloop.donating_jit(
+            lambda p, k, ts: jax.lax.scan(meta_body, (p, k), ts),
+            donate_argnums=(0,))
+
         # ---- jitted FL round per task (Eq. 6 cluster) ---------------------
         # dense-xla is the one engine plan that accepts a TRACED per-round
         # mix — which is how the dropout_p > 0 path swaps each round's
@@ -213,18 +239,55 @@ class CaseStudy:
             tid: jax.jit(functools.partial(fl_round, tid))
             for tid in range(gw.NUM_TASKS)}
 
+        # chunked stage-2 driver: `chunk` FL rounds per compiled scan
+        # program. Per-round mixes ride the scan as a stacked input
+        # (the dropout path prefetches each chunk's surviving graphs),
+        # a lax.cond freezes params/EF-state/key once the running
+        # reward hits the target, and the per-round reached flags sync
+        # to the host once per CHUNK — the exact t_i comes back out of
+        # the reached mask, bit-identical to the per-round host loop.
+        def fl_body(task_id, limit, carry, xs):
+            t, mix = xs
+
+            def live(c):
+                st, cs, k, _ = c
+                k, sk = jax.random.split(k)
+                st, cs, R = fl_round(task_id, st, cs, sk, mix)
+                hit = R >= self.r_target
+                return (st, cs, k, hit), (hit, jnp.asarray(True), R)
+
+            def frozen(c):
+                return c, (c[3], jnp.asarray(False), jnp.float32(0))
+
+            pred = jnp.logical_and(jnp.logical_not(carry[3]), t < limit)
+            return jax.lax.cond(pred, live, frozen, carry)
+
+        def fl_chunk(task_id, stacked, codec_state, k, reached, ts, mixes,
+                     limit):
+            return jax.lax.scan(functools.partial(fl_body, task_id, limit),
+                                (stacked, codec_state, k, reached),
+                                (ts, mixes))
+
+        self._fl_chunks = {
+            tid: scanloop.donating_jit(functools.partial(fl_chunk, tid),
+                                       donate_argnums=(0, 1))
+            for tid in range(gw.NUM_TASKS)}
+
     # -- API ------------------------------------------------------------
     def init_params(self, key):
         return qmodel.init(key, self.cfg)
 
     def meta_train(self, key, t0: int):
+        """Stage 1: t0 meta rounds, ``self.chunk`` rounds per compiled
+        program, meta-loss history synced once per chunk."""
         kinit, kdata = jax.random.split(key)
         params = self.init_params(kinit)
         hist = []
-        for t in range(t0):
-            kdata, sk = jax.random.split(kdata)
-            params, m = self._meta_round(params, sk)
-            hist.append(float(m["meta_loss"]))
+        for start in range(0, t0, self.chunk):
+            n = min(self.chunk, t0 - start)
+            ts = jnp.arange(start, start + n, dtype=jnp.int32)
+            (params, kdata), losses = self._meta_chunk(params, kdata, ts)
+            hist.extend(float(x) for x in np.asarray(losses))
         return params, hist
 
     def adapt_task(self, key, task_id: int, init_params, *,
@@ -233,7 +296,12 @@ class CaseStudy:
         ``dropout_p > 0`` every round mixes over that round's SURVIVING
         links (deterministic in ``dropout_seed`` + task) and the Eq.-(11)
         comm joules of the adaptation are accumulated per sent message in
-        ``self.last_adapt_comm_joules``."""
+        ``self.last_adapt_comm_joules``.
+
+        Runs ``self.chunk`` rounds per compiled program: the per-round
+        reached flags sync once per chunk, the in-scan freeze keeps
+        params/EF-state pinned after the hit, and the comm-joules bill
+        counts exactly the ``rounds_used`` rounds actually executed."""
         C = self.network.devices_per_cluster
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), init_params)
@@ -243,27 +311,40 @@ class CaseStudy:
         topo_seq = (topo_lib.dropout(self.cluster_topology, self.dropout_p,
                                      seed=self.dropout_seed + task_id)
                     if self.dropout_p > 0 else None)
+        static_joules = self.cluster_topology.round_comm_joules(
+            self.energy_params, codec=self.codec)
         hist = []
         rounds = max_rounds
-        comm_joules = 0.0
-        step = self._fl_rounds[task_id]
-        for t in range(max_rounds):
-            key, sk = jax.random.split(key)
+        joules_per_round = []
+        reached = jnp.asarray(False)
+        step = self._fl_chunks[task_id]
+        limit = jnp.int32(max_rounds)
+        for start in range(0, max_rounds, self.chunk):
+            # prefetch this chunk's per-round mixes (+ Eq.-11 joules of
+            # the links actually up each round) on the host
             if topo_seq is None:
-                mix_t = self._static_mix
-                comm_joules += self.cluster_topology.round_comm_joules(
-                    self.energy_params, codec=self.codec)
+                mixes = jnp.broadcast_to(
+                    self._static_mix[None],
+                    (self.chunk,) + self._static_mix.shape)
+                joules_per_round.extend([static_joules] * self.chunk)
             else:
-                topo_t = next(topo_seq)
-                mix_t = jnp.asarray(topo_t.mixing(kind="paper"))
-                comm_joules += topo_t.round_comm_joules(
-                    self.energy_params, codec=self.codec)
-            stacked, codec_state, R = step(stacked, codec_state, sk, mix_t)
-            hist.append(float(R))
-            if float(R) >= self.r_target:
-                rounds = t + 1
+                topos = [next(topo_seq) for _ in range(self.chunk)]
+                mixes = jnp.stack(
+                    [jnp.asarray(t.mixing(kind="paper")) for t in topos])
+                joules_per_round.extend(
+                    t.round_comm_joules(self.energy_params,
+                                        codec=self.codec) for t in topos)
+            ts = jnp.arange(start, start + self.chunk, dtype=jnp.int32)
+            (stacked, codec_state, key, reached), ys = step(
+                stacked, codec_state, key, reached, ts, mixes, limit)
+            hits, live_mask, Rs = (np.asarray(y) for y in ys)  # ONE sync
+            hist.extend(float(r) for r, v in zip(Rs, live_mask) if v)
+            h = scanloop.first_hit(hits)
+            if h is not None:
+                rounds = start + h + 1
                 break
-        self.last_adapt_comm_joules = comm_joules
+        self.last_adapt_comm_joules = float(
+            np.sum(joules_per_round[:rounds]))
         return stacked, rounds, hist
 
     def run(self, key, t0: int, *, max_rounds: int = 400) -> ProtocolResult:

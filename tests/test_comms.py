@@ -128,7 +128,8 @@ def test_blockwise_bits_and_pricing_exact():
 
 def test_blockwise_consensus_round_runs(rng_key):
     """Block-scaled wires thread the full compressed consensus path
-    (decode-before-gather — the fused int8 kernel wants scalar scales)."""
+    (dense impl here; the sparse/sharded paths keep the int8 lanes
+    through the fused kernel's qblock support)."""
     K = 8
     s = {"w": jax.random.normal(rng_key, (K, 24))}
     mix = topo_lib.ring(K).mixing()
@@ -365,24 +366,35 @@ def test_compressed_consensus_identity_codec_matches_uncompressed(rng_key):
 
 
 def test_auto_path_accounts_for_codec_payload():
-    # ring(12, hops=2): H = 4 > 12//4 = 3 ⇒ dense at f32...
-    mix = topo_lib.ring(12, hops=2).mixing()
+    # ring(256, hops=40): H = 80 > 256//4 = 64 ⇒ dense at f32...
+    mix = topo_lib.ring(256, hops=40).mixing()
     assert consensus.auto_path(mix) == "dense"
-    # ...but the int8 wire moves 4× fewer bytes THROUGH THE GATHER (the
-    # fused kernel consumes int8 directly): H_eff = 1 ⇒ sparse
+    # ...but int wires move 4×/8× fewer bytes THROUGH THE GATHER (the
+    # fused dequant-consensus kernel consumes int8 lanes directly):
+    # H_eff = 20 (int8) / 10 (int4) ⇒ sparse
     assert consensus.auto_path(mix, comms.get_codec("int8")) == "sparse"
     assert consensus.auto_path(mix, comms.get_codec("int8+ef")) == "sparse"
+    assert consensus.auto_path(mix, comms.get_codec("int4+ef")) == "sparse"
+    # block-wise scales ride the fused kernel too, at 8 + 32/64 wire
+    # bits per param
+    assert consensus.auto_path(mix, comms.get_codec("int8:b64")) == "sparse"
     # f32 wire: unchanged
     assert consensus.auto_path(mix, comms.get_codec("none")) == "dense"
-    # bf16/int4/top-k sparse paths gather DECODED f32 neighbours, so
-    # their degree counts at full width — no discount, stays dense
+    # bf16/top-k sparse paths gather DECODED f32 neighbours, so their
+    # degree counts at full width — no discount, stays dense
     assert consensus.auto_path(mix, comms.get_codec("bf16")) == "dense"
-    assert consensus.auto_path(mix, comms.get_codec("int4+ef")) == "dense"
     assert consensus.auto_path(mix, comms.get_codec("topk:0.05")) == "dense"
-    star = topo_lib.star(12).mixing()
+    star = topo_lib.star(256).mixing()
     # at int8, h_eff = (K−1)/4 ≤ K/4 ALWAYS: even star's gather moves
     # fewer bytes than the f32 matmul — every graph goes sparse
     assert consensus.auto_path(star, comms.get_codec("int8")) == "sparse"
+    # ...except below the calibrated K·degree floor, where the vmapped
+    # gather can't amortize its overhead (K=12 ring ran at 0.59× dense
+    # in BENCH_consensus_scale): small populations stay dense no matter
+    # how light the wire
+    small = topo_lib.ring(12, hops=2).mixing()
+    assert consensus.auto_path(small) == "dense"
+    assert consensus.auto_path(small, comms.get_codec("int8")) == "dense"
 
 
 # ---------------------------------------------------------------------------
@@ -434,3 +446,76 @@ def test_quant_consensus_parity_at_k256():
     np.testing.assert_allclose(np.asarray(sparse["w"]),
                                np.asarray(dense["w"]),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_blockwise_quant_consensus_kernel_parity():
+    """The fused kernel with per-channel BLOCK-WISE scales (qblock):
+    Pallas body (interpret) == XLA oracle == manual decode-then-mix,
+    including a tensor length that is not a multiple of the scale block
+    or the kernel tile."""
+    rng = np.random.default_rng(1)
+    N, H, B = 300, 3, 64                  # 300 = 4 full blocks + 44 tail
+    nb = -(-N // B)
+    x = jnp.asarray(rng.normal(size=N), jnp.float32)
+    qs = jnp.asarray(rng.integers(-127, 128, N), jnp.int8)
+    ss = jnp.asarray(rng.uniform(0.005, 0.02, nb), jnp.float32)
+    qn = jnp.asarray(rng.integers(-127, 128, (H, N)), jnp.int8)
+    sn = jnp.asarray(rng.uniform(0.005, 0.02, (H, nb)), jnp.float32)
+    sig = jnp.asarray(rng.uniform(0.0, 0.3, H), jnp.float32)
+    a = ops.quant_consensus_update(x, qs, ss, qn, sn, sig, impl="xla",
+                                   qblock=B)
+    b = ops.quant_consensus_update(x, qs, ss, qn, sn, sig,
+                                   impl="interpret", qblock=B, block_n=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+    # manual decode (the codec's own blocking) then the plain Eq.-6 mix
+    codec = comms.IntCodec(8, block=B)
+    like = jax.ShapeDtypeStruct((N,), jnp.float32)
+    xhat = codec.decode_leaf({"q": qs, "scale": ss}, like)
+    nbs = jnp.stack([codec.decode_leaf({"q": qn[h], "scale": sn[h]}, like)
+                     for h in range(H)])
+    want = x + jnp.einsum("h,hn->n", sig, nbs - xhat[None])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # scale-count guard
+    with pytest.raises(ValueError):
+        ops.quant_consensus_update(x, qs, ss[:-1], qn, sn, sig, qblock=B)
+
+
+def test_sharded_blockwise_int8_stays_fused_parity_at_k256():
+    """int8:b64 wires on the SHARDED plan: block-scaled int wires stay
+    int8 lanes through the all_gather and dequantize INSIDE the fused
+    combine (no decode-then-combine), matching the per-agent jnp oracle
+    at K = 256 and preserving the population mean exactly under
+    doubly-stochastic σ."""
+    from repro.core.engine import ConsensusEngine
+    from repro.kernels import ref
+
+    K, N, B = 256, 96, 64
+    s = {"w": jax.random.normal(jax.random.PRNGKey(3), (K, N))}
+    topo = topo_lib.ring(K)
+    eng = ConsensusEngine(topo, codec="int8:b64", plan="sharded",
+                          num_blocks=8)
+    out, state = eng.step(s, eng.init_state(s))
+    assert state is not None              # EF residual threads through
+    # oracle: EF residual starts at 0 ⇒ the wire is the plain blocked
+    # encode; mix every row with the blocked reference kernel
+    base = eng.codec.inner
+    mix = np.asarray(topo.mixing())
+    idx, sg = consensus.sparse_structure(mix)
+    xf = jnp.asarray(np.asarray(s["w"], np.float32))
+    enc = jax.vmap(lambda m: base.encode_leaf(m, None))(xf)
+    want = np.stack([np.asarray(ref.quant_consensus_update_reference(
+        xf[k], enc["q"][k], enc["scale"][k], enc["q"][idx[k]],
+        enc["scale"][idx[k]], jnp.asarray(sg[k]), qblock=B))
+        for k in range(K)])
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32), want,
+                               rtol=0, atol=1e-5)
+    # CHOCO mean exactness survives the blocked wire
+    mixm = np.asarray(topo.mixing(kind="metropolis"))
+    engm = ConsensusEngine(mixm, codec="int8:b64", plan="sharded",
+                           num_blocks=8)
+    outm, _ = engm.step(s, engm.init_state(s))
+    np.testing.assert_allclose(
+        np.asarray(outm["w"], np.float32).mean(axis=0),
+        np.asarray(s["w"], np.float32).mean(axis=0), atol=1e-5)

@@ -82,12 +82,36 @@ def test_sharded_and_distributed_keep_population_mean(rng_key):
 
 
 def test_auto_plan_without_mesh_follows_density():
-    assert ConsensusEngine(topo_lib.ring(64)).plan.kind == "sparse-pallas"
+    assert ConsensusEngine(topo_lib.ring(256)).plan.kind == "sparse-pallas"
     # star is dense (max degree K-1): auto falls back to the matmul
-    assert ConsensusEngine(topo_lib.star(12)).plan.kind == "dense-xla"
+    assert ConsensusEngine(topo_lib.star(256)).plan.kind == "dense-xla"
     # ...but an int8 wire discounts the gather payload 4x
-    assert ConsensusEngine(topo_lib.star(12),
+    assert ConsensusEngine(topo_lib.star(256),
                            codec="int8").plan.kind == "sparse-pallas"
+
+
+def test_auto_plan_small_k_floor_keeps_dense():
+    """Regression for the recorded small-K loss: BENCH_consensus_scale
+    rows had auto picking sparse-pallas at K=12 (ring 0.59×, cluster
+    0.66× of dense-xla) and across all f32 K=64 graphs — below the
+    calibrated K·degree floor the vmapped gather is pure overhead, so
+    auto must keep small/dense-ish populations on the (K, K) matmul."""
+    assert ConsensusEngine(topo_lib.ring(12)).plan.kind == "dense-xla"
+    assert ConsensusEngine(
+        topo_lib.make("cluster", 12)).plan.kind == "dense-xla"
+    assert ConsensusEngine(topo_lib.ring(64)).plan.kind == "dense-xla"
+    # the codec discount shrinks the payload, never re-enables a
+    # below-floor gather
+    assert ConsensusEngine(topo_lib.ring(12),
+                           codec="int8").plan.kind == "dense-xla"
+    # ...and never DEMOTES an above-floor one either: the floor is on
+    # raw K·H (dispatch overhead, not bytes), so compressing the first
+    # winning f32 row keeps it sparse
+    assert ConsensusEngine(topo_lib.ring(256),
+                           codec="int8").plan.kind == "sparse-pallas"
+    # first winning recorded row sits exactly at the floor: K=256 ring
+    assert consensus.auto_path(
+        np.asarray(topo_lib.ring(256).mixing())) == "sparse"
 
 
 def test_auto_plan_with_mesh_goes_multi_position():
