@@ -36,6 +36,14 @@ the 12-robot case-study round shape (clusters(6, 2), N_PARAMS models,
 episode-resampled local SGD, in-loop target eval) — the wall-clock
 lever of the chunked ``lax.scan`` drivers in µs/round.
 
+``dropout_rows`` times TIME-VARYING graphs: per-round survival masks
+generated IN-SCAN from the engine's ``GraphProcess.dropout`` folded key
+(one compiled ``scan_rounds`` program for the whole loop) vs the
+host-prefetch pattern it replaced (materialize each round's surviving
+Topology on the host, one ``engine.step(mask=...)`` dispatch per round)
+— bit-identical params by the shared fold-in convention, µs/round
+apart.
+
 Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
 
 Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick|--smoke]
@@ -304,21 +312,76 @@ def rounds_loop_rows(chunks=ROUNDS_LOOP_CHUNKS, rounds: int = 128):
             return s
 
         jax.block_until_ready(drive(chunk)["w"])          # compile
-        best = float("inf")
-        for _ in range(5):
+        # median-of-3: a single min-of-N is still hostage to one good
+        # draw on shared CI machines whose scheduler noise swings the
+        # per-round dispatch cost ~2x; the median is what the --smoke
+        # scanned-no-slower assertion compares (with a 1.15x tolerance)
+        times = []
+        for _ in range(3):
             t0 = time.perf_counter()
             jax.block_until_ready(drive(rounds)["w"])
-            best = min(best, (time.perf_counter() - t0) / rounds * 1e6)
+            times.append((time.perf_counter() - t0) / rounds * 1e6)
+        med = float(np.median(times))
         if chunk == 1:
-            host_us = best
-        speedup = (host_us / best) if host_us else 1.0
+            host_us = med
+        speedup = (host_us / med) if host_us else 1.0
         rows.append(dict(
             K=K, topology="cluster", n_params=N_PARAMS, local_steps=B_i,
             rounds=rounds, chunk=chunk,
             driver="host-loop" if chunk == 1 else "scanned",
-            us_per_round=best, speedup_vs_host_loop=speedup))
-        print(f"rounds_loop chunk={chunk:3d}  {best:9.1f} us/round  "
-              f"({speedup:.2f}x vs host loop)")
+            us_per_round=med, speedup_vs_host_loop=speedup))
+        print(f"rounds_loop chunk={chunk:3d}  {med:9.1f} us/round  "
+              f"({speedup:.2f}x vs host loop, median of 3)")
+    return rows
+
+
+DROPOUT_ROUNDS = 64
+
+
+def dropout_rows(rounds: int = DROPOUT_ROUNDS, p: float = 0.2,
+                 seed: int = 0, configs=None):
+    """µs/round of a TIME-VARYING consensus round loop: in-scan masks
+    (the engine's ``GraphProcess.dropout`` — each round's surviving
+    graph drawn from the folded key INSIDE one compiled
+    ``engine.scan_rounds`` program) vs the host-prefetch pattern the
+    in-scan path replaced (per round: materialize the surviving
+    :func:`topology.dropout` Topology on the host, hand its mask to a
+    jitted ``engine.step(mask=...)``, one dispatch + sync per round).
+
+    Both modes run the SAME engine plan and produce bit-identical
+    params (the shared fold-in convention); the delta is pure host
+    overhead — mask materialization plus O(rounds) dispatches, exactly
+    what dropout Monte-Carlo sweeps used to pay per round.
+    """
+    if configs is None:
+        configs = (("cluster", topo_lib.clusters(6, 2), "dense-xla", {}),
+                   ("ring", topo_lib.ring(256), "sparse-pallas", {}))
+    rows = []
+    for fam, topo, plan, kw in configs:
+        x = _stacked(topo.K, jnp.float32)
+        eng = ConsensusEngine(
+            topo, plan=plan,
+            graph=topo_lib.GraphProcess.dropout(p, seed), **kw)
+        run = jax.jit(
+            lambda s, e=eng: e.scan_rounds(s, rounds=rounds, t0=0)[0])
+        us_scan = _time(run, x) / rounds
+        step = jax.jit(lambda s, m, e=eng: e.step(s, mask=m)[0])
+
+        def host_drive(s):
+            for rt in topo_lib.dropout(topo, p, seed, rounds=rounds):
+                s = step(s, jnp.asarray(rt.adjacency))
+            return s
+
+        us_host = _time(host_drive, x) / rounds
+        for mode, us in (("in-scan", us_scan),
+                         ("host-prefetch", us_host)):
+            rows.append(dict(
+                K=topo.K, topology=fam, plan=plan, dropout_p=p,
+                rounds=rounds, mode=mode, us_per_round=us,
+                speedup_vs_host_prefetch=us_host / max(us, 1e-9)))
+        print(f"dropout_rows {fam:10s} {plan:14s} in-scan "
+              f"{us_scan:9.1f} us/round  host-prefetch {us_host:9.1f} "
+              f"us/round  ({us_host / max(us_scan, 1e-9):.2f}x)")
     return rows
 
 
@@ -365,11 +428,19 @@ def main():
         assert cs["int8+ef"]["drop_vs_uncompressed"] >= 3.0
         # the scanned round-loop driver must not be slower per round
         # than the per-round host loop it replaces (chunk=32 typically
-        # measures ~3-4x FASTER; the 1.2 factor only absorbs shared-CI
-        # scheduling noise, a real regression still trips it)
+        # measures ~3-4x FASTER). Median-of-3 timings on both sides
+        # with a 1.15x tolerance: slow shared-CI CPUs swing a single
+        # timing ~2x on scheduler noise, which made the old
+        # single-best comparison flaky — the median absorbs one bad
+        # draw while a real regression still trips the assertion.
         loop_rows = rounds_loop_rows(chunks=(1, 32), rounds=64)
         assert (loop_rows[-1]["us_per_round"]
-                <= 1.2 * loop_rows[0]["us_per_round"])
+                <= 1.15 * loop_rows[0]["us_per_round"])
+        # time-varying rows stay runnable in CI (tiny: one config)
+        drop_rows = dropout_rows(
+            rounds=16,
+            configs=(("cluster", topo_lib.clusters(6, 2),
+                      "dense-xla", {}),))
     else:
         ks = tuple(k for k in KS if k <= 256) if args.quick else KS
         dtypes = ("float32",) if args.quick else DTYPES
@@ -379,6 +450,7 @@ def main():
         shard_rows = sharded_rows()
         cs = casestudy_eq11(codecs)
         loop_rows = rounds_loop_rows()
+        drop_rows = dropout_rows()
     payload = {
         "bench": "consensus_scale",
         "backend": jax.default_backend(),
@@ -390,6 +462,7 @@ def main():
         "sharded_rows": shard_rows,
         "casestudy_eq11": cs,
         "rounds_loop": loop_rows,
+        "dropout_rows": drop_rows,
     }
     if args.smoke:
         payload["smoke"] = True

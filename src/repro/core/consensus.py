@@ -198,7 +198,8 @@ def sparse_structure(mix):
 def consensus_step(stacked_params, mix, *, impl: str = "xla",
                    block_n: Optional[int] = None,
                    codec=None, codec_state=None, key=None,
-                   error_feedback: bool = True, gamma: float = 1.0):
+                   error_feedback: bool = True, gamma: float = 1.0,
+                   structure=None):
     """Eq. (6) on agent-stacked params (leading axis K). mix: (K, K) σ or a
     :class:`repro.core.topology.Topology` (uniform paper weights).
 
@@ -241,7 +242,16 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
     (:mod:`repro.kernels.quant_consensus`).
 
     The sparse paths need a CONCRETE mix (numpy / non-traced) — the
-    neighbour structure is extracted at trace time.
+    neighbour structure is extracted at trace time — UNLESS ``structure``
+    is given: a ``(idx, sig)`` pair in :func:`sparse_structure` layout
+    where ``idx`` (K, H) int32 is the CONCRETE full-graph neighbour
+    index table and ``sig`` (K, H) float32 may be TRACED. This is the
+    time-varying-graph hook: per-round survival masks zero (and
+    renormalize) the σ of faded neighbour lanes without rebuilding the
+    gather indices, so sparse plans stay one compiled program across
+    rounds (σ is already a runtime operand of the fused kernels).
+    ``gamma`` is applied to the provided ``sig`` exactly as it would be
+    to the extracted one.
     """
     mix = resolve_mix(mix)
     if impl not in ("xla", "pallas", "auto", "sparse"):
@@ -255,7 +265,7 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
         codec = comms.resolve_codec(codec, error_feedback)
         return _compressed_consensus_step(
             stacked_params, mix, codec, codec_state, key,
-            impl=impl, block_n=block_n, gamma=gamma)
+            impl=impl, block_n=block_n, gamma=gamma, structure=structure)
     if impl == "auto" and auto_path(mix) == "dense":
         impl = "xla"
     if impl == "xla":
@@ -270,8 +280,12 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
 
     use_pallas = impl == "pallas" or (impl in ("auto", "sparse")
                                       and jax.default_backend() == "tpu")
-    idx_np, sig_np = sparse_structure(mix)
-    idx, sig = jnp.asarray(idx_np), jnp.asarray(sig_np)
+    if structure is None:
+        idx_np, sig_np = sparse_structure(mix)
+        idx, sig = jnp.asarray(idx_np), jnp.asarray(sig_np)
+    else:                  # per-round (possibly traced) σ on baked indices
+        idx, sig = (jnp.asarray(structure[0]),
+                    jnp.asarray(structure[1], jnp.float32))
 
     from repro.kernels import ops  # deferred: keeps consensus importable
                                    # without the Pallas toolchain
@@ -296,7 +310,7 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
 
 def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
                                key, *, impl: str, block_n: Optional[int],
-                               gamma: float = 1.0):
+                               gamma: float = 1.0, structure=None):
     """Eq. (6) over codec'd exchanges (see :func:`consensus_step`).
 
     Per leaf: (1) each agent encodes its message m_k = W_k + r_k (r = 0
@@ -306,6 +320,8 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
     next round. Int wires (per-tensor or block-wise scales) take the
     fused Pallas dequant-consensus kernel on the sparse path; other
     codecs decode first and reuse the plain consensus kernel.
+    ``structure``: per-round (idx, possibly-traced sig) override of the
+    sparse neighbour structure (see :func:`consensus_step`).
     """
     from repro import comms
     from repro.kernels import ops
@@ -323,8 +339,12 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
     kw = {} if block_n is None else {"block_n": block_n}
 
     if sparse:
-        idx_np, sig_np = sparse_structure(mix)
-        idx, sig = jnp.asarray(idx_np), gamma * jnp.asarray(sig_np)
+        if structure is None:
+            idx_np, sig_np = sparse_structure(mix)
+            idx, sig = jnp.asarray(idx_np), gamma * jnp.asarray(sig_np)
+        else:
+            idx = jnp.asarray(structure[0])
+            sig = gamma * jnp.asarray(structure[1], jnp.float32)
     else:
         M = jnp.asarray(mix, jnp.float32)
         off = gamma * (M - jnp.diag(jnp.diag(M)))
@@ -703,7 +723,8 @@ def sharded_consensus_step(stacked_params, mix, *, num_blocks: int,
                            codec=None, codec_state=None, key=None,
                            gamma: float = 1.0,
                            error_feedback: bool = True,
-                           block_n: Optional[int] = None):
+                           block_n: Optional[int] = None,
+                           structure=None):
     """Eq. (6) on the SHARDED path: the K-agent population is split into
     ``num_blocks`` contiguous blocks of B = K/num_blocks agents, each
     owned by one mesh position. Per round, every position encodes its own
@@ -718,7 +739,11 @@ def sharded_consensus_step(stacked_params, mix, *, num_blocks: int,
     (identical collective semantics — the CPU test path).
 
     Returns ``(new_stacked_params, new_codec_state)`` like the other
-    compressed paths; the sparse structure needs a CONCRETE mix.
+    compressed paths; the sparse structure needs a CONCRETE mix unless
+    ``structure`` supplies a per-round ``(idx, sig)`` override — ``idx``
+    concrete, ``sig`` possibly traced — in which case faded-neighbour
+    lanes carry σ = 0 and the all_gather/gather indices stay baked (the
+    time-varying-graph contract of :func:`consensus_step`).
     """
     mix = resolve_mix(mix)
     if codec is not None:
@@ -731,9 +756,13 @@ def sharded_consensus_step(stacked_params, mix, *, num_blocks: int,
         raise ValueError(
             f"num_blocks={num_blocks} must divide the population K={K}")
     B = K // num_blocks
-    idx_np, sig_np = sparse_structure(mix)
-    idx = jnp.asarray(idx_np)
-    sig = gamma * jnp.asarray(sig_np)
+    if structure is None:
+        idx_np, sig_np = sparse_structure(mix)
+        idx = jnp.asarray(idx_np)
+        sig = gamma * jnp.asarray(sig_np)
+    else:
+        idx = jnp.asarray(structure[0])
+        sig = gamma * jnp.asarray(structure[1], jnp.float32)
     kernel_impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     kw = {} if block_n is None else {"block_n": block_n}
 

@@ -12,9 +12,9 @@ path wiring.
 
 Plans
 -----
-* ``dense-xla``     — the reference (K, K) matmul per leaf; the only plan
-  that accepts a TRACED per-round mix override (time-varying topologies,
-  :func:`repro.core.topology.dropout`).
+* ``dense-xla``     — the reference (K, K) matmul per leaf; also accepts
+  a TRACED per-round full mix override via ``step(mix=...)`` (the legacy
+  time-varying hook, kept for raw-σ callers).
 * ``sparse-pallas`` — batched-over-agents sparse gather through the fused
   Pallas consensus kernels (the bit-identical jnp oracle off TPU);
   O(K·H·N) instead of O(K²·N).
@@ -37,6 +37,43 @@ is an accounting construct priced by Eq. 11); ``sparse-pallas`` and
 dequant-consensus kernel — int8/int4 lanes with per-tensor OR
 block-wise ``int8:b64`` scales (other codecs decode before the
 gather); ``distributed`` permutes the wire payload for every codec.
+
+Time-varying graphs (:class:`repro.core.topology.GraphProcess`)
+---------------------------------------------------------------
+``ConsensusEngine(topo, graph=GraphProcess.dropout(p, seed))`` resolves
+a time-varying graph process ONCE at construction, making per-round
+link failures a capability of every maskable plan instead of a
+dense-only traced-mix hack. Each round ``t``, :meth:`round_mask` draws
+the (K, K) edge-survival mask in-scan from ``fold_in(PRNGKey(seed), t)``
+(:func:`repro.core.topology.survival_mask` — symmetric graphs fade
+whole undirected pairs, self loops are kept) and :meth:`masked_mixing`
+REBUILDS the σ matrix on the surviving graph with the engine's mixing
+kind, so dropped links reallocate their σ mass (doubly-stochastic kinds
+stay doubly stochastic on every surviving subgraph). Per plan:
+
+* ``dense-xla``     — the masked mix rides the matmul as a traced
+  operand;
+* ``sparse-pallas`` / ``sharded`` — the gather INDICES stay baked from
+  the full base graph; the per-round renormalized σ is gathered into
+  the (K, H) lane table and rides the fused (dequant-)consensus kernels
+  as a traced operand, so faded neighbour lanes simply carry σ = 0
+  (exact no-ops) — one compiled program for every round;
+* ``distributed``   — unsupported (its ppermute schedule is a
+  host-resolved trace-time structure); construction raises.
+
+Masks are bit-identical to the host :func:`repro.core.topology.dropout`
+stream via the shared fold-in convention, which is what lets callers
+bill Eq.-(11) joules post hoc over exactly the rounds used with ZERO
+host-side per-round graph prefetch.
+
+COST NOTE: each masked round draws a (K, K) uniform and rebuilds the
+(K, K) σ in-scan before gathering the (K, H) lane weights — O(K²) work
+and memory per round even on the sparse/sharded plans. That is free at
+the populations the time-varying paths target (the 12-robot case study,
+K ≤ O(10³) sweeps) but re-introduces a quadratic term the sharded plan
+otherwise avoids at K ≫ 10⁴; huge populations should keep static
+graphs, use precomputed ``GraphProcess.schedule`` masks, or wait for
+the per-lane draw convention (ROADMAP).
 
 Multi-round programs: :meth:`ConsensusEngine.scan_rounds` runs R rounds
 inside one ``lax.scan`` with the codec/EF state in the carry — the
@@ -66,11 +103,16 @@ from dataclasses import dataclass
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import consensus
 
 PLAN_KINDS = ("dense-xla", "sparse-pallas", "sharded", "distributed")
+#: plans that accept a per-round survival mask (traced σ operands); the
+#: distributed plan's ppermute schedule is host-resolved at trace time
+#: and cannot re-route around faded links without a retrace.
+MASKABLE_PLANS = ("dense-xla", "sparse-pallas", "sharded")
 
 
 @dataclass(frozen=True)
@@ -108,8 +150,17 @@ class ConsensusEngine:
     num_blocks: block count for the sharded plan (default: mesh axis
                 size, else 1).
     data_sizes / mix_kind / include_self: forwarded to the topology's
-                ``mixing`` (uniform paper weights by default).
+                ``mixing`` (uniform paper weights by default) and reused
+                to REBUILD the per-round mix on surviving subgraphs when
+                a time-varying ``graph`` is attached.
     gamma:      CHOCO consensus step size (damps off-diagonal σ).
+    graph:      a :class:`repro.core.topology.GraphProcess` (or None ⇒
+                static). Non-static processes turn every maskable plan
+                time-varying: each round's edge-survival mask is drawn
+                in-scan from the folded process key and the σ is rebuilt
+                on the surviving graph (see the module docstring). The
+                ``distributed`` plan refuses non-static processes here,
+                at construction.
     """
 
     def __init__(self, topology, *, codec=None, mesh=None,
@@ -117,8 +168,9 @@ class ConsensusEngine:
                  num_blocks: Optional[int] = None, data_sizes=None,
                  mix_kind: str = "paper", include_self: bool = True,
                  gamma: float = 1.0, error_feedback: bool = True,
-                 block_n: Optional[int] = None):
+                 block_n: Optional[int] = None, graph=None):
         from repro import comms   # deferred: core stays import-light
+        from repro.core import topology as topo_lib
         if isinstance(topology, ConsensusEngine):
             raise TypeError("pass a Topology or mix, not an engine "
                             "(use ConsensusEngine.wrap)")
@@ -132,8 +184,44 @@ class ConsensusEngine:
         self.mesh = mesh
         self.gamma = float(gamma)
         self.block_n = block_n
+        self.mix_kind = mix_kind
+        self.include_self = include_self
+        self.data_sizes = (None if data_sizes is None
+                           else np.asarray(data_sizes, np.float32))
+        self.graph = graph if graph is not None else topo_lib.GraphProcess.static()
         self.plan = self._resolve_plan(plan, axis_name, num_blocks)
         self._schedule = None          # distributed ppermute rounds, lazy
+        self._masked_struct = None     # (idx, lane-valid) for masked sig
+        if self.graph.kind != "static":
+            if self.plan.kind not in MASKABLE_PLANS:
+                raise ValueError(
+                    f"time-varying graphs ({self.graph!r}) are not "
+                    f"supported on the {self.plan.kind!r} plan — its "
+                    "ppermute schedule is resolved on the host at trace "
+                    "time; use one of the maskable plans "
+                    f"{MASKABLE_PLANS} (or prefetch concrete Topology "
+                    "objects via repro.core.topology.dropout)")
+            if self.topology is None:
+                # a raw σ matrix's generating rule is unknown, so the
+                # per-round rebuild would silently REPLACE the caller's
+                # weights with mixing_weights(kind) on the survivor —
+                # refuse rather than diverge
+                raise ValueError(
+                    "time-varying graphs need an engine built from a "
+                    "Topology: each round's σ is REBUILT from the "
+                    "surviving graph with the engine's mixing "
+                    "kind/data_sizes, which cannot faithfully "
+                    "renormalize an arbitrary raw mix matrix")
+            # the base adjacency the survival masks apply to
+            self._adjacency = np.asarray(self.topology.adjacency, bool)
+            self._symmetric = bool(
+                (self._adjacency == self._adjacency.T).all())
+            if self.graph.kind == "dropout":
+                self._graph_key = topo_lib.survival_key(self.graph.seed)
+            elif self.graph.masks.shape[1:] != (self.K, self.K):
+                raise ValueError(
+                    f"schedule masks are {self.graph.masks.shape[1:]}, "
+                    f"population is K={self.K}")
 
     # -- plan selection -----------------------------------------------------
     def _resolve_plan(self, plan: str, axis_name: str,
@@ -174,44 +262,126 @@ class ConsensusEngine:
             return None
         return self.codec.init_state(stacked_params)
 
+    # -- time-varying graphs ------------------------------------------------
+    def round_mask(self, t):
+        """(K, K) bool edge-survival mask of round ``t`` under this
+        engine's :class:`~repro.core.topology.GraphProcess` (None for a
+        static graph). ``t`` may be TRACED — this is what the scanned
+        drivers call per round INSIDE ``lax.scan``, and by the shared
+        fold-in convention the result is bit-identical to round ``t`` of
+        the host :func:`repro.core.topology.dropout` stream."""
+        from repro.core import topology as topo_lib
+        if self.graph.kind == "static":
+            return None
+        if self.graph.kind == "dropout":
+            return topo_lib.survival_mask(
+                self._adjacency, self.graph.p, self._graph_key, t,
+                symmetric=self._symmetric)
+        masks = jnp.asarray(self.graph.masks)          # schedule
+        return jnp.asarray(self._adjacency) & masks[
+            jnp.asarray(t) % masks.shape[0]]
+
+    def masked_mixing(self, mask):
+        """Rebuild the σ matrix on the SURVIVING graph (possibly traced
+        mask): the engine's mixing kind / data sizes / include_self are
+        re-applied to ``adjacency & mask``, so dropped links reallocate
+        their σ mass exactly as ``Topology.mixing`` would on the
+        host-materialized survivor (bit-identical — same jnp ops)."""
+        sizes = (np.ones(self.K, np.float32) if self.data_sizes is None
+                 else self.data_sizes)
+        return consensus.mixing_weights(
+            sizes, mask, self.mix_kind, include_self=self.include_self)
+
+    def _masked_structure(self, mix_t):
+        """(idx, sig_t) for the sparse/sharded plans: the CONCRETE
+        full-graph lane indices (baked once, lazily) and the per-round σ
+        gathered from the masked mix — faded lanes land at σ = 0, so the
+        fused kernels skip them exactly without rebuilding the gather."""
+        if self._masked_struct is None:
+            # numpy constants: this cache outlives any one trace, so it
+            # must never hold tracer-backed arrays
+            idx_np, _ = consensus.sparse_structure(self.mix)
+            self._masked_struct = (idx_np, np.arange(self.K)[:, None])
+        idx, rows = self._masked_struct
+        # padding lanes index the agent itself; mix_t's diagonal is 0
+        # (self weight is implicit), so they stay exact no-ops
+        return jnp.asarray(idx), jnp.asarray(mix_t, jnp.float32)[rows, idx]
+
     # -- the round ----------------------------------------------------------
-    def step(self, stacked_params, codec_state=None, key=None, *, mix=None):
+    def step(self, stacked_params, codec_state=None, key=None, *, mix=None,
+             t=None, mask=None):
         """One Eq.-(6) consensus round on agent-stacked params (leading
         axis K). Returns ``(new_stacked_params, new_codec_state)`` for
         EVERY plan and codec (state is None for codec-free rounds).
 
         ``key`` enables stochastic rounding for quantizing codecs.
-        ``mix`` overrides the engine's σ matrix for THIS round (may be
-        traced — time-varying topologies under jit); only the dense-xla
-        plan supports it, every other plan bakes the neighbour structure
-        in at trace time.
+
+        Time-varying graphs: ``t`` (round index, may be traced) draws
+        the round's survival mask from the engine's graph process —
+        the preferred entry point for the scanned drivers; ``mask``
+        passes an explicit (K, K) bool survival mask instead (e.g. a
+        host-prefetched :func:`topology.dropout` round). Both rebuild σ
+        on the surviving graph via :meth:`masked_mixing` and run it as
+        a traced operand — dense-xla takes the full masked mix, the
+        sparse-pallas/sharded gathers take the per-lane σ with faded
+        lanes zeroed (indices stay baked). The distributed plan raises.
+
+        ``mix`` overrides the engine's σ matrix wholesale for THIS round
+        (may be traced); only the dense-xla plan supports it, every
+        other plan bakes the neighbour structure in at trace time.
         """
         kind = self.plan.kind
         if mix is not None and kind != "dense-xla":
             raise ValueError(
                 f"per-round mix overrides need the dense-xla plan, not "
-                f"{kind!r} (sparse structure is fixed at trace time)")
+                f"{kind!r} (sparse structure is fixed at trace time; "
+                "time-varying graphs go through mask=/t= instead)")
+        if mask is None and t is not None:
+            mask = self.round_mask(t)
+        if mask is None and mix is None and self.graph.kind != "static":
+            # silently mixing on the full static graph would measure t_i
+            # (and bill Eq.-11) on a never-fading network — fail loudly
+            raise ValueError(
+                f"this engine carries a time-varying {self.graph!r}: "
+                "step() needs the round index (t=) or an explicit "
+                "survival mask (mask=); use scan_rounds for whole "
+                "round loops")
+        structure = None
+        if mask is not None:
+            if mix is not None:
+                raise ValueError("pass mix= or mask=/t=, not both")
+            if kind not in MASKABLE_PLANS:
+                raise ValueError(
+                    f"per-round survival masks are not supported on the "
+                    f"{kind!r} plan (host-resolved ppermute schedule); "
+                    f"use one of {MASKABLE_PLANS}")
+            mix_t = self.masked_mixing(mask)
+            if kind == "dense-xla":
+                mix = mix_t
+            else:
+                structure = self._masked_structure(mix_t)
         mix_ = self.mix if mix is None else mix
         if kind == "dense-xla" or kind == "sparse-pallas":
             impl = "xla" if kind == "dense-xla" else "sparse"
             if self.codec is None:
                 return consensus.consensus_step(
                     stacked_params, mix_, impl=impl,
-                    block_n=self.block_n), None
+                    block_n=self.block_n, structure=structure), None
             # error_feedback=False: self.codec is ALREADY resolved (the
             # EF default was applied at engine construction) — the step
             # functions must not re-wrap it
             return consensus.consensus_step(
                 stacked_params, mix_, impl=impl, block_n=self.block_n,
                 codec=self.codec, codec_state=codec_state, key=key,
-                gamma=self.gamma, error_feedback=False)
+                gamma=self.gamma, error_feedback=False,
+                structure=structure)
         if kind == "sharded":
             return consensus.sharded_consensus_step(
                 stacked_params, mix_, num_blocks=self.plan.num_blocks,
                 axis_name=self.plan.axis_name, mesh=self.mesh,
                 codec=self.codec, codec_state=codec_state, key=key,
                 gamma=self.gamma, block_n=self.block_n,
-                error_feedback=False)
+                error_feedback=False, structure=structure)
         if self._schedule is None:
             self._schedule = consensus.permutation_schedule(
                 self.mix, self.gamma)
@@ -222,7 +392,7 @@ class ConsensusEngine:
             error_feedback=False)
 
     def scan_rounds(self, stacked_params, codec_state=None, keys=None, *,
-                    rounds: Optional[int] = None):
+                    rounds: Optional[int] = None, t0=0):
         """Run many Eq.-(6) rounds inside ONE ``jax.lax.scan`` program.
 
         ``keys``: optional (R, …) stacked PRNG keys, one per round
@@ -239,6 +409,14 @@ class ConsensusEngine:
         chunked drivers (:func:`repro.core.federated.run_fl_until_scan`,
         :func:`repro.core.maml.maml_train_scan`) and the ``rounds_loop``
         benchmark build on.
+
+        Time-varying graphs run device-resident: with a non-static
+        :class:`~repro.core.topology.GraphProcess` the rounds are
+        numbered ``t0, t0+1, …`` (``t0`` may be traced — chunked callers
+        pass each chunk's global offset) and every round's survival mask
+        is generated IN-SCAN from the folded process key; no host-side
+        per-round graph prefetch, and the masks are bit-identical to the
+        host ``topology.dropout`` stream.
         """
         if keys is None and rounds is None:
             raise ValueError("pass per-round keys or rounds=")
@@ -248,18 +426,23 @@ class ConsensusEngine:
             # hoist the host-computed schedule out of the scan body
             self._schedule = consensus.permutation_schedule(
                 self.mix, self.gamma)
+        R = (int(rounds) if keys is None
+             else jax.tree.leaves(keys)[0].shape[0])
+        ts = (t0 + jnp.arange(R, dtype=jnp.int32)
+              if self.graph.kind != "static" else None)
 
-        def body(carry, k):
-            p, st = self.step(carry[0], carry[1], k)
+        def body(carry, xs):
+            t, k = xs
+            p, st = self.step(carry[0], carry[1], k, t=t)
             return (p, st), None
 
-        if keys is None:
+        if ts is None and keys is None:
             (p, st), _ = jax.lax.scan(
-                lambda c, _x: body(c, None), (stacked_params, codec_state),
-                None, length=int(rounds))
+                lambda c, _x: body(c, (None, None)),
+                (stacked_params, codec_state), None, length=R)
         else:
             (p, st), _ = jax.lax.scan(
-                body, (stacked_params, codec_state), keys)
+                body, (stacked_params, codec_state), (ts, keys))
         return p, st
 
     # -- Eq.-(11) pricing ---------------------------------------------------
@@ -288,5 +471,6 @@ class ConsensusEngine:
 
     def __repr__(self):
         codec = self.codec.name if self.codec is not None else None
+        graph = "" if self.graph.kind == "static" else f", graph={self.graph!r}"
         return (f"ConsensusEngine(K={self.K}, plan={self.plan.kind!r}, "
-                f"codec={codec!r}, blocks={self.plan.num_blocks})")
+                f"codec={codec!r}, blocks={self.plan.num_blocks}{graph})")

@@ -32,7 +32,8 @@ def local_steps(loss_fn, params, batches, lr: float):
 
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
                            engine, lr: float,
-                           codec=None, codec_state=None, key=None):
+                           codec=None, codec_state=None, key=None,
+                           t=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step through the engine.
 
@@ -45,13 +46,18 @@ def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
     With a codec the return value is ``(params, new_codec_state)`` and
     the round's sidelink bytes are the codec's wire size (Eq. 11);
     without one it returns just the params as before. ``key`` enables
-    stochastic rounding.
+    stochastic rounding. ``t`` (round index, may be traced) drives
+    engines with a time-varying
+    :class:`~repro.core.topology.GraphProcess`: the round mixes over
+    round ``t``'s surviving links (ignored by static engines).
     """
     engine = ConsensusEngine.wrap(engine, codec=codec)
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
-    params, state = engine.step(new_params, codec_state, key)
+    # static engines ignore t (round_mask is None), so the traced
+    # program is unchanged for them
+    params, state = engine.step(new_params, codec_state, key, t=t)
     if engine.codec is None:
         return params
     return params, state
@@ -104,56 +110,95 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
     Returns ``run_chunk(params, codec_state, key, reached, ts) ->
     ((params, codec_state, key, reached), (hit, evaled, metric))`` with
     one per-round row per ``ts`` entry.
+
+    Programs are MEMOIZED through :func:`repro.core.scanloop.cached_program`
+    on (loss_fn, sampler, target_fn — by identity; the engine — whose
+    identity covers plan kind, codec, graph process, and concrete mix;
+    the baked lr/max_rounds/eval_every scalars; and the carry's leaf
+    shapes/dtypes), so Monte-Carlo sweeps that re-enter the drivers with
+    an identical configuration reuse ONE jit object instead of
+    re-tracing per call — the retrace counter
+    ``scanloop.TRACE_COUNTS["fl_chunk"]`` only moves on genuine cache
+    misses. Time-varying engines generate round ``t``'s survival mask
+    in-scan (``decentralized_fl_round(t=...)``), so dropout sweeps stay
+    device-resident too. Programs whose sampler/target FAILED the traced
+    contract (the ``jax.pure_callback`` fallback) are NEVER cached: the
+    probe consumes elements from stateful host samplers, so a cache hit
+    that skipped it would shift the stream between the first and repeat
+    invocations — impure round functions keep the per-call probe (and
+    re-trace) the legacy drivers always had.
     """
+    cache_key = ("fl_chunk", loss_fn, sample_batches, target_fn, engine,
+                 float(lr), int(max_rounds), int(eval_every),
+                 scanloop.tree_signature(stacked_params))
+    cached = scanloop.get_cached_program(cache_key)
+    if cached is not None:
+        return cached                  # hit: skip the probes entirely
     has_codec = engine.codec is not None
-    sampler, _ = scanloop.traceable(sample_batches, key, jnp.int32(0),
-                                    name="sample_batches")
-    tfn, _ = scanloop.traceable(target_fn, stacked_params, name="target_fn")
+    sampler, sampler_traced = scanloop.traceable(
+        sample_batches, key, jnp.int32(0), name="sample_batches")
+    tfn, target_traced = scanloop.traceable(target_fn, stacked_params,
+                                            name="target_fn")
     _, metric_sds = jax.eval_shape(tfn, stacked_params)
 
-    def body(carry, t):
-        def live(c):
-            p, st, k, _ = c
-            k, sk = jax.random.split(k)
-            batches = sampler(sk, t)
-            if has_codec:
-                k, ck = jax.random.split(k)
-                p, st = decentralized_fl_round(
-                    loss_fn, p, batches, engine, lr, codec_state=st, key=ck)
-            else:
-                p = decentralized_fl_round(loss_fn, p, batches, engine, lr)
-            if eval_every == 1:
-                r, metric = tfn(p)
-                hit = jnp.asarray(r, bool)
-                do_eval = jnp.asarray(True)
-            else:
-                # off-grid rounds skip the evaluation entirely (it may
-                # be an expensive rollout or a pure_callback host trip)
-                do_eval = (t + 1) % eval_every == 0
+    def build():
 
-                def evaluate(p_):
-                    r_, m_ = tfn(p_)
-                    return (jnp.asarray(r_, bool),
-                            jnp.asarray(m_, metric_sds.dtype))
+        def body(carry, t):
+            def live(c):
+                p, st, k, _ = c
+                k, sk = jax.random.split(k)
+                batches = sampler(sk, t)
+                if has_codec:
+                    k, ck = jax.random.split(k)
+                    p, st = decentralized_fl_round(
+                        loss_fn, p, batches, engine, lr, codec_state=st,
+                        key=ck, t=t)
+                else:
+                    p = decentralized_fl_round(loss_fn, p, batches, engine,
+                                               lr, t=t)
+                if eval_every == 1:
+                    r, metric = tfn(p)
+                    hit = jnp.asarray(r, bool)
+                    do_eval = jnp.asarray(True)
+                else:
+                    # off-grid rounds skip the evaluation entirely (it may
+                    # be an expensive rollout or a pure_callback host trip)
+                    do_eval = (t + 1) % eval_every == 0
 
-                def skip(p_):
-                    return (jnp.asarray(False),
-                            jnp.zeros(metric_sds.shape, metric_sds.dtype))
+                    def evaluate(p_):
+                        r_, m_ = tfn(p_)
+                        return (jnp.asarray(r_, bool),
+                                jnp.asarray(m_, metric_sds.dtype))
 
-                hit, metric = jax.lax.cond(do_eval, evaluate, skip, p)
-            return ((p, st, k, hit),
-                    (hit, do_eval, jnp.asarray(metric, metric_sds.dtype)))
+                    def skip(p_):
+                        return (jnp.asarray(False),
+                                jnp.zeros(metric_sds.shape,
+                                          metric_sds.dtype))
 
-        def frozen(c):
-            return c, (c[3], jnp.asarray(False),
-                       jnp.zeros(metric_sds.shape, metric_sds.dtype))
+                    hit, metric = jax.lax.cond(do_eval, evaluate, skip, p)
+                return ((p, st, k, hit),
+                        (hit, do_eval,
+                         jnp.asarray(metric, metric_sds.dtype)))
 
-        pred = jnp.logical_and(jnp.logical_not(carry[3]), t < max_rounds)
-        return jax.lax.cond(pred, live, frozen, carry)
+            def frozen(c):
+                return c, (c[3], jnp.asarray(False),
+                           jnp.zeros(metric_sds.shape, metric_sds.dtype))
 
-    return scanloop.donating_jit(
-        lambda p, st, k, r, ts: jax.lax.scan(body, (p, st, k, r), ts),
-        donate_argnums=(0, 1))
+            pred = jnp.logical_and(jnp.logical_not(carry[3]),
+                                   t < max_rounds)
+            return jax.lax.cond(pred, live, frozen, carry)
+
+        def run_chunk(p, st, k, r, ts):
+            # executes at TRACE time only: the counter moves exactly when
+            # jax re-traces this chunk program (the tier-1 guard's signal)
+            scanloop.TRACE_COUNTS["fl_chunk"] += 1
+            return jax.lax.scan(body, (p, st, k, r), ts)
+
+        return scanloop.donating_jit(run_chunk, donate_argnums=(0, 1))
+
+    if not (sampler_traced and target_traced):
+        return build()                 # impure round fns: never cached
+    return scanloop.cached_program(cache_key, build)
 
 
 def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,

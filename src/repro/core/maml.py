@@ -118,23 +118,47 @@ def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
     :func:`maml_train` and :func:`maml_train_scan`. The params buffer
     is donated on backends with donation support (scanloop's donation
     invariant: don't reuse a pytree after passing it in).
+
+    Programs are memoized through
+    :func:`repro.core.scanloop.cached_program` on (loss_fn,
+    sample_tasks — by identity — and the baked hyper-parameters), so
+    Monte-Carlo sweeps re-entering the drivers with one configuration
+    re-trace only when the meta-params' shapes change (jit's own
+    per-shape cache); ``scanloop.TRACE_COUNTS["maml_chunk"]`` observes
+    the retraces. Samplers that failed the traced contract (the
+    ``pure_callback`` fallback) are never cached — the probe consumes
+    elements from stateful host samplers, and skipping it on a cache
+    hit would shift their stream between invocations.
     """
-    step = functools.partial(
-        maml_meta_step, loss_fn, inner_lr=inner_lr, outer_lr=outer_lr,
-        inner_steps=inner_steps, first_order=first_order)
-    sampler, _ = scanloop.traceable(sample_tasks, key, jnp.int32(0),
-                                    name="sample_tasks")
+    cache_key = ("maml_chunk", loss_fn, sample_tasks, float(inner_lr),
+                 float(outer_lr), int(inner_steps), bool(first_order))
+    cached = scanloop.get_cached_program(cache_key)
+    if cached is not None:
+        return cached                  # hit: skip the probe entirely
+    sampler, sampler_traced = scanloop.traceable(
+        sample_tasks, key, jnp.int32(0), name="sample_tasks")
 
-    def body(carry, t):
-        p, k = carry
-        k, sk = jax.random.split(k)
-        support, query = sampler(sk, t)
-        p, m = step(p, support, query)
-        return (p, k), m
+    def build():
+        step = functools.partial(
+            maml_meta_step, loss_fn, inner_lr=inner_lr, outer_lr=outer_lr,
+            inner_steps=inner_steps, first_order=first_order)
 
-    return scanloop.donating_jit(
-        lambda p, k, ts: jax.lax.scan(body, (p, k), ts),
-        donate_argnums=(0,))
+        def body(carry, t):
+            p, k = carry
+            k, sk = jax.random.split(k)
+            support, query = sampler(sk, t)
+            p, m = step(p, support, query)
+            return (p, k), m
+
+        def run_chunk(p, k, ts):
+            scanloop.TRACE_COUNTS["maml_chunk"] += 1   # trace-time only
+            return jax.lax.scan(body, (p, k), ts)
+
+        return scanloop.donating_jit(run_chunk, donate_argnums=(0,))
+
+    if not sampler_traced:
+        return build()                 # impure sampler: never cached
+    return scanloop.cached_program(cache_key, build)
 
 
 def maml_train(loss_fn: Callable, meta_params, sample_tasks: Callable,
@@ -159,7 +183,12 @@ def maml_train(loss_fn: Callable, meta_params, sample_tasks: Callable,
             meta_params, key, jnp.arange(t, t + 1, dtype=jnp.int32))
         history.append(float(ms["meta_loss"][0]))
         if callback is not None:
-            callback(t, meta_params, jax.tree.map(lambda x: x[0], ms))
+            # own(): the carry is donated to the NEXT round's dispatch on
+            # donating backends — a callback that retains the params
+            # (snapshots, checkpoints) must not see buffers that round
+            # t+1 will invalidate
+            callback(t, scanloop.own(meta_params),
+                     jax.tree.map(lambda x: x[0], ms))
     return meta_params, history
 
 

@@ -30,7 +30,12 @@ Graph families: ring, full, torus, small-world (Watts–Strogatz), star
 cluster-of-clusters. ``make(name, K)`` is the uniform constructor used by
 the scale benchmark. :func:`dropout` derives time-varying per-round
 link-failure sequences from any of them (fading / mobility), priced only
-on the messages actually sent.
+on the messages actually sent; :class:`GraphProcess` is the first-class
+description of such a process (static | dropout(p, seed) | schedule)
+that :class:`repro.core.engine.ConsensusEngine` resolves at construction
+so the scanned drivers can regenerate each round's surviving graph
+IN-SCAN from a folded key (:func:`survival_mask` — bit-identical to the
+host :func:`dropout` stream by the shared fold-in convention).
 """
 from __future__ import annotations
 
@@ -38,6 +43,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import consensus, energy
@@ -320,19 +327,119 @@ def from_cluster_network(net) -> Topology:
 # -- time-varying topologies -------------------------------------------------
 
 
+def survival_key(seed: int):
+    """The PRNG key a dropout :class:`GraphProcess` with this seed folds
+    its per-round indices into (the shared fold-in convention)."""
+    return jax.random.PRNGKey(seed)
+
+
+def survival_mask(adjacency, p: float, key, t, symmetric: Optional[bool]
+                  = None):
+    """(K, K) bool edge-survival mask of round ``t`` — THE shared fold-in
+    convention: ``u = uniform(fold_in(key, t), (K, K)); keep = u >= p``,
+    with symmetric graphs keeping whole undirected PAIRS (one draw per
+    upper-triangle entry, mirrored — a faded channel kills both
+    directions) and asymmetric edges (star's UL/DL, hierarchical
+    backhaul) dropping per directed edge.
+
+    ``t`` may be a TRACED int32 (``jax.random.fold_in`` accepts traced
+    data), which is what lets the scanned drivers generate each round's
+    surviving graph INSIDE a ``lax.scan`` body; jax's counter-based PRNG
+    is bit-deterministic across eager and jitted execution, so the
+    host-side :func:`dropout` stream (which calls this same function
+    concretely) and the in-scan masks of
+    :meth:`repro.core.engine.ConsensusEngine.round_mask` agree bit for
+    bit — the bit-parity invariant the engine's time-varying plans and
+    the post-hoc Eq.-(11) billing both rely on.
+    """
+    A = np.asarray(adjacency, bool)
+    sym = bool((A == A.T).all()) if symmetric is None else bool(symmetric)
+    keep = jax.random.uniform(jax.random.fold_in(key, t), A.shape) >= p
+    if sym:                              # one draw per undirected pair
+        up = jnp.triu(keep, 1)
+        keep = up | up.T
+    return jnp.asarray(A) & keep
+
+
+@dataclass(frozen=True)
+class GraphProcess:
+    """A time-varying communication-graph process — how the engine's σ
+    evolves round over round. Resolved ONCE at
+    :class:`repro.core.engine.ConsensusEngine` construction:
+
+    * ``static()``            — the graph never changes (the default);
+    * ``dropout(p, seed)``    — every round, each link of the engine's
+      base graph is independently DOWN with probability ``p`` (fading /
+      contention / mobility), masks drawn by :func:`survival_mask` from
+      ``fold_in(PRNGKey(seed), round)`` — cheap seeded samples the
+      scanned drivers generate in-scan, bit-identical to the host
+      :func:`dropout` stream;
+    * ``schedule(masks)``     — an explicit (R, K, K) bool stack of keep
+      masks; round ``t`` applies ``masks[t % R]`` (MATCHA-style
+      randomized link schedules, TDMA frames).
+
+    The per-round mix is REBUILT from the surviving graph (self loops
+    kept, σ mass of dropped links reallocated by the engine's mixing
+    kind — doubly-stochastic kinds stay doubly stochastic on every
+    surviving subgraph), never silently zeroed.
+    """
+
+    kind: str = "static"                  # static | dropout | schedule
+    p: float = 0.0
+    seed: int = 0
+    masks: Optional[np.ndarray] = None    # (R, K, K) for "schedule"
+
+    def __post_init__(self):
+        if self.kind not in ("static", "dropout", "schedule"):
+            raise ValueError(f"unknown graph process {self.kind!r}")
+        if self.kind == "dropout" and not 0 <= self.p < 1:
+            raise ValueError(
+                f"dropout probability must be in [0, 1), got {self.p}")
+        if self.kind == "schedule":
+            m = np.asarray(self.masks, bool)
+            if m.ndim != 3 or m.shape[1] != m.shape[2] or not m.shape[0]:
+                raise ValueError(
+                    f"schedule masks must be (R, K, K), got {m.shape}")
+            object.__setattr__(self, "masks", m)
+
+    @staticmethod
+    def static() -> "GraphProcess":
+        return GraphProcess("static")
+
+    @staticmethod
+    def dropout(p: float, seed: int = 0) -> "GraphProcess":
+        return GraphProcess("dropout", p=float(p), seed=int(seed))
+
+    @staticmethod
+    def schedule(masks) -> "GraphProcess":
+        return GraphProcess("schedule", masks=masks)
+
+    def __repr__(self):
+        if self.kind == "dropout":
+            return f"GraphProcess.dropout(p={self.p}, seed={self.seed})"
+        if self.kind == "schedule":
+            return f"GraphProcess.schedule(R={self.masks.shape[0]})"
+        return "GraphProcess.static()"
+
+
 def dropout(topo: Topology, p: float, seed: int = 0,
             rounds: Optional[int] = None):
     """Per-round link-dropout sequence: each round, every link of ``topo``
     is independently DOWN with probability ``p`` (fading / contention /
     mobility — the paper's t_i is measured on exactly these rounds).
 
-    Symmetric graphs drop whole undirected PAIRS (a faded channel kills
-    both directions); asymmetric edges (star's UL/DL, hierarchical
-    backhaul) drop per directed edge. Surviving links keep their class
-    and any per-edge efficiency, so Eq.-(11) pricing of a faded round
-    only counts messages actually sent. Mixing weights must be rebuilt
-    from each round's surviving graph (``t.mixing(...)``) — dropping a
-    link reallocates its σ mass, it does not silently zero it.
+    Round ``r``'s keep mask is :func:`survival_mask` at
+    ``fold_in(PRNGKey(seed), r)`` — the SAME fold-in convention a
+    ``GraphProcess.dropout(p, seed)`` engine uses to generate masks
+    in-scan, so this host-materialized stream and the device-resident
+    one are bit-identical (which is how post-hoc Eq.-(11) billing prices
+    exactly the links the scanned rounds actually used, with zero
+    per-round host prefetch during the loop). Symmetric graphs drop
+    whole undirected PAIRS; asymmetric edges drop per directed edge.
+    Surviving links keep their class and any per-edge efficiency, and
+    mixing weights must be rebuilt from each round's surviving graph
+    (``t.mixing(...)``) — dropping a link reallocates its σ mass, it
+    does not silently zero it.
 
     With ``rounds`` returns a list of ``rounds`` Topologies; without, an
     infinite generator. Deterministic in ``seed``.
@@ -341,15 +448,12 @@ def dropout(topo: Topology, p: float, seed: int = 0,
         raise ValueError(f"dropout probability must be in [0, 1), got {p}")
 
     def _rounds():
-        rng = np.random.default_rng(seed)
+        key = survival_key(seed)
         sym = topo.is_symmetric
         r = 0
         while True:
-            keep = rng.random(topo.adjacency.shape) >= p
-            if sym:                      # one draw per undirected pair
-                up = np.triu(keep, 1)
-                keep = up | up.T
-            mask = topo.adjacency & keep
+            mask = np.asarray(survival_mask(topo.adjacency, p, key, r,
+                                            symmetric=sym))
             eff = (None if topo.edge_efficiency is None
                    else np.where(mask, topo.edge_efficiency, 0.0))
             yield Topology(

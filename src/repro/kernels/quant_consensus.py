@@ -21,6 +21,15 @@ W_k): with a doubly-stochastic σ this keeps the population mean exact
 under compression (the CHOCO-gossip trick), and it is what the
 error-feedback wrapper assumes.
 
+The σ weights are a RUNTIME operand (an (H,) f32 tile streamed per grid
+step), not trace-time structure — which is what makes the fused gather
+time-varying-graph capable: the engine's per-round survival masks
+(:class:`repro.core.topology.GraphProcess`) feed a freshly renormalized
+σ each round with faded-neighbour lanes at exactly 0.0, and a zero-σ
+lane contributes ``0 · (nb − xhat) = 0`` to the combine — an exact
+no-op, same as the padding lanes — so one compiled kernel serves every
+surviving subgraph without rebuilding the neighbour indices.
+
 Grid: (N // block_n,). Oracle: ``ref.quant_consensus_update_reference``.
 """
 from __future__ import annotations

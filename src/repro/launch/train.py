@@ -79,7 +79,8 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     consensus_every: int = 1, seed: int = 0,
                     energy_params=None, consensus_dtype=None,
                     consensus_plan: str = "auto", codec=None, mesh=None,
-                    chunk: int = 1):
+                    chunk: int = 1, dropout_p: float = 0.0,
+                    dropout_seed: int = 0):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
@@ -99,7 +100,12 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     (loss history synced per chunk, bit-identical to ``chunk=1`` — the
     per-round host loop); the chunk program donates the stacked params +
     EF-residual buffers where the backend supports donation, so the
-    agent population updates in place.
+    agent population updates in place. ``dropout_p > 0`` attaches a
+    :class:`repro.core.topology.GraphProcess` to the engine: every FL
+    round mixes over that round's SURVIVING sidelinks, with the masks
+    generated in-scan from the folded ``dropout_seed`` key (any maskable
+    plan; the modeled Eq.-(11) estimate still prices the full graph —
+    an upper bound under fading).
     """
     assert agents % tasks == 0
     per = agents // tasks
@@ -113,8 +119,10 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         codec = (comms.select_codec(topo, ep) if codec == "auto"
                  else comms.resolve_codec(codec))
         consensus_dtype = None        # the codec defines the wire format
+    graph = (topo_lib.GraphProcess.dropout(dropout_p, seed=dropout_seed)
+             if dropout_p > 0 else None)
     engine = ConsensusEngine(topo, codec=codec, mesh=mesh,
-                             plan=consensus_plan)
+                             plan=consensus_plan, graph=graph)
     codec = engine.codec
 
     model = get_model(cfg)
@@ -139,7 +147,7 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         p, _ = jax.lax.scan(one, p, b)
         return p
 
-    def fl_round(stacked, codec_state, key):
+    def fl_round(stacked, codec_state, key, t):
         # same split as the pre-codec trainer — codec=None runs keep
         # their exact RNG stream (reproducible loss curves); the codec
         # rounding key is folded out of band
@@ -155,14 +163,15 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         new = jax.vmap(local)(stacked, batches)
         if codec is not None:
             new, codec_state = engine.step(
-                new, codec_state, jax.random.fold_in(key, agents + 1))
+                new, codec_state, jax.random.fold_in(key, agents + 1),
+                t=t)
         elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
-            mixed, _ = engine.step(cast)
+            mixed, _ = engine.step(cast, t=t)
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
-            new, _ = engine.step(new)
+            new, _ = engine.step(new, t=t)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
@@ -173,10 +182,10 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     # stacked params + EF residuals donated where supported)
     from repro.core import scanloop
 
-    def fl_body(carry, _t):
+    def fl_body(carry, t):
         stacked, codec_state, key = carry
         key, sk = jax.random.split(key)
-        stacked, codec_state, l = fl_round(stacked, codec_state, sk)
+        stacked, codec_state, l = fl_round(stacked, codec_state, sk, t)
         return (stacked, codec_state, key), l
 
     fl_chunk = scanloop.donating_jit(
@@ -250,6 +259,12 @@ def main():
                     help="FL rounds per compiled scan program (1 = "
                          "per-round host loop; larger chunks sync once "
                          "per chunk, bit-identical results)")
+    ap.add_argument("--dropout-p", type=float, default=0.0,
+                    help="per-round sidelink failure probability: each "
+                         "FL round mixes over that round's surviving "
+                         "links, masks generated in-scan "
+                         "(repro.core.topology.GraphProcess)")
+    ap.add_argument("--dropout-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -265,7 +280,8 @@ def main():
             lr=args.lr,
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
             consensus_plan=args.consensus_plan, codec=args.codec,
-            chunk=args.chunk)
+            chunk=args.chunk, dropout_p=args.dropout_p,
+            dropout_seed=args.dropout_seed)
 
 
 if __name__ == "__main__":

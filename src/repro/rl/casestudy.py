@@ -123,18 +123,29 @@ class CaseStudy:
     #: Fig.-3 energy comparison reruns at any compression level
     codec: object = None
     #: per-round link-failure probability (fading / contention — the
-    #: paper's t_i is then MEASURED under a time-varying graph from
-    #: :func:`repro.core.topology.dropout`, and the Eq.-(11) comm term
-    #: is accumulated only over messages actually sent)
+    #: paper's t_i is then MEASURED under a time-varying graph: each
+    #: cluster engine carries a ``GraphProcess.dropout`` whose per-round
+    #: survival masks are generated IN-SCAN, and the Eq.-(11) comm term
+    #: is billed post hoc — over exactly the rounds used — by replaying
+    #: the bit-identical host :func:`repro.core.topology.dropout` stream)
     dropout_p: float = 0.0
     dropout_seed: int = 0
+    #: consensus execution plan for the per-cluster Eq.-(6) engine:
+    #: "auto" rides the engine's normal selection (the 2-robot clusters
+    #: sit far below the sparse-gather floor, so auto keeps them on
+    #: dense-xla), or force any maskable plan ("dense-xla",
+    #: "sparse-pallas", "sharded") — all of them support dropout_p > 0
+    #: via in-scan masks; "distributed" is rejected with dropout_p > 0
+    #: (host-resolved ppermute schedule).
+    plan: str = "auto"
     #: protocol rounds per compiled program: both stages run inside
     #: chunked ``lax.scan`` programs, so the host syncs (the per-round
     #: reached flags / meta losses) once per CHUNK instead of once per
     #: round — t0 and t_i trajectories are bit-identical to ``chunk=1``
     #: (the per-round host loop), the Monte-Carlo sweeps just stop
-    #: paying O(rounds) dispatches. Dropout rounds prefetch each
-    #: chunk's surviving mixes and ride the scan as a stacked input.
+    #: paying O(rounds) dispatches. Dropout rounds generate each
+    #: round's surviving graph inside the scan from the folded
+    #: process key (zero host-side per-round graph prefetch).
     chunk: int = 8
 
     def __post_init__(self):
@@ -200,17 +211,24 @@ class CaseStudy:
             donate_argnums=(0,))
 
         # ---- jitted FL round per task (Eq. 6 cluster) ---------------------
-        # dense-xla is the one engine plan that accepts a TRACED per-round
-        # mix — which is how the dropout_p > 0 path swaps each round's
-        # surviving graph in without recompiling (2-robot clusters have
-        # only two distinct mixes, but the mix rides as a traced array)
+        # the engine plan is a knob ("auto" rides the normal selection —
+        # the 2-robot cluster sits below the sparse-gather floor, so auto
+        # resolves to dense-xla); with dropout_p > 0 each task gets its
+        # own engine carrying a GraphProcess.dropout seeded at
+        # dropout_seed + task_id, so every maskable plan generates that
+        # round's surviving graph IN-SCAN (bit-identical to the host
+        # topology.dropout stream by the shared fold-in convention)
         C = self.network.devices_per_cluster
-        self.engine = ConsensusEngine(self.cluster_topology,
-                                      codec=self.codec, plan="dense-xla")
-        self._static_mix = jnp.asarray(
-            self.cluster_topology.mixing(kind="paper"))
+        self._engines = {
+            tid: ConsensusEngine(
+                self.cluster_topology, codec=self.codec, plan=self.plan,
+                graph=(topo_lib.GraphProcess.dropout(
+                    self.dropout_p, seed=self.dropout_seed + tid)
+                    if self.dropout_p > 0 else None))
+            for tid in range(gw.NUM_TASKS)}
+        self.engine = self._engines[0]
 
-        def fl_round(task_id, stacked_params, codec_state, key, mix):
+        def fl_round(task_id, stacked_params, codec_state, key, t):
             # split C+1 exactly as pre-codec (codec=None rounds keep
             # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
@@ -226,11 +244,11 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
-            new, codec_state = self.engine.step(
+            new, codec_state = self._engines[task_id].step(
                 new, codec_state,
                 None if self.codec is None
                 else jax.random.fold_in(key, C + 1),
-                mix=mix)
+                t=t)
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
             return new, codec_state, R
@@ -240,19 +258,17 @@ class CaseStudy:
             for tid in range(gw.NUM_TASKS)}
 
         # chunked stage-2 driver: `chunk` FL rounds per compiled scan
-        # program. Per-round mixes ride the scan as a stacked input
-        # (the dropout path prefetches each chunk's surviving graphs),
+        # program. Time-varying rounds derive their survival mask from
+        # the scanned round index t IN-SCAN (no prefetched mix input),
         # a lax.cond freezes params/EF-state/key once the running
         # reward hits the target, and the per-round reached flags sync
         # to the host once per CHUNK — the exact t_i comes back out of
         # the reached mask, bit-identical to the per-round host loop.
-        def fl_body(task_id, limit, carry, xs):
-            t, mix = xs
-
+        def fl_body(task_id, limit, carry, t):
             def live(c):
                 st, cs, k, _ = c
                 k, sk = jax.random.split(k)
-                st, cs, R = fl_round(task_id, st, cs, sk, mix)
+                st, cs, R = fl_round(task_id, st, cs, sk, t)
                 hit = R >= self.r_target
                 return (st, cs, k, hit), (hit, jnp.asarray(True), R)
 
@@ -262,11 +278,10 @@ class CaseStudy:
             pred = jnp.logical_and(jnp.logical_not(carry[3]), t < limit)
             return jax.lax.cond(pred, live, frozen, carry)
 
-        def fl_chunk(task_id, stacked, codec_state, k, reached, ts, mixes,
+        def fl_chunk(task_id, stacked, codec_state, k, reached, ts,
                      limit):
             return jax.lax.scan(functools.partial(fl_body, task_id, limit),
-                                (stacked, codec_state, k, reached),
-                                (ts, mixes))
+                                (stacked, codec_state, k, reached), ts)
 
         self._fl_chunks = {
             tid: scanloop.donating_jit(functools.partial(fl_chunk, tid),
@@ -294,57 +309,56 @@ class CaseStudy:
                    max_rounds: int = 400):
         """Decentralized FL adaptation of one task; measures t_i. With
         ``dropout_p > 0`` every round mixes over that round's SURVIVING
-        links (deterministic in ``dropout_seed`` + task) and the Eq.-(11)
-        comm joules of the adaptation are accumulated per sent message in
-        ``self.last_adapt_comm_joules``.
+        links (deterministic in ``dropout_seed`` + task — the masks are
+        generated INSIDE the compiled scan from the engine's folded
+        graph key, zero host-side per-round prefetch) and the Eq.-(11)
+        comm joules of the adaptation are accumulated per sent message
+        in ``self.last_adapt_comm_joules``.
 
         Runs ``self.chunk`` rounds per compiled program: the per-round
-        reached flags sync once per chunk, the in-scan freeze keeps
-        params/EF-state pinned after the hit, and the comm-joules bill
-        counts exactly the ``rounds_used`` rounds actually executed."""
+        reached flags sync once per chunk and the in-scan freeze keeps
+        params/EF-state pinned after the hit. The comm-joules bill is
+        computed AFTER t_i is known, by replaying the bit-identical
+        host :func:`repro.core.topology.dropout` stream over exactly
+        the ``rounds_used`` rounds actually executed — frozen tail
+        rounds (target hit mid-chunk, or chunk ∤ max_rounds) bill
+        zero."""
         C = self.network.devices_per_cluster
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), init_params)
         codec_state = (self.codec.init_state(stacked)
                        if self.codec is not None and self.codec.stateful
                        else None)
-        topo_seq = (topo_lib.dropout(self.cluster_topology, self.dropout_p,
-                                     seed=self.dropout_seed + task_id)
-                    if self.dropout_p > 0 else None)
-        static_joules = self.cluster_topology.round_comm_joules(
-            self.energy_params, codec=self.codec)
         hist = []
         rounds = max_rounds
-        joules_per_round = []
         reached = jnp.asarray(False)
         step = self._fl_chunks[task_id]
         limit = jnp.int32(max_rounds)
         for start in range(0, max_rounds, self.chunk):
-            # prefetch this chunk's per-round mixes (+ Eq.-11 joules of
-            # the links actually up each round) on the host
-            if topo_seq is None:
-                mixes = jnp.broadcast_to(
-                    self._static_mix[None],
-                    (self.chunk,) + self._static_mix.shape)
-                joules_per_round.extend([static_joules] * self.chunk)
-            else:
-                topos = [next(topo_seq) for _ in range(self.chunk)]
-                mixes = jnp.stack(
-                    [jnp.asarray(t.mixing(kind="paper")) for t in topos])
-                joules_per_round.extend(
-                    t.round_comm_joules(self.energy_params,
-                                        codec=self.codec) for t in topos)
             ts = jnp.arange(start, start + self.chunk, dtype=jnp.int32)
             (stacked, codec_state, key, reached), ys = step(
-                stacked, codec_state, key, reached, ts, mixes, limit)
+                stacked, codec_state, key, reached, ts, limit)
             hits, live_mask, Rs = (np.asarray(y) for y in ys)  # ONE sync
             hist.extend(float(r) for r, v in zip(Rs, live_mask) if v)
             h = scanloop.first_hit(hits)
             if h is not None:
                 rounds = start + h + 1
                 break
-        self.last_adapt_comm_joules = float(
-            np.sum(joules_per_round[:rounds]))
+        # Eq.-(11) bill over EXACTLY the rounds_used executed rounds:
+        # static graphs price rounds × the full graph; dropout runs
+        # replay the host stream (bit-identical to the in-scan masks by
+        # the shared fold-in convention) and price each round's
+        # surviving links only
+        if self.dropout_p > 0:
+            self.last_adapt_comm_joules = float(sum(
+                t.round_comm_joules(self.energy_params, codec=self.codec)
+                for t in topo_lib.dropout(
+                    self.cluster_topology, self.dropout_p,
+                    seed=self.dropout_seed + task_id, rounds=rounds)))
+        else:
+            self.last_adapt_comm_joules = rounds * float(
+                self.cluster_topology.round_comm_joules(
+                    self.energy_params, codec=self.codec))
         return stacked, rounds, hist
 
     def run(self, key, t0: int, *, max_rounds: int = 400) -> ProtocolResult:
@@ -367,10 +381,12 @@ class CaseStudy:
 
 
 def run_case_study(key=None, *, t0: int = 210, max_rounds: int = 400,
-                   codec=None, dropout_p: float = 0.0):
+                   codec=None, dropout_p: float = 0.0,
+                   plan: str = "auto"):
     """One Monte-Carlo run of the full Fig. 3 experiment (optionally with
     compressed sidelink exchange + codec-priced Eq.-(11) energy, and/or
-    p-probability per-round link failures)."""
+    p-probability per-round link failures — on any maskable engine
+    ``plan``, not just dense-xla)."""
     key = key if key is not None else jax.random.PRNGKey(0)
-    return CaseStudy(codec=codec, dropout_p=dropout_p).run(
+    return CaseStudy(codec=codec, dropout_p=dropout_p, plan=plan).run(
         key, t0, max_rounds=max_rounds)

@@ -1,0 +1,369 @@
+"""Time-varying graphs as first-class engine plans: the GraphProcess
+contract (in-scan per-round survival masks on every maskable plan,
+bit-identical to the host-prefetched ``topology.dropout`` stream via the
+shared fold-in convention), the compiled-chunk-program cache (trace-count
+guard), and the CaseStudy regressions (plan knob respected, dropout on
+non-dense plans, Eq.-(11) billed over exactly rounds_used)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federated, maml, scanloop
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine, MASKABLE_PLANS
+
+K = 8
+P, SEED, ROUNDS = 0.3, 5, 32
+
+PLANS = [("dense-xla", {}),
+         ("sparse-pallas", {}),
+         ("sharded", {"num_blocks": 4})]       # the shard_map emulation
+
+
+def _topo():
+    return topo_lib.ring(K)
+
+
+def _gp():
+    return topo_lib.GraphProcess.dropout(P, seed=SEED)
+
+
+def _stacked(key):
+    return {"w": jax.random.normal(key, (K, 6)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (K, 3))}
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# the shared fold-in convention
+# ---------------------------------------------------------------------------
+
+
+def test_survival_mask_bit_matches_host_dropout_stream():
+    """round_mask(t) — traced, as the scanned drivers call it — equals
+    round t of the host topology.dropout stream bit for bit, for every
+    round: the one convention in-scan generation and post-hoc Eq.-(11)
+    billing share."""
+    topo = _topo()
+    eng = ConsensusEngine(topo, graph=_gp())
+    masked = jax.jit(eng.round_mask)
+    for t, rt in enumerate(topo_lib.dropout(topo, P, seed=SEED, rounds=12)):
+        np.testing.assert_array_equal(
+            np.asarray(masked(jnp.int32(t))), rt.adjacency, err_msg=f"t={t}")
+
+
+def test_survival_mask_symmetry_and_p0():
+    topo = _topo()
+    key = topo_lib.survival_key(3)
+    m = np.asarray(topo_lib.survival_mask(topo.adjacency, 0.4, key, 2))
+    assert np.array_equal(m, m.T)              # pairs fade together
+    assert not (m & ~topo.adjacency).any()     # subgraph of the base
+    m0 = np.asarray(topo_lib.survival_mask(topo.adjacency, 0.0, key, 2))
+    np.testing.assert_array_equal(m0, topo.adjacency)   # p=0: identity
+
+
+def test_graph_process_validation_and_schedule():
+    with pytest.raises(ValueError):
+        topo_lib.GraphProcess("weather")
+    with pytest.raises(ValueError):
+        topo_lib.GraphProcess.dropout(1.0)
+    with pytest.raises(ValueError):
+        topo_lib.GraphProcess.schedule(np.ones((4, 4), bool))   # not 3-D
+    topo = _topo()
+    masks = np.stack([np.asarray(rt.adjacency) for rt in
+                      topo_lib.dropout(topo, P, seed=1, rounds=3)])
+    eng = ConsensusEngine(topo, graph=topo_lib.GraphProcess.schedule(masks))
+    for t in (0, 1, 2, 3, 5):                  # wraps modulo R
+        np.testing.assert_array_equal(
+            np.asarray(eng.round_mask(jnp.int32(t))), masks[t % 3])
+    # schedule K must match the engine population
+    with pytest.raises(ValueError):
+        ConsensusEngine(topo_lib.ring(6),
+                        graph=topo_lib.GraphProcess.schedule(masks))
+    # raw-mix engines can't renormalize an unknown sigma rule on the
+    # surviving graph — refuse instead of silently replacing the weights
+    with pytest.raises(ValueError, match="Topology"):
+        ConsensusEngine(np.asarray(topo.mixing()), graph=_gp())
+
+
+# ---------------------------------------------------------------------------
+# the bit-parity matrix: in-scan mask generation vs host-prefetched
+# topology.dropout, {dense-xla, sparse-pallas, sharded-emulated} x
+# {f32, int8:b64} x chunk {1, 7, 32}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", [None, "int8:b64"])
+@pytest.mark.parametrize("plan,plan_kw", PLANS)
+def test_in_scan_masks_match_host_prefetch(plan, plan_kw, codec):
+    """One engine, two drives: (a) the host-prefetch pattern — every
+    round's surviving graph materialized by topology.dropout on the host
+    and fed to the scan as a stacked mask operand — and (b) in-scan
+    generation from the folded process key (scan_rounds), chunked at
+    {1, 7, 32} with per-chunk t0 offsets. Params and EF codec state must
+    agree BIT FOR BIT across all of it."""
+    topo = _topo()
+    eng = ConsensusEngine(topo, codec=codec, plan=plan, graph=_gp(),
+                          **plan_kw)
+    s = _stacked(jax.random.PRNGKey(2))
+    keys = jax.random.split(jax.random.PRNGKey(3), ROUNDS)
+    masks = jnp.stack([jnp.asarray(rt.adjacency) for rt in
+                       topo_lib.dropout(topo, P, seed=SEED, rounds=ROUNDS)])
+
+    # (a) host-prefetched masks ride the scan as operands
+    @jax.jit
+    def run_prefetched(p, st, ks, ms):
+        def body(c, x):
+            return eng.step(c[0], c[1], x[0], mask=x[1]), None
+        return jax.lax.scan(body, (p, st), (ks, ms))[0]
+
+    p_ref, st_ref = run_prefetched(s, eng.init_state(s), keys, masks)
+
+    # (b) in-scan generation, chunked with global round offsets
+    run = jax.jit(lambda p, st, ks, t0: eng.scan_rounds(p, st, ks, t0=t0))
+    for chunk in (1, 7, 32):
+        p, st = s, eng.init_state(s)
+        for t0 in range(0, ROUNDS, chunk):
+            p, st = run(p, st, keys[t0:t0 + chunk], jnp.int32(t0))
+        assert _tree_equal(p, p_ref), f"params chunk={chunk}"
+        if codec is None:
+            assert st is None and st_ref is None
+        else:
+            assert _tree_equal(st, st_ref), f"state chunk={chunk}"
+
+
+def test_masked_mixing_matches_host_survivor_mixing():
+    """masked_mixing(mask) == Topology(survivor).mixing() bit for bit —
+    dropped links reallocate their sigma mass identically on host and
+    device (doubly-stochastic kinds included)."""
+    topo = _topo()
+    for kind in ("paper", "metropolis"):
+        eng = ConsensusEngine(topo, graph=_gp(), mix_kind=kind,
+                              plan="dense-xla")
+        for t, rt in enumerate(topo_lib.dropout(topo, P, seed=SEED,
+                                                rounds=5)):
+            got = jax.jit(lambda m: eng.masked_mixing(m))(
+                jnp.asarray(rt.adjacency))
+            want = rt.mixing(kind=kind)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want),
+                                          err_msg=f"{kind} t={t}")
+
+
+def test_distributed_plan_refuses_time_varying_graphs():
+    """The distributed plan's ppermute schedule is host-resolved at
+    trace time — non-static GraphProcesses must fail LOUDLY at engine
+    construction, and explicit masks at step time."""
+    with pytest.raises(ValueError, match="distributed"):
+        ConsensusEngine(_topo(), plan="distributed", graph=_gp())
+    eng = ConsensusEngine(_topo(), plan="distributed")
+    s = _stacked(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="mask"):
+        eng.step(s, mask=jnp.asarray(_topo().adjacency))
+    assert set(MASKABLE_PLANS) == {"dense-xla", "sparse-pallas", "sharded"}
+
+
+def test_time_varying_step_requires_round_index_or_mask():
+    """A time-varying engine must not silently mix on the full static
+    graph: step() without t=/mask= (or an explicit mix override) fails
+    loudly instead of measuring t_i on a never-fading network."""
+    eng = ConsensusEngine(_topo(), graph=_gp())
+    s = _stacked(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="time-varying"):
+        eng.step(s)
+    eng.step(s, t=jnp.int32(0))                # round index: fine
+    eng.step(s, mask=jnp.asarray(_topo().adjacency))   # explicit mask
+
+
+def test_static_engine_ignores_round_index():
+    """Passing t to a static engine is a no-op (round_mask is None), so
+    shared driver code can always thread the round index through."""
+    eng = ConsensusEngine(_topo())
+    assert eng.round_mask(jnp.int32(3)) is None
+    s = _stacked(jax.random.PRNGKey(1))
+    a, _ = eng.step(s)
+    b, _ = eng.step(s, t=jnp.int32(3))
+    assert _tree_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# scanned FL driver under a time-varying engine
+# ---------------------------------------------------------------------------
+
+
+def _fl_loss(p, b):
+    return jnp.mean((p["w"] - b["tgt"]) ** 2)
+
+
+def _fl_sampler(key, t):
+    return {"tgt": jax.random.normal(key, (K, 3, 1, 6)) * 0.1}
+
+
+def _fl_target(sp):
+    m = jnp.mean(jnp.square(sp["w"]))
+    return m < -1.0, m                         # unreachable
+
+
+def test_fl_scan_with_dropout_engine_matches_host_loop():
+    """run_fl_until_scan == run_fl_until bit for bit when the engine
+    carries a GraphProcess (the dropout masks regenerate per round
+    inside the scan, keyed on the global round index)."""
+    eng = ConsensusEngine(_topo(), plan="sparse-pallas", graph=_gp())
+    s = _stacked(jax.random.PRNGKey(1))
+    kw = dict(target_fn=_fl_target, max_rounds=9,
+              key=jax.random.PRNGKey(7))
+    p_h, t_h, h_h = federated.run_fl_until(
+        _fl_loss, s, _fl_sampler, eng, 0.3, **kw)
+    for chunk in (4, 32):
+        p_s, t_s, h_s = federated.run_fl_until_scan(
+            _fl_loss, s, _fl_sampler, eng, 0.3, chunk=chunk, **kw)
+        assert (t_s, h_s) == (t_h, h_h), f"chunk={chunk}"
+        assert _tree_equal(p_s, p_h), f"chunk={chunk}"
+
+
+# ---------------------------------------------------------------------------
+# the compiled-program cache: trace-count guard (CI tier-1)
+# ---------------------------------------------------------------------------
+
+
+def test_fl_chunk_program_compiles_once_across_repetitions():
+    """>= 3 Monte-Carlo repetitions of run_fl_until_scan with identical
+    (engine, loss, sampler, target, shapes, chunk) must trace the chunk
+    program exactly once — the program cache returns the same jit
+    object and jax's executable cache does the rest."""
+    eng = ConsensusEngine(_topo())
+    s = _stacked(jax.random.PRNGKey(1))
+    kw = dict(target_fn=_fl_target, max_rounds=6, chunk=3)
+    before = scanloop.TRACE_COUNTS["fl_chunk"]
+    for rep in range(3):
+        federated.run_fl_until_scan(
+            _fl_loss, s, _fl_sampler, eng, 0.3,
+            key=jax.random.PRNGKey(rep), **kw)
+    assert scanloop.TRACE_COUNTS["fl_chunk"] - before == 1
+    # a different engine is a different program: exactly one more trace
+    eng2 = ConsensusEngine(_topo(), plan="sparse-pallas", graph=_gp())
+    for rep in range(3):
+        federated.run_fl_until_scan(
+            _fl_loss, s, _fl_sampler, eng2, 0.3,
+            key=jax.random.PRNGKey(rep), **kw)
+    assert scanloop.TRACE_COUNTS["fl_chunk"] - before == 2
+
+
+def test_maml_chunk_program_compiles_once_across_repetitions():
+    def net_loss(p, b):
+        return jnp.mean((jnp.tanh(b["x"] @ p["w1"]) @ p["w2"] - b["y"]) ** 2)
+
+    def sampler(key, t):
+        x = jax.random.normal(key, (4, 16, 2))
+        b = {"x": x, "y": jnp.sin(x[..., :1]) * 0.3}
+        return b, b
+
+    p0 = {"w1": jnp.ones((2, 8)) * 0.1, "w2": jnp.ones((8, 1)) * 0.1}
+    before = scanloop.TRACE_COUNTS["maml_chunk"]
+    for rep in range(3):
+        maml.maml_train_scan(net_loss, p0, sampler, rounds=4, chunk=2,
+                             inner_lr=0.05, outer_lr=0.01,
+                             key=jax.random.PRNGKey(rep))
+    assert scanloop.TRACE_COUNTS["maml_chunk"] - before == 1
+
+
+def test_program_cache_lru_and_signature():
+    sig_a = scanloop.tree_signature({"w": jnp.ones((2, 3))})
+    sig_b = scanloop.tree_signature({"w": jnp.ones((2, 3))})
+    sig_c = scanloop.tree_signature({"w": jnp.ones((4, 3))})
+    assert sig_a == sig_b and hash(sig_a) == hash(sig_b)
+    assert sig_a != sig_c
+    built = []
+
+    def make(i):
+        def build():
+            built.append(i)
+            return ("prog", i)
+        return build
+
+    for i in range(3):
+        scanloop.cached_program(("t", i, sig_a), make(i))
+    assert scanloop.cached_program(("t", 0, sig_a), make(99)) == ("prog", 0)
+    assert scanloop.get_cached_program(("t", 1, sig_a)) == ("prog", 1)
+    assert scanloop.get_cached_program(("t", "missing")) is None
+    assert built == [0, 1, 2]                  # hit: no rebuild
+
+
+# ---------------------------------------------------------------------------
+# CaseStudy regressions (plan knob, dropout on non-dense plans, billing)
+# ---------------------------------------------------------------------------
+
+
+def test_casestudy_respects_plan_knob():
+    """Regression: CaseStudy used to hardcode plan="dense-xla" for every
+    construction. The static 2-robot case must ride the engine's normal
+    auto selection (which lands on dense-xla via the K*degree floor, not
+    by fiat), and explicit plans must be honoured — including with
+    dropout_p > 0, which previously forced the dense hack."""
+    from repro.rl.casestudy import CaseStudy
+    cs = CaseStudy()                           # default: plan="auto"
+    assert cs.plan == "auto"
+    assert cs.engine.plan.kind == "dense-xla"
+    assert "heuristic" in cs.engine.plan.reason      # auto picked it
+    cs_sp = CaseStudy(plan="sparse-pallas", dropout_p=0.2)
+    assert cs_sp.engine.plan.kind == "sparse-pallas"
+    assert cs_sp.engine.graph.kind == "dropout"
+    # per-task graph seeds follow dropout_seed + task_id
+    assert cs_sp._engines[1].graph.seed == cs_sp.dropout_seed + 1
+    with pytest.raises(ValueError, match="distributed"):
+        CaseStudy(plan="distributed", dropout_p=0.2)
+
+
+@pytest.mark.parametrize("plan,chunk", [("sparse-pallas", 8),
+                                        ("sharded", 8)])
+def test_casestudy_dropout_cross_plan_matches_dense_host_loop(plan, chunk):
+    """Acceptance: CaseStudy(dropout_p=0.2) on the sparse-pallas and
+    sharded (emulated) plans reproduces the dense-xla host-loop
+    (chunk=1) reference — t_i, measured Eq.-(11) joules, and the reward
+    history — with zero host-side per-round graph prefetch."""
+    from repro.rl.casestudy import CaseStudy
+    key = jax.random.PRNGKey(2)
+    ref = CaseStudy(dropout_p=0.2, plan="dense-xla", chunk=1)
+    p = ref.init_params(key)
+    _, t_ref, h_ref = ref.adapt_task(key, 0, p, max_rounds=4)
+    j_ref = ref.last_adapt_comm_joules
+    cs = CaseStudy(dropout_p=0.2, plan=plan, chunk=chunk)
+    _, t_i, h = cs.adapt_task(key, 0, p, max_rounds=4)
+    assert t_i == t_ref
+    assert cs.last_adapt_comm_joules == j_ref
+    assert h == h_ref
+
+
+def test_adapt_task_bills_exactly_rounds_used_under_dropout():
+    """Satellite audit: with the target hit MID-CHUNK (round 1 of a
+    chunk-8 program) the Eq.-(11) bill must cover exactly rounds_used
+    surviving-link rounds — the frozen tail bills zero; and a
+    never-reached run with chunk > max_rounds bills exactly max_rounds
+    rounds."""
+    from repro.rl.casestudy import CaseStudy
+    key = jax.random.PRNGKey(0)
+    cs = CaseStudy(dropout_p=0.3, chunk=8, r_target=-1.0)   # hit round 1
+    p = cs.init_params(key)
+    _, rounds, _ = cs.adapt_task(key, 0, p, max_rounds=20)
+    assert rounds == 1                         # mid-chunk hit
+    want = [t.round_comm_joules(cs.energy_params)
+            for t in topo_lib.dropout(cs.cluster_topology, 0.3,
+                                      seed=cs.dropout_seed + 0, rounds=8)]
+    assert cs.last_adapt_comm_joules == pytest.approx(want[0])
+    assert cs.last_adapt_comm_joules < sum(want)     # tail billed zero
+
+    cs2 = CaseStudy(dropout_p=0.3, chunk=8, r_target=1e9)   # never hit
+    _, rounds2, _ = cs2.adapt_task(key, 0, p, max_rounds=5)
+    assert rounds2 == 5
+    want2 = sum(t.round_comm_joules(cs2.energy_params)
+                for t in topo_lib.dropout(cs2.cluster_topology, 0.3,
+                                          seed=cs2.dropout_seed + 0,
+                                          rounds=5))
+    assert cs2.last_adapt_comm_joules == pytest.approx(want2)

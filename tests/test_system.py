@@ -20,7 +20,7 @@ def test_case_study_round_and_energy():
     assert np.isfinite(float(m["meta_loss"]))
     stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p2)
-    stacked2, _, R = cs._fl_rounds[0](stacked, None, key, cs._static_mix)
+    stacked2, _, R = cs._fl_rounds[0](stacked, None, key, jnp.int32(0))
     assert np.isfinite(float(R))
     res_like = cs.run(jax.random.PRNGKey(1), 0, max_rounds=2)
     s = res_like.summary()
@@ -42,7 +42,7 @@ def test_case_study_codec_round_and_energy():
         lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), p)
     state = cs.codec.init_state(stacked)
     stacked2, state2, R = cs._fl_rounds[0](stacked, state, key,
-                                           cs._static_mix)
+                                           jnp.int32(0))
     assert np.isfinite(float(R))
     assert jax.tree.structure(state2) == jax.tree.structure(stacked)
     # codec-priced Eq. (11): comm term drops exactly bits-ratio-fold
