@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
-from repro.core import consensus
+from repro.core import consensus, energy
+from repro.core import topology as topo_lib
 from repro.launch.hlo_analysis import collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import abstract_params
@@ -84,18 +85,27 @@ def main():
     n_params = cfg.param_count()
     print(f"granite-8b replica: {n_params/1e9:.2f}B params "
           f"({n_params*4/1e9:.1f} GB f32)")
-    for name, cc, kw in (
-        ("fedavg_allreduce", cfg, dict(mode="fedavg")),
-        ("ring_consensus_f32", cfg, dict(mode="ring")),
+    # Eq.-(11) pricing of the SAME rounds the lowering ships: every wire
+    # crossing a link is billed (repro.analysis rule R4 — no unpriced
+    # transmissions), at the paper-calibrated radio parameters
+    p_cal = energy.paper_calibrated("fig3")
+    ring16 = topo_lib.ring(mesh.shape["data"])
+    model_bits = n_params * 32.0
+    for name, cc, kw, codec_spec in (
+        ("fedavg_allreduce", cfg, dict(mode="fedavg"), None),
+        ("ring_consensus_f32", cfg, dict(mode="ring"), None),
         ("ring_consensus_bf16", cfg, dict(mode="ring",
-                                          msg_dtype=jnp.bfloat16)),
+                                          msg_dtype=jnp.bfloat16), "bf16"),
     ):
         compiled = build(cc, mesh, **kw).compile()
         cb = collective_bytes(compiled.as_text())
         tot = sum(cb.values())
         per_agent = tot * 256 / 16 / 1e9      # per-device -> per-agent GB
+        joules = ring16.round_comm_joules(p_cal, model_bits=model_bits,
+                                          codec=codec_spec)
         print(f"{name:22s} {tot/1e9:8.2f} GB/device/round  "
-              f"{ {k: round(v/1e9,2) for k, v in cb.items() if v} }")
+              f"{ {k: round(v/1e9,2) for k, v in cb.items() if v} }  "
+              f"Eq.(11) {joules:10.1f} J/round")
 
 
 if __name__ == "__main__":

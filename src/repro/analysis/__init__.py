@@ -1,0 +1,53 @@
+"""``repro.analysis`` — static/compiled-artifact audits of the engine's
+program invariants.
+
+The reproduction's correctness story rests on invariants no test
+exercises directly: scanned and host drivers dispatch the same cached
+program (so that program must be PURE), int wires stay integer lanes
+through the Eq.-(6) combine, donated buffers are actually donated, and
+Eq.-(11) joules bill exactly the bytes the compiled module ships. This
+package turns those from ROADMAP prose into checked properties, in
+three layers:
+
+* **Layer 1 — jaxpr** (:mod:`.jaxpr_audit`): walks the jaxprs/compiled
+  executables of the programs in ``scanloop.registered_programs()`` and
+  of ``engine.scan_rounds`` for all four plans.
+  Rules: JX1 (no host callbacks in cached programs), JX2 (no
+  decode-then-combine on sparse/sharded wires), JX3 (donation honored
+  in the executable's ``input_output_alias``).
+* **Layer 2 — HLO** (:mod:`.hlo_audit`): parses optimized modules with
+  the ``launch/hlo_analysis`` collective/shape parser.
+  Rules: H1 (no (K, K) buffer at K >= 4096 on the sharded plan), H2
+  (collective bytes match ``codec.model_bits`` pricing within
+  tolerance).
+* **Layer 3 — AST lint** (:mod:`.lint`): repo-specific rules over
+  ``src/`` and ``benchmarks/``.
+  Rules: R1 (survival draws via ``topology.survival_mask`` only), R2
+  (no naked ``jax.jit`` in ``core/``/``rl/``), R3 (median-of-N timing
+  asserts), R4 (no unpriced transmissions), R5 (``own()`` donated
+  carries).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis            # report
+    PYTHONPATH=src python -m repro.analysis --strict   # CI: exit 1 on
+                                                       # any finding not
+                                                       # in the allowlist
+    PYTHONPATH=src python -m repro.analysis --layer lint   # fast subset
+    PYTHONPATH=src python -m repro.analysis --h1-k 512     # cheap H1
+
+Findings carry a rule ID and ``file:line``; intentional exceptions live
+in ``src/repro/analysis/allowlist.toml`` with a justification each —
+tracked debt, not silence. The CLI forces
+``--xla_force_host_platform_device_count=8`` into ``XLA_FLAGS`` before
+jax initializes so the H2 mesh sweep runs on CPU CI. See ROADMAP.md
+"Invariants & how they're enforced" for the invariant -> rule map.
+
+Importing this package (and running the lint layer) does NOT import
+jax; the jaxpr/HLO layers import it lazily.
+"""
+from repro.analysis.findings import (Finding, apply_allowlist,
+                                     load_allowlist, render_report)
+
+__all__ = ["Finding", "apply_allowlist", "load_allowlist",
+           "render_report"]

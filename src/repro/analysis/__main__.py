@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis [--strict] [--layer ...]``."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_multi_device():
+    """The H2 sweep needs >= 2 devices; must run BEFORE jax imports."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="audit the engine's compiled-program invariants "
+                    "(see repro.analysis module docs for the rules)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any non-allowlisted finding (CI)")
+    ap.add_argument("--layer", choices=("all", "lint", "jaxpr", "hlo"),
+                    default="all")
+    ap.add_argument("--root", default=None,
+                    help="repo root for the lint layer (default: "
+                         "two levels above the src/ package)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist TOML (default: the package's "
+                         "allowlist.toml)")
+    ap.add_argument("--h1-k", type=int, default=4096,
+                    help="population size for the H1 square-buffer "
+                         "audit (compile cost grows with it)")
+    args = ap.parse_args(argv)
+
+    if args.layer in ("all", "jaxpr", "hlo"):
+        _force_multi_device()
+
+    pkg_dir = os.path.dirname(os.path.abspath(__file__))
+    root = args.root or os.path.dirname(os.path.dirname(
+        os.path.dirname(pkg_dir)))
+    allow_path = args.allowlist or os.path.join(pkg_dir, "allowlist.toml")
+
+    from repro.analysis import (apply_allowlist, load_allowlist,
+                                render_report)
+
+    findings = []
+    if args.layer in ("all", "lint"):
+        from repro.analysis.lint import run_lint
+        findings += run_lint(root)
+    if args.layer in ("all", "jaxpr"):
+        from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        findings += run_jaxpr_audit()
+    if args.layer in ("all", "hlo"):
+        from repro.analysis.hlo_audit import run_hlo_audit
+        findings += run_hlo_audit(h1_k=args.h1_k)
+
+    findings = apply_allowlist(findings, load_allowlist(allow_path))
+    print(render_report(findings))
+    n_open = sum(1 for f in findings if not f.allowlisted)
+    n_known = len(findings) - n_open
+    print(f"\n{n_open} open finding(s), {n_known} allowlisted")
+    if args.strict and n_open:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

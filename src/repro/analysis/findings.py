@@ -1,0 +1,149 @@
+"""Finding records, the allowlist, and report formatting.
+
+Every audit layer (:mod:`.lint`, :mod:`.jaxpr_audit`, :mod:`.hlo_audit`)
+returns a list of :class:`Finding`; the CLI merges them, marks the ones
+covered by ``analysis/allowlist.toml`` (known debt is TRACKED with a
+justification, never silenced), prints the report, and — under
+``--strict`` — fails on any finding left unallowlisted.
+
+The allowlist is an array of ``[[allow]]`` tables::
+
+    [[allow]]
+    rule  = "R4"                          # required: the rule ID
+    file  = "src/repro/core/consensus.py" # required: path suffix/glob
+    match = "ppermute"                    # optional: message substring
+    note  = "why this is intentional"     # required by convention
+
+This module intentionally imports no jax — the lint layer (and the CLI
+argument parsing) must run before any backend initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Iterable, List, Optional
+
+
+@dataclasses.dataclass
+class Finding:
+    """One audit finding: rule ID + file:line + human message."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+    allowlisted: bool = False
+    note: str = ""
+
+    def format(self) -> str:
+        tail = f"  [allowlisted: {self.note}]" if self.allowlisted else ""
+        return f"{self.rule:4s} {self.file}:{self.line}  {self.message}{tail}"
+
+
+# ---------------------------------------------------------------------------
+# allowlist: TOML loading (stdlib tomllib when present, else a minimal
+# subset parser — the container pins Python 3.10 and new deps are off
+# the table, and the allowlist grammar above is tiny)
+# ---------------------------------------------------------------------------
+
+_STRING_RE = re.compile(r'"((?:[^"\\]|\\.)*)"')
+
+
+_ESCAPES = {"\\\\": "\\", '\\"': '"', "\\n": "\n", "\\t": "\t"}
+
+
+def _parse_scalar(v: str):
+    m = _STRING_RE.match(v)
+    if m:
+        s = m.group(1)
+        # hand-rolled escapes: unicode_escape would mangle non-ASCII text
+        for esc, ch in _ESCAPES.items():
+            s = s.replace(esc, ch)
+        return s
+    v = v.split("#", 1)[0].strip()
+    if v in ("true", "false"):
+        return v == "true"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def parse_toml_min(text: str) -> dict:
+    """Parse the ``[[allow]]``-tables-of-scalars TOML subset."""
+    entries: List[dict] = []
+    cur: Optional[dict] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[allow]]":
+            cur = {}
+            entries.append(cur)
+            continue
+        if line.startswith("["):
+            cur = None           # some other table: not ours, skip
+            continue
+        if "=" in line and cur is not None:
+            k, _, v = line.partition("=")
+            cur[k.strip()] = _parse_scalar(v.strip())
+    return {"allow": entries}
+
+
+def load_allowlist(path: str) -> List[dict]:
+    """The ``allow`` entries of ``path`` ([] when the file is absent)."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError:
+        return []
+    try:
+        import tomllib
+        return list(tomllib.loads(raw.decode("utf-8")).get("allow", []))
+    except ImportError:
+        return list(parse_toml_min(raw.decode("utf-8"))["allow"])
+
+
+def _file_matches(finding_file: str, pattern: str) -> bool:
+    f = finding_file.replace("\\", "/")
+    return (f == pattern or f.endswith("/" + pattern) or f.endswith(pattern)
+            or fnmatch.fnmatch(f, pattern))
+
+
+def apply_allowlist(findings: Iterable[Finding],
+                    entries: Iterable[dict]) -> List[Finding]:
+    """Mark findings covered by an allowlist entry (first match wins)."""
+    findings = list(findings)
+    for f in findings:
+        for e in entries:
+            if e.get("rule") != f.rule:
+                continue
+            if not _file_matches(f.file, str(e.get("file", "*"))):
+                continue
+            needle = e.get("match")
+            if needle and str(needle) not in f.message:
+                continue
+            f.allowlisted = True
+            f.note = str(e.get("note", ""))
+            break
+    return findings
+
+
+def render_report(findings: List[Finding]) -> str:
+    """Human report: open findings first, allowlisted debt after."""
+    open_f = [f for f in findings if not f.allowlisted]
+    known = [f for f in findings if f.allowlisted]
+    lines = []
+    if open_f:
+        lines.append(f"== {len(open_f)} finding(s) ==")
+        lines += [f.format() for f in open_f]
+    if known:
+        lines.append(f"== {len(known)} allowlisted (tracked debt) ==")
+        lines += [f.format() for f in known]
+    if not findings:
+        lines.append("no findings")
+    return "\n".join(lines)

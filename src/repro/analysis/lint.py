@@ -1,0 +1,222 @@
+"""Layer 3 — repo-specific AST lint over ``src/`` and ``benchmarks/``.
+
+Rules (IDs referenced from ROADMAP.md §Invariants and allowlist.toml):
+
+R1  edge-survival fold-in draws must go through
+    ``topology.survival_mask``: a ``jax.random.uniform``/``bernoulli``
+    call consuming a ``fold_in(...)`` key anywhere else forks the
+    host/in-scan bit-parity convention the Eq.-(11) post-hoc billing
+    replays. (The definition site, ``core/topology.py::survival_mask``,
+    is structurally exempt.)
+R2  no naked ``jax.jit`` in ``core/`` or ``rl/`` — round programs must
+    go through ``scanloop.donating_jit`` so donation policy and the
+    ``repro.analysis`` program registry see them (``core/scanloop.py``,
+    the gate itself, is exempt).
+R3  timing assertions in ``benchmarks/`` must be median-of-N with
+    tolerance: a timing-named value asserted in a module that never
+    computes a ``median`` is a single-shot flake.
+R4  no unpriced transmissions: a module with wire-send calls (codec
+    ``encode_leaf``/``encode_leaf_stateful``/``encode_stateful``,
+    ``ring_consensus_step``, ``ppermute``) must reach an Eq.-(11)
+    billing call (``round_comm_joules``/``price_bits``/``model_bits``)
+    in the same module. (``src/repro/comms/`` — the wire-format layer
+    that DEFINES encode — is structurally exempt.)
+R5  a module creating donating programs (``donating_jit`` with
+    ``donate_argnums``) must ``scanloop.own()`` the carries it feeds
+    them — donation consumes buffers, and only driver-owned copies may
+    be consumed (``core/scanloop.py`` is exempt).
+
+Pure ``ast`` — no jax import, so the lint layer runs in any process.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+
+#: identifiers / subscript-string keys that mark a value as a timing
+_TIMING_RE = re.compile(
+    r"(^|_)(us|ms|usec|msec|sec|secs|seconds|elapsed|wall|time|times|"
+    r"dt|latency|duration)(_|$|s$)")
+
+_SEND_NAMES = {"encode_leaf", "encode_leaf_stateful", "encode_stateful",
+               "ring_consensus_step", "ppermute"}
+_BILLING_NAMES = {"round_comm_joules", "price_bits", "model_bits"}
+
+_R2_SCOPES = ("src/repro/core/", "src/repro/rl/")
+_R2_EXEMPT = ("src/repro/core/scanloop.py",)
+_R4_EXEMPT_DIRS = ("src/repro/comms/",)
+_R5_EXEMPT = ("src/repro/core/scanloop.py",)
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression ("jax.random.uniform")."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _contains_call(node, leaf_name: str) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d == leaf_name or d.endswith("." + leaf_name):
+                return True
+    return False
+
+
+def _timingish(node) -> bool:
+    for sub in ast.walk(node):
+        ident = None
+        if isinstance(sub, ast.Name):
+            ident = sub.id
+        elif isinstance(sub, ast.Attribute):
+            ident = sub.attr
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            ident = sub.value
+        if ident and _TIMING_RE.search(ident):
+            return True
+    return False
+
+
+class _ModuleFacts(ast.NodeVisitor):
+    """One pass collecting every rule's raw facts for a module."""
+
+    def __init__(self):
+        self.jax_jit_sites: List[int] = []          # R2
+        self.fold_draws: List[tuple] = []           # R1: (line, func name)
+        self.timing_asserts: List[int] = []         # R3
+        self.has_median = False                     # R3
+        self.send_sites: List[tuple] = []           # R4: (line, name)
+        self.has_billing = False                    # R4
+        self.donating_sites: List[int] = []         # R5
+        self.has_own = False                        # R5
+        self._func_stack: List[str] = []
+
+    # -- scope tracking ---------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- facts --------------------------------------------------------------
+    def visit_Attribute(self, node):
+        if node.attr == "jit" and isinstance(node.value, ast.Name) \
+                and node.value.id == "jax":
+            self.jax_jit_sites.append(node.lineno)   # call, decorator,
+        self.generic_visit(node)                     # or partial() arg
+
+    def visit_Assert(self, node):
+        if _timingish(node.test):
+            self.timing_asserts.append(node.lineno)
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        d = _dotted(node.func)
+        leaf = d.rsplit(".", 1)[-1]
+        if leaf == "median":
+            self.has_median = True
+        if leaf == "own":
+            self.has_own = True
+        if leaf in _BILLING_NAMES:
+            self.has_billing = True
+        if leaf in _SEND_NAMES:
+            self.send_sites.append((node.lineno, leaf))
+        if leaf in ("uniform", "bernoulli") and node.args \
+                and _contains_call(node.args[0], "fold_in"):
+            self.fold_draws.append(
+                (node.lineno, self._func_stack[-1]
+                 if self._func_stack else "<module>"))
+        if leaf == "donating_jit":
+            donate = None
+            if len(node.args) >= 2:
+                donate = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "donate_argnums":
+                    donate = kw.value
+            empty = (isinstance(donate, (ast.Tuple, ast.List))
+                     and not donate.elts)
+            if donate is not None and not empty:
+                self.donating_sites.append(node.lineno)
+        self.generic_visit(node)
+
+
+def lint_file(path: str, rel: str) -> List[Finding]:
+    """All rule findings for one file (``rel``: repo-relative path)."""
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding("R0", rel, e.lineno or 0,
+                        f"file does not parse: {e.msg}")]
+    facts = _ModuleFacts()
+    facts.visit(tree)
+    rel = rel.replace("\\", "/")
+    out: List[Finding] = []
+
+    for line, func in facts.fold_draws:                               # R1
+        if rel.endswith("core/topology.py") and func == "survival_mask":
+            continue          # the one blessed definition site
+        out.append(Finding(
+            "R1", rel, line,
+            f"raw uniform(fold_in(...)) edge-survival draw in {func}() — "
+            "go through topology.survival_mask (host/in-scan bit parity)"))
+
+    if any(rel.startswith(s) for s in _R2_SCOPES) \
+            and rel not in _R2_EXEMPT:                                # R2
+        for line in facts.jax_jit_sites:
+            out.append(Finding(
+                "R2", rel, line,
+                "naked jax.jit — use scanloop.donating_jit (donation "
+                "policy + program registry) or allowlist"))
+
+    if rel.startswith("benchmarks/") and not facts.has_median:        # R3
+        for line in facts.timing_asserts:
+            out.append(Finding(
+                "R3", rel, line,
+                "single-shot timing assertion — time median-of-N with a "
+                "tolerance (the module never computes a median)"))
+
+    if not any(rel.startswith(d) for d in _R4_EXEMPT_DIRS) \
+            and facts.send_sites and not facts.has_billing:           # R4
+        for line, name in facts.send_sites:
+            out.append(Finding(
+                "R4", rel, line,
+                f"wire send ({name}) with no Eq.-(11) billing call "
+                "(round_comm_joules/price_bits/model_bits) in this "
+                "module — unpriced transmission"))
+
+    if rel not in _R5_EXEMPT and facts.donating_sites \
+            and not facts.has_own:                                    # R5
+        for line in facts.donating_sites:
+            out.append(Finding(
+                "R5", rel, line,
+                "donating_jit(donate_argnums=...) in a module that never "
+                "scanloop.own()s a carry — donated inputs must be "
+                "driver-owned copies"))
+    return out
+
+
+def run_lint(root: str, subdirs=("src", "benchmarks")) -> List[Finding]:
+    """Lint every ``*.py`` under ``root``'s ``subdirs``."""
+    findings: List[Finding] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                findings.extend(lint_file(path, rel))
+    return findings

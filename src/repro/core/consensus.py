@@ -570,6 +570,13 @@ def _permute_agent_step(params, residual, sigs, akey, *, pairs_list,
         for m, pairs in enumerate(pairs_list):
             nb = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, axis_name, pairs), payload)
+            if pin_wire:
+                # pin the RECEIVE side too: the decode convert otherwise
+                # commutes back through the ppermute (convert(permute(x))
+                # == permute(convert(x))) and the wire ships f32 even
+                # though the send side was pinned — repro.analysis H2
+                # caught exactly this on the bf16 distributed wire
+                nb = jax.lax.optimization_barrier(nb)
             nb_hat = nb["v"] if codec is None else codec.decode_leaf(nb, like)
             acc = acc + sigs[m] * (nb_hat - xhat)
         new_leaves.append((xf + acc).reshape(jnp.shape(x)).astype(x.dtype))
@@ -686,6 +693,11 @@ def _sharded_block_leaf(x_blk, r_blk, idx_blk, sig_blk, keys_blk, *, K: int,
         lambda a: jax.lax.all_gather(a, axis_name
                                      ).reshape((K,) + a.shape[1:]),
         payload)
+    if pin_wire:
+        # receive-side pin: without it the generic decode below commutes
+        # back through the all_gather and the wire reverts to f32 (the
+        # int-wire fused path is immune — its gather operands are int8)
+        gathered = jax.lax.optimization_barrier(gathered)
 
     from repro.kernels import ops   # deferred: keeps consensus importable
 

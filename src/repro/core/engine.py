@@ -114,6 +114,28 @@ PLAN_KINDS = ("dense-xla", "sparse-pallas", "sharded", "distributed")
 #: and cannot re-route around faded links without a retrace.
 MASKABLE_PLANS = ("dense-xla", "sparse-pallas", "sharded")
 
+#: per-plan compiled-artifact expectations ``repro.analysis`` keys on.
+#: ``kk_buffer``: whether the plan's program may legitimately
+#: materialize a (K, K) tensor (the dense σ stack); the sharded and
+#: distributed plans exist precisely so it never does, and the HLO
+#: auditor (rule H1) fails them if one appears at K ≥ its threshold.
+#: ``wire_collective``: which collective carries the codec WIRE on a
+#: real mesh — the op whose result bytes rule H2 reconciles against
+#: ``codec.bits()`` pricing. ``int_lane_gather``: the plan mixes
+#: int-codec wires through a fused gather that must keep int8/int4
+#: lanes (the decode-then-combine regression class, rule JX2).
+PLAN_AUDIT_EXPECTATIONS = {
+    "dense-xla":     {"kk_buffer": True, "wire_collective": None,
+                      "int_lane_gather": False},
+    "sparse-pallas": {"kk_buffer": False, "wire_collective": None,
+                      "int_lane_gather": True},
+    "sharded":       {"kk_buffer": False, "wire_collective": "all-gather",
+                      "int_lane_gather": True},
+    "distributed":   {"kk_buffer": False,
+                      "wire_collective": "collective-permute",
+                      "int_lane_gather": False},
+}
+
 
 @dataclass(frozen=True)
 class ExecutionPlan:
@@ -455,6 +477,27 @@ class ConsensusEngine:
                              "construct it from a Topology to price rounds")
         return self.topology.round_comm_joules(
             energy_params, model_bits=model_bits, codec=self.codec)
+
+    # -- audit metadata -----------------------------------------------------
+    def audit_meta(self) -> dict:
+        """Resolved facts ``repro.analysis`` keys its checks on: the
+        plan kind, its :data:`PLAN_AUDIT_EXPECTATIONS` entry, and the
+        wire codec (base codec under the error-feedback wrapper, with
+        its int-lane bit width if any). Rule H2 reconciles the compiled
+        module's collective bytes against ``codec.model_bits(tree)``."""
+        base = (getattr(self.codec, "inner", self.codec)
+                if self.codec is not None else None)
+        meta = dict(PLAN_AUDIT_EXPECTATIONS[self.plan.kind])
+        meta.update(
+            plan=self.plan.kind, K=self.K,
+            num_blocks=self.plan.num_blocks,
+            axis_name=self.plan.axis_name,
+            mesh_axis=(None if self.mesh is None else
+                       dict(self.mesh.shape).get(self.plan.axis_name)),
+            codec=None if self.codec is None else self.codec.name,
+            qbits=getattr(base, "qbits", None),
+        )
+        return meta
 
     # -- conveniences -------------------------------------------------------
     @classmethod

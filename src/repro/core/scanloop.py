@@ -51,11 +51,65 @@ are shared:
 from __future__ import annotations
 
 import collections
-from typing import Callable, Optional
+import dataclasses
+import functools
+import weakref
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclasses.dataclass
+class ProgramRecord:
+    """Audit-facing record of one :func:`donating_jit` program.
+
+    ``repro.analysis`` walks :func:`registered_programs` to re-derive
+    each program's jaxpr (``jax.make_jaxpr(fn)(*abstract_args)``) and
+    compiled HLO, so the invariants — no callbacks inside cached
+    programs, donation actually honored — are checked against the
+    artifacts the drivers dispatch, not against reimplementations.
+    """
+    name: str
+    fn: Callable                      # the raw traced round body
+    jitted: Callable                  # the jit handle dispatch calls
+    donate_argnums: tuple             # as REQUESTED by the driver
+    donation_gated: bool              # True: the CPU gate dropped them
+    jit_kwargs: dict
+    abstract_args: Optional[tuple] = None   # SDS tree of the first call
+    cache_key: Optional[tuple] = None       # set on cached_program admit
+
+
+#: weakrefs to live dispatch wrappers — entries vanish with their
+#: program (LRU eviction + driver GC), so the registry never extends a
+#: compiled executable's lifetime.
+_PROGRAM_REFS: list = []
+
+
+def registered_programs():
+    """Live :class:`ProgramRecord`\\ s of every :func:`donating_jit`
+    program still referenced somewhere (program cache, driver closures).
+    Dead weakrefs are pruned in passing."""
+    out, alive = [], []
+    for ref in _PROGRAM_REFS:
+        w = ref()
+        if w is not None:
+            alive.append(ref)
+            out.append(w._program_record)
+    _PROGRAM_REFS[:] = alive
+    return out
+
+
+def clear_program_registry():
+    """Forget every registered program (tests)."""
+    _PROGRAM_REFS.clear()
+
+
+def _abstractify(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
 
 
 def donating_jit(fn: Callable, donate_argnums=(), **jit_kwargs):
@@ -63,10 +117,31 @@ def donating_jit(fn: Callable, donate_argnums=(), **jit_kwargs):
     supports it (TPU/GPU). On CPU donation is unimplemented — XLA logs a
     "donated buffers were not usable" warning and copies — so the gate
     compiles without donation there. See the module docstring for the
-    donation invariant callers must respect."""
-    if jax.default_backend() == "cpu":
-        return jax.jit(fn, **jit_kwargs)
-    return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+    donation invariant callers must respect.
+
+    Every program is registered for ``repro.analysis`` (see
+    :class:`ProgramRecord`); the returned callable dispatches straight
+    to the jit handle after recording the first call's abstract args.
+    """
+    gated = jax.default_backend() == "cpu"
+    if gated:
+        jitted = jax.jit(fn, **jit_kwargs)
+    else:
+        jitted = jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+    rec = ProgramRecord(
+        name=getattr(fn, "__name__", repr(fn)), fn=fn, jitted=jitted,
+        donate_argnums=tuple(donate_argnums), donation_gated=gated,
+        jit_kwargs=dict(jit_kwargs))
+
+    @functools.wraps(fn)
+    def dispatch(*args, **kwargs):
+        if rec.abstract_args is None:
+            rec.abstract_args = _abstractify(args)
+        return jitted(*args, **kwargs)
+
+    dispatch._program_record = rec
+    _PROGRAM_REFS.append(weakref.ref(dispatch))
+    return dispatch
 
 
 def own(tree):
@@ -184,6 +259,9 @@ def cached_program(key, build: Callable):
     fn = get_cached_program(key)
     if fn is None:
         fn = build()
+        rec = getattr(fn, "_program_record", None)
+        if rec is not None:
+            rec.cache_key = key        # audit: this program was admitted
     _program_cache[key] = fn
     while len(_program_cache) > PROGRAM_CACHE_SIZE:
         _program_cache.popitem(last=False)

@@ -62,6 +62,23 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def square_buffers(hlo_text: str, min_dim: int):
+    """Every DISTINCT square tensor shape ``dt[D,D]`` with D >= min_dim
+    appearing anywhere in the module, as ``(dtype, D, bytes)`` tuples.
+
+    The sharded/distributed plans exist so no single program ever
+    materializes the (K, K) mixing stack; ``repro.analysis`` rule H1
+    asserts this on the compiled artifact at K >= its threshold."""
+    seen = set()
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dt, dims = m.groups()
+        parts = [int(d) for d in dims.split(",") if d]
+        if len(parts) == 2 and parts[0] == parts[1] and parts[0] >= min_dim:
+            seen.add((dt, parts[0],
+                      parts[0] * parts[1] * _DTYPE_BYTES.get(dt, 4)))
+    return sorted(seen)
+
+
 @dataclass
 class DryRunReport:
     arch: str

@@ -212,6 +212,9 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
 
     codec_state = (codec.init_state(stacked)
                    if codec is not None and codec.stateful else None)
+    # own(): fl_chunk donates the stacked/EF carries on donating backends
+    stacked = scanloop.own(stacked)
+    codec_state = scanloop.own(codec_state)
     hist = []
     chunk = max(int(chunk), 1)
     for start in range(0, rounds, chunk):

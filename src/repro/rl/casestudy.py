@@ -171,7 +171,6 @@ class CaseStudy:
         self.cluster_topology = self.network.cluster_topology()
 
         # ---- jitted meta round (Eqs. 3–5 over the Q tasks) ----------------
-        @jax.jit
         def meta_round(params, key):
             ks = jax.random.split(key, 2 * len(META_TASKS))
             sup, qry = [], []
@@ -195,6 +194,9 @@ class CaseStudy:
                 inner_steps=self.inner_steps,
                 first_order=self.first_order)
 
+        # no donate_argnums: host drivers (benchmarks, tests) replay the
+        # SAME params pytree across calls — donation would invalidate it
+        meta_round = scanloop.donating_jit(meta_round)
         self._meta_round = meta_round
 
         # chunked stage-1 driver: `chunk` meta rounds per compiled scan
@@ -254,7 +256,7 @@ class CaseStudy:
             return new, codec_state, R
 
         self._fl_rounds = {
-            tid: jax.jit(functools.partial(fl_round, tid))
+            tid: scanloop.donating_jit(functools.partial(fl_round, tid))
             for tid in range(gw.NUM_TASKS)}
 
         # chunked stage-2 driver: `chunk` FL rounds per compiled scan
@@ -296,7 +298,8 @@ class CaseStudy:
         """Stage 1: t0 meta rounds, ``self.chunk`` rounds per compiled
         program, meta-loss history synced once per chunk."""
         kinit, kdata = jax.random.split(key)
-        params = self.init_params(kinit)
+        # own(): _meta_chunk donates its params carry on donating backends
+        params = scanloop.own(self.init_params(kinit))
         hist = []
         for start in range(0, t0, self.chunk):
             n = min(self.chunk, t0 - start)
@@ -324,8 +327,11 @@ class CaseStudy:
         rounds (target hit mid-chunk, or chunk ∤ max_rounds) bill
         zero."""
         C = self.network.devices_per_cluster
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), init_params)
+        # own(): _fl_chunks donate the stacked/EF carries; the broadcast
+        # must not alias the caller's init_params on donating backends
+        stacked = scanloop.own(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
+            init_params))
         codec_state = (self.codec.init_state(stacked)
                        if self.codec is not None and self.codec.stateful
                        else None)

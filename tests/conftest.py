@@ -13,3 +13,22 @@ import pytest
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _retrace_budget():
+    """CI retrace budget: with ``REPRO_TRACE_BUDGET=<n>`` set, the whole
+    tier-1 run may re-trace the chunked drivers at most n times total
+    (``scanloop.TRACE_COUNTS``). A driver bypassing
+    ``scanloop.cached_program`` re-traces per call and blows the budget
+    long before it shows up as wall-clock."""
+    yield
+    budget = os.environ.get("REPRO_TRACE_BUDGET")
+    if not budget:
+        return
+    from repro.core import scanloop
+    total = sum(scanloop.TRACE_COUNTS.values())
+    assert total <= int(budget), (
+        f"retrace budget exceeded: {dict(scanloop.TRACE_COUNTS)} totals "
+        f"{total} > {budget} — a chunked driver is re-tracing instead of "
+        "hitting scanloop.cached_program")

@@ -1,0 +1,365 @@
+"""Regression harness for ``repro.analysis`` — every rule must fire on a
+seeded violation with the right rule ID and file:line, and stay silent on
+the blessed counterpart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.findings import (Finding, apply_allowlist,
+                                     load_allowlist, parse_toml_min)
+from repro.analysis.jaxpr_audit import (alias_param_indices,
+                                        audit_registered_programs,
+                                        check_donation,
+                                        find_callbacks,
+                                        find_decode_then_combine,
+                                        has_int_lane_gather)
+from repro.analysis.lint import lint_file, run_lint
+from repro.core import scanloop
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+THIS_FILE = os.path.abspath(__file__)
+
+
+def _lint_src(tmp_path, src: str, rel: str):
+    p = tmp_path / os.path.basename(rel)
+    p.write_text(src, encoding="utf-8")
+    return lint_file(str(p), rel)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: AST lint rules on seeded violations
+# ---------------------------------------------------------------------------
+
+class TestLintR1:
+    SRC = (
+        "import jax\n"
+        "def edge_mask(key, t):\n"
+        "    k = jax.random.fold_in(key, t)\n"
+        "    return jax.random.uniform(jax.random.fold_in(k, 7), (4,))\n")
+
+    def test_fires_with_line(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC, "src/repro/core/fake_edges.py")
+        hits = [f for f in out if f.rule == "R1"]
+        assert len(hits) == 1
+        assert hits[0].line == 4
+        assert hits[0].file == "src/repro/core/fake_edges.py"
+        assert "survival_mask" in hits[0].message
+
+    def test_definition_site_exempt(self, tmp_path):
+        src = self.SRC.replace("def edge_mask", "def survival_mask")
+        out = _lint_src(tmp_path, src, "src/repro/core/topology.py")
+        assert "R1" not in _rules(out)
+
+    def test_bernoulli_counts(self, tmp_path):
+        src = self.SRC.replace("jax.random.uniform", "jax.random.bernoulli")
+        out = _lint_src(tmp_path, src, "benchmarks/fake_edges.py")
+        assert "R1" in _rules(out)
+
+
+class TestLintR2:
+    SRC = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(p):\n"
+        "    return p\n"
+        "other = jax.jit(lambda x: x)\n")
+
+    def test_fires_in_core_and_rl(self, tmp_path):
+        for rel in ("src/repro/core/fake_mod.py", "src/repro/rl/fake_mod.py"):
+            out = _lint_src(tmp_path, self.SRC, rel)
+            hits = [f for f in out if f.rule == "R2"]
+            assert sorted(h.line for h in hits) == [2, 5], rel
+
+    def test_out_of_scope_and_gate_exempt(self, tmp_path):
+        for rel in ("src/repro/launch/fake_mod.py",
+                    "src/repro/core/scanloop.py"):
+            out = _lint_src(tmp_path, self.SRC, rel)
+            assert "R2" not in _rules(out), rel
+
+
+class TestLintR3:
+    SRC_BAD = (
+        "rows = run()\n"
+        "assert rows[-1]['us_per_round'] < 2.0\n")
+    SRC_OK = (
+        "import statistics\n"
+        "rows = run()\n"
+        "med = statistics.median(r['us_per_round'] for r in rows)\n"
+        "assert med < 2.0 * 1.15\n")
+
+    def test_single_shot_fires(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_BAD, "benchmarks/fake_bench.py")
+        hits = [f for f in out if f.rule == "R3"]
+        assert len(hits) == 1 and hits[0].line == 2
+
+    def test_median_module_clean(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_OK, "benchmarks/fake_bench.py")
+        assert "R3" not in _rules(out)
+
+    def test_only_benchmarks_scope(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_BAD, "src/repro/core/fake.py")
+        assert "R3" not in _rules(out)
+
+
+class TestLintR4:
+    SRC_BAD = (
+        "def round(codec, leaf):\n"
+        "    wire = codec.encode_leaf(leaf)\n"
+        "    return wire\n")
+    SRC_OK = SRC_BAD + (
+        "def bill(topo, p, codec):\n"
+        "    return topo.round_comm_joules(p, model_bits=32.0, codec=codec)\n")
+
+    def test_unpriced_send_fires(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_BAD, "benchmarks/fake_vol.py")
+        hits = [f for f in out if f.rule == "R4"]
+        assert len(hits) == 1 and hits[0].line == 2
+        assert "encode_leaf" in hits[0].message
+
+    def test_billed_module_clean(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_OK, "benchmarks/fake_vol.py")
+        assert "R4" not in _rules(out)
+
+    def test_wire_format_layer_exempt(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_BAD, "src/repro/comms/codec.py")
+        assert "R4" not in _rules(out)
+
+
+class TestLintR5:
+    SRC_BAD = (
+        "from repro.core import scanloop\n"
+        "prog = scanloop.donating_jit(step, donate_argnums=(0,))\n"
+        "out = prog(params)\n")
+    SRC_OK = (
+        "from repro.core import scanloop\n"
+        "prog = scanloop.donating_jit(step, donate_argnums=(0,))\n"
+        "out = prog(scanloop.own(params))\n")
+
+    def test_unowned_carry_fires(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_BAD, "src/repro/rl/fake_drv.py")
+        hits = [f for f in out if f.rule == "R5"]
+        assert len(hits) == 1 and hits[0].line == 2
+
+    def test_owned_carry_clean(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_OK, "src/repro/rl/fake_drv.py")
+        assert "R5" not in _rules(out)
+
+    def test_no_donation_no_rule(self, tmp_path):
+        src = self.SRC_BAD.replace(", donate_argnums=(0,)", "")
+        out = _lint_src(tmp_path, src, "src/repro/rl/fake_drv.py")
+        assert "R5" not in _rules(out)
+
+
+def test_lint_syntax_error_is_reported_not_raised(tmp_path):
+    out = _lint_src(tmp_path, "def broken(:\n", "src/repro/core/bad.py")
+    assert [f.rule for f in out] == ["R0"]
+
+
+def test_repo_tree_lint_is_allowlist_clean():
+    """The lint half of `python -m repro.analysis --strict` on this tree."""
+    findings = run_lint(REPO_ROOT)
+    allow = load_allowlist(os.path.join(
+        REPO_ROOT, "src", "repro", "analysis", "allowlist.toml"))
+    open_f = [f for f in apply_allowlist(findings, allow)
+              if not f.allowlisted]
+    assert open_f == [], "\n".join(f.format() for f in open_f)
+
+
+# ---------------------------------------------------------------------------
+# allowlist machinery
+# ---------------------------------------------------------------------------
+
+ALLOW_TOML = """
+# comment
+[[allow]]
+rule = "R4"
+file = "src/repro/core/consensus.py"
+note = "mechanism layer \\u2014 drivers bill"
+
+[other_table]
+rule = "IGNORED"
+
+[[allow]]
+rule = "JX2"
+file = "*"
+match = "topk"
+note = "tracked"
+"""
+
+
+def test_parse_toml_min_subset():
+    entries = parse_toml_min(ALLOW_TOML)["allow"]
+    assert len(entries) == 2
+    assert entries[0]["rule"] == "R4"
+    assert entries[1]["match"] == "topk"
+    assert "IGNORED" not in [e.get("rule") for e in entries]
+
+
+def test_parse_toml_min_preserves_non_ascii():
+    entries = parse_toml_min('[[allow]]\nrule = "X"\nnote = "em — dash"\n')
+    assert entries["allow"][0]["note"] == "em — dash"
+
+
+def test_apply_allowlist_rule_file_match():
+    entries = parse_toml_min(ALLOW_TOML)["allow"]
+    fs = [
+        Finding("R4", "src/repro/core/consensus.py", 1, "ppermute send"),
+        Finding("R4", "benchmarks/other.py", 2, "ppermute send"),
+        Finding("JX2", "/abs/consensus.py", 3, "scan_rounds[x/topk:0.25]"),
+        Finding("JX2", "/abs/consensus.py", 4, "scan_rounds[x/int8]"),
+    ]
+    out = apply_allowlist(fs, entries)
+    assert [f.allowlisted for f in out] == [True, False, True, False]
+    assert "drivers bill" in out[0].note
+
+
+def test_repo_allowlist_every_entry_has_note():
+    entries = load_allowlist(os.path.join(
+        REPO_ROOT, "src", "repro", "analysis", "allowlist.toml"))
+    assert len(entries) >= 4
+    for e in entries:
+        assert e.get("rule") and e.get("file") and e.get("note"), e
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: jaxpr rules
+# ---------------------------------------------------------------------------
+
+def test_jx2_decode_then_combine_fires_with_location():
+    def decoded(q, idx, scale):
+        dense = q.astype(jnp.float32) * scale   # decode BEFORE the combine
+        return jnp.take(dense, idx, axis=0)
+
+    closed = jax.make_jaxpr(decoded)(
+        jnp.zeros((8, 4), jnp.int8), jnp.arange(4), jnp.float32(0.1))
+    hits = find_decode_then_combine(closed)
+    assert hits and hits[0][0] == "gather-of-decoded-wire"
+    f, ln = hits[0][1], hits[0][2]
+    assert os.path.basename(f) == os.path.basename(THIS_FILE)
+    assert ln > 0
+
+
+def test_jx2_scatter_densification_fires():
+    def topk_like(vals, idx, dest):
+        dense = jnp.zeros((8,), jnp.float32).at[idx].set(vals)
+        return jnp.take(dense, dest)
+
+    closed = jax.make_jaxpr(topk_like)(
+        jnp.ones((2,), jnp.float32), jnp.arange(2), jnp.arange(4))
+    assert find_decode_then_combine(closed)
+
+
+def test_jx2_fused_int_lane_gather_clean():
+    def fused(q, idx, scale):
+        lanes = jnp.take(q, idx, axis=0)        # gather WIRE lanes
+        return lanes.astype(jnp.float32) * scale
+
+    closed = jax.make_jaxpr(fused)(
+        jnp.zeros((8, 4), jnp.int8), jnp.arange(4), jnp.float32(0.1))
+    assert find_decode_then_combine(closed) == []
+    assert has_int_lane_gather(closed)
+
+
+def test_jx1_cached_callback_program_fires():
+    def impure(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v),
+            jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    key = ("test-impure-prog", "sig")
+    try:
+        prog = scanloop.cached_program(
+            key, lambda: scanloop.donating_jit(impure))
+        prog(jnp.ones((4,), jnp.float32))       # bake abstract args
+        findings = audit_registered_programs([prog._program_record])
+    finally:
+        scanloop._program_cache.pop(key, None)
+    hits = [f for f in findings if f.rule == "JX1"]
+    assert len(hits) == 1
+    assert "test-impure-prog" in hits[0].message
+    assert os.path.basename(hits[0].file) == os.path.basename(THIS_FILE)
+    assert hits[0].line > 0
+
+
+def test_jx1_uncached_callback_program_silent():
+    def impure(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v),
+            jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    prog = scanloop.donating_jit(impure)        # never cache-admitted
+    prog(jnp.ones((4,), jnp.float32))
+    findings = audit_registered_programs([prog._program_record])
+    assert [f for f in findings if f.rule == "JX1"] == []
+
+
+def test_find_callbacks_sees_through_scan():
+    def body(c, x):
+        y = jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct((), c.dtype), c)
+        return c + y, x
+
+    def scanned(c, xs):
+        return jax.lax.scan(body, c, xs)
+
+    closed = jax.make_jaxpr(scanned)(jnp.float32(0.), jnp.zeros(3))
+    assert any(p == "pure_callback" for p, _, _ in find_callbacks(closed))
+
+
+def test_alias_param_indices_balanced_braces():
+    txt = ("HloModule m, input_output_alias={ {}: (0, {}, may-alias), "
+           "{1}: (2, {0}, may-alias) }, entry_computation_layout={...}")
+    assert alias_param_indices(txt) == {0, 2}
+    assert alias_param_indices("HloModule m") == set()
+
+
+def test_jx3_honored_donation_clean():
+    def step(p, g):
+        return jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
+
+    sd = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    assert check_donation(step, (0,), (sd, sd), label="honored") == []
+
+
+def test_jx3_dropped_donation_fires():
+    def bad(p, big):
+        return p + jnp.sum(big)                 # no (64,64) output: XLA
+                                                # silently drops donation
+    args = (jax.ShapeDtypeStruct((4,), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    with pytest.warns(UserWarning):
+        findings = check_donation(bad, (1,), args, label="dropped")
+    hits = [f for f in findings if f.rule == "JX3"]
+    assert len(hits) == 1
+    assert "donation dropped" in hits[0].message
+    assert hits[0].file == "dropped"
+
+
+# ---------------------------------------------------------------------------
+# engine plan metadata the audits consume
+# ---------------------------------------------------------------------------
+
+def test_plan_audit_expectations_cover_all_plans():
+    from repro.core.engine import PLAN_AUDIT_EXPECTATIONS, PLAN_KINDS
+    assert set(PLAN_AUDIT_EXPECTATIONS) == set(PLAN_KINDS)
+    for meta in PLAN_AUDIT_EXPECTATIONS.values():
+        assert {"kk_buffer", "wire_collective",
+                "int_lane_gather"} <= set(meta)
+
+
+def test_audit_meta_reports_codec_and_plan():
+    from repro.core import topology as topo_lib
+    from repro.core.engine import ConsensusEngine
+    eng = ConsensusEngine(topo_lib.ring(4), codec="int8")
+    meta = eng.audit_meta()
+    assert meta["plan"] == "dense-xla"
+    assert meta["K"] == 4
+    assert meta["qbits"] == 8
+    assert meta["kk_buffer"] is True

@@ -1,0 +1,72 @@
+"""Edge cases of the ``launch/hlo_analysis`` HLO-text parsers that the
+``repro.analysis`` H1/H2 audits (and the dry-run roofline) rely on."""
+from repro.launch.hlo_analysis import (collective_bytes, square_buffers,
+                                       _shape_bytes)
+
+
+def test_shape_bytes_dtype_table():
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("s8[128]") == 128
+    assert _shape_bytes("pred[128]") == 128
+    assert _shape_bytes("u32[2,3]") == 24
+    assert _shape_bytes("f32[]") == 4          # scalar: one element
+
+
+def test_shape_bytes_tuple_result():
+    # tuple results sum every component, scalars included
+    assert _shape_bytes("(f32[8], u32[])") == 36
+    assert _shape_bytes("(bf16[4,4], pred[2], s8[3])") == 37
+
+
+def test_collective_bytes_basic_and_root():
+    txt = """
+  %ag = f32[16,8] all-gather(f32[2,8] %x), dimensions={0}
+  ROOT %cp = bf16[256] collective-permute(bf16[256] %y)
+"""
+    out = collective_bytes(txt)
+    assert out["all-gather"] == 16 * 8 * 4
+    assert out["collective-permute"] == 512
+    assert out["all-reduce"] == 0
+
+
+def test_collective_bytes_start_done_counted_once():
+    txt = """
+  %ar-start = f32[64] all-reduce-start(f32[64] %p), to_apply=%add
+  %ar-done = f32[64] all-reduce-done(f32[64] %ar-start)
+"""
+    assert collective_bytes(txt)["all-reduce"] == 256
+
+
+def test_collective_bytes_tuple_result_shapes():
+    txt = """
+  %cps = (f32[8], u32[]) collective-permute-start(f32[8] %v)
+  %cpd = f32[8] collective-permute-done((f32[8], u32[]) %cps)
+"""
+    # the -start tuple is summed once; -done is skipped entirely
+    assert collective_bytes(txt)["collective-permute"] == 36
+
+
+def test_collective_bytes_sub_byte_and_pred():
+    txt = """
+  %a = s8[100] all-to-all(s8[100] %q), dimensions={0}
+  %b = pred[9] all-gather(pred[3] %m), dimensions={0}
+"""
+    out = collective_bytes(txt)
+    assert out["all-to-all"] == 100
+    assert out["all-gather"] == 9
+
+
+def test_square_buffers_threshold_and_dedup():
+    txt = """
+  %small = f32[128,128] dot(...)
+  %big = f32[4096,4096] dot(...)
+  %big2 = f32[4096,4096] add(f32[4096,4096] %big, f32[4096,4096] %big)
+  %rect = f32[4096,64] dot(...)
+  %bigint = s8[8192,8192] convert(...)
+"""
+    out = square_buffers(txt, 4096)
+    assert out == [("f32", 4096, 4096 * 4096 * 4),
+                   ("s8", 8192, 8192 * 8192)]
+    assert square_buffers(txt, 100)[0] == ("f32", 128, 128 * 128 * 4)
+    assert square_buffers("%x = f32[64] add(...)", 16) == []
