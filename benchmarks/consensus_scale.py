@@ -44,6 +44,12 @@ Topology on the host, one ``engine.step(mask=...)`` dispatch per round)
 — bit-identical params by the shared fold-in convention, µs/round
 apart.
 
+``telemetry_rows`` prices OBSERVABILITY: the same 12-robot chunked
+round loop with ``repro.telemetry`` off vs buffered (per-round rows
+ride the scan ys, priced host-side once per chunk) vs streaming
+(additionally ``jax.debug.callback`` per round) — the --smoke gate
+asserts the buffered mode stays within 15% of telemetry-off.
+
 Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
 
 Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick|--smoke]
@@ -335,6 +341,94 @@ def rounds_loop_rows(chunks=ROUNDS_LOOP_CHUNKS, rounds: int = 128):
     return rows
 
 
+def telemetry_rows(rounds: int = 128, chunk: int = 16):
+    """µs/round of the chunked FL driver with telemetry off vs buffered
+    vs streaming, on the same 12-robot case-study round shape as
+    ``rounds_loop_rows`` (clusters(6, 2), N_PARAMS models, episode
+    local SGD, in-loop target eval).
+
+    All three modes dispatch through
+    :func:`repro.core.federated._fl_scan_program` and produce
+    bit-identical params; the delta is pure observability cost:
+
+    * ``buffered``  — one fixed-shape row per round rides the scan ys
+      (device work) and the whole chunk is priced host-side in the sync
+      the driver already pays — this must stay within 15% of off (the
+      --smoke gate), or per-round metrics aren't free enough to leave
+      on in sweeps;
+    * ``streaming`` — additionally one ordered ``jax.debug.callback``
+      per round (program built per call, uncached): the price of
+      per-round liveness, reported but not gated (host round-trips are
+      legitimately not free).
+    """
+    from repro import telemetry as telemetry_lib
+    from repro.core import federated, scanloop
+
+    K, B_i, FEAT, BATCH = 12, 2, 16, 4
+    topo = topo_lib.clusters(6, 2)        # the paper's Sect.-IV graph
+
+    def loss_fn(p, b):
+        return jnp.mean((p["w"][:FEAT] - b["tgt"]) ** 2)
+
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                      (K, N_PARAMS), jnp.float32)}
+
+    def sample_batches(key, t):
+        k1, k2 = jax.random.split(key)
+        ep = jax.random.normal(k1, (K, 20, FEAT), jnp.float32) * 0.01
+        idx = jax.random.randint(k2, (K, B_i, BATCH), 0, 20)
+        return {"tgt": jax.vmap(lambda e, i: e[i])(ep, idx)}
+
+    def target_fn(sp):
+        m = jnp.mean(jnp.square(sp["w"]))
+        return m < 0.0, m                 # unreachable: time full loops
+
+    key = jax.random.PRNGKey(1)
+    rows, off_us = [], None
+    for mode in ("off", "buffered", "streaming"):
+        eng = ConsensusEngine(topo)
+        tel = (None if mode == "off"
+               else telemetry_lib.Telemetry(mode=mode, capacity=rounds))
+        rec = tel.recorder_for(eng) if tel is not None else None
+        run_chunk = federated._fl_scan_program(
+            loss_fn, eng, 0.05, sample_batches=sample_batches,
+            target_fn=target_fn, stacked_params=stacked, key=key,
+            max_rounds=1 << 30, eval_every=1, telemetry=tel)
+
+        def drive(reps):
+            s, st, k, r = scanloop.own(stacked), None, key, jnp.asarray(False)
+            for start in range(0, reps, chunk):
+                (s, st, k, r), ys = run_chunk(
+                    s, st, k, r,
+                    jnp.arange(start, start + chunk, dtype=jnp.int32))
+                if tel is not None:       # the host side of the contract
+                    tel.record_rounds(rec, ys[3], start)
+                if np.asarray(ys[0]).any():
+                    break
+            return s
+
+        jax.block_until_ready(drive(chunk)["w"])          # compile
+        # median-of-3, same rationale as rounds_loop_rows
+        times = []
+        for _ in range(3):
+            if tel is not None:
+                tel.reset()
+            t0 = time.perf_counter()
+            jax.block_until_ready(drive(rounds)["w"])
+            times.append((time.perf_counter() - t0) / rounds * 1e6)
+        med = float(np.median(times))
+        if mode == "off":
+            off_us = med
+        rows.append(dict(
+            K=K, topology="cluster", n_params=N_PARAMS, chunk=chunk,
+            rounds=rounds, telemetry=mode, us_per_round=med,
+            overhead_vs_off=med / max(off_us, 1e-9)))
+        print(f"telemetry_rows {mode:10s} chunk={chunk:3d} "
+              f"{med:9.1f} us/round  ({med / max(off_us, 1e-9):.2f}x "
+              "vs telemetry off, median of 3)")
+    return rows
+
+
 DROPOUT_ROUNDS = 64
 
 
@@ -441,6 +535,13 @@ def main():
             rounds=16,
             configs=(("cluster", topo_lib.clusters(6, 2),
                       "dense-xla", {}),))
+        # per-round telemetry must be cheap enough to leave ON: buffered
+        # rows within 15% of telemetry-off (median-of-3 both sides);
+        # streaming is reported, not gated — its per-round host
+        # callback round-trip is the price of liveness, paid knowingly
+        tel_rows = telemetry_rows(rounds=64, chunk=16)
+        assert (tel_rows[1]["us_per_round"]
+                <= 1.15 * tel_rows[0]["us_per_round"])
     else:
         ks = tuple(k for k in KS if k <= 256) if args.quick else KS
         dtypes = ("float32",) if args.quick else DTYPES
@@ -451,6 +552,7 @@ def main():
         cs = casestudy_eq11(codecs)
         loop_rows = rounds_loop_rows()
         drop_rows = dropout_rows()
+        tel_rows = telemetry_rows()
     payload = {
         "bench": "consensus_scale",
         "backend": jax.default_backend(),
@@ -463,6 +565,7 @@ def main():
         "casestudy_eq11": cs,
         "rounds_loop": loop_rows,
         "dropout_rows": drop_rows,
+        "telemetry_rows": tel_rows,
     }
     if args.smoke:
         payload["smoke"] = True

@@ -12,9 +12,11 @@ three layers:
 * **Layer 1 — jaxpr** (:mod:`.jaxpr_audit`): walks the jaxprs/compiled
   executables of the programs in ``scanloop.registered_programs()`` and
   of ``engine.scan_rounds`` for all four plans.
-  Rules: JX1 (no host callbacks in cached programs), JX2 (no
+  Rules: JX1 (no data callbacks in cached programs), JX2 (no
   decode-then-combine on sparse/sharded wires), JX3 (donation honored
-  in the executable's ``input_output_alias``).
+  in the executable's ``input_output_alias``), JX4 (no streaming
+  telemetry ``debug_callback`` in cached programs — streaming
+  drivers build per call, uncached).
 * **Layer 2 — HLO** (:mod:`.hlo_audit`): parses optimized modules with
   the ``launch/hlo_analysis`` collective/shape parser.
   Rules: H1 (no (K, K) buffer at K >= 4096 on the sharded plan), H2

@@ -1,16 +1,15 @@
 """Layer 1 — jaxpr audits of the engine's compiled round programs.
 
-Three rules, each checked against the ARTIFACT the drivers dispatch
+Four rules, each checked against the ARTIFACT the drivers dispatch
 (the registered program's own jaxpr / compiled executable, re-derived
 from :func:`repro.core.scanloop.registered_programs`), never against a
 reimplementation:
 
-JX1  no host callbacks inside a CACHED program: ``pure_callback`` /
-     ``debug_callback`` / ``io_callback`` primitives in a program
-     admitted to ``scanloop.cached_program`` replay one host state
-     against many cache hits (the impure-sampler fallback is exactly
-     the case the drivers must never cache — see
-     ``_scan_round_program``).
+JX1  no data callbacks inside a CACHED program: ``pure_callback`` /
+     ``io_callback`` primitives in a program admitted to
+     ``scanloop.cached_program`` replay one host state against many
+     cache hits (the impure-sampler fallback is exactly the case the
+     drivers must never cache — see ``_scan_round_program``).
 JX2  no decode-then-combine on the sparse/sharded paths: the Eq.-(6)
      combine must gather WIRE lanes (int8/int4 stay integer through the
      gather; dequant fuses inside the combine). A ``gather`` whose
@@ -21,11 +20,18 @@ JX3  donation honored: for every program built with ``donate_argnums``,
      the compiled executable's ``input_output_alias`` directive must
      cover every donated leaf — XLA drops donation SILENTLY (no Python
      warning) when shapes fail to pair up, doubling peak memory.
+JX4  no streaming telemetry inside a CACHED program: a
+     ``debug_callback`` (the ``repro.telemetry`` streaming emitter)
+     closes over host sink state, so the drivers must build streaming
+     programs per call and never admit them to the cache — a cached
+     one would replay a dead run's sinks against every later hit.
+     (Buffered telemetry rows are pure scan outputs and cache fine.)
 
 ``run_jaxpr_audit()`` drives tiny FL/MAML configurations through the
-real chunked drivers to populate the program registry, audits every
-registered record, then traces ``engine.scan_rounds`` for all four
-plans (× int8 / top-k wires on the sparse/sharded paths) for JX1/JX2.
+real chunked drivers — telemetry off, buffered, and streaming — to
+populate the program registry, audits every registered record, then
+traces ``engine.scan_rounds`` for all four plans (× int8 / top-k wires
+on the sparse/sharded paths) for JX1/JX2.
 """
 from __future__ import annotations
 
@@ -33,6 +39,8 @@ from typing import List, Optional
 
 from repro.analysis.findings import Finding
 
+#: JX4 domain: the streaming-telemetry emitter primitive.
+_STREAMING_PRIMS = {"debug_callback"}
 _CALLBACK_PRIMS = {"pure_callback", "debug_callback", "io_callback"}
 _INT_WIRE_DTYPES = {"int4", "uint4", "int8", "uint8"}
 _PASSTHROUGH = {"reshape", "transpose", "broadcast_in_dim", "squeeze",
@@ -244,7 +252,7 @@ def check_donation(fn, donate_argnums, abstract_args, *,
 # ---------------------------------------------------------------------------
 
 def audit_registered_programs(records=None) -> List[Finding]:
-    """JX1 + JX3 over the scanloop program registry."""
+    """JX1 + JX3 + JX4 over the scanloop program registry."""
     import jax
     from repro.core import scanloop
     findings: List[Finding] = []
@@ -261,11 +269,22 @@ def audit_registered_programs(records=None) -> List[Finding]:
             continue
         if rec.cache_key is not None:
             for prim, f, ln in find_callbacks(closed):
-                findings.append(Finding(
-                    "JX1", f, ln,
-                    f"{prim} inside CACHED program {rec.name!r} "
-                    f"(cache key {rec.cache_key[0]!r}) — impure programs "
-                    "must never be admitted to scanloop.cached_program"))
+                if any(s in prim for s in _STREAMING_PRIMS):
+                    findings.append(Finding(
+                        "JX4", f, ln,
+                        f"{prim} inside CACHED program {rec.name!r} "
+                        f"(cache key {rec.cache_key[0]!r}) — streaming "
+                        "telemetry callbacks close over host sinks, so "
+                        "the drivers must build streaming programs per "
+                        "call and never admit them to "
+                        "scanloop.cached_program"))
+                else:
+                    findings.append(Finding(
+                        "JX1", f, ln,
+                        f"{prim} inside CACHED program {rec.name!r} "
+                        f"(cache key {rec.cache_key[0]!r}) — impure "
+                        "programs must never be admitted to "
+                        "scanloop.cached_program"))
         if rec.donate_argnums:
             findings.extend(check_donation(
                 rec.fn, rec.donate_argnums, rec.abstract_args,
@@ -275,9 +294,12 @@ def audit_registered_programs(records=None) -> List[Finding]:
 
 def _tiny_drivers():
     """Drive minimal FL + MAML configurations through the REAL chunked
-    drivers so the registry holds the programs tier-1 actually runs."""
+    drivers so the registry holds the programs tier-1 actually runs —
+    telemetry off, buffered (cached, must audit clean), and streaming
+    (never cached, so JX4 stays silent on the live tree)."""
     import jax
     import jax.numpy as jnp
+    from repro import telemetry as telemetry_lib
     from repro.core import federated, maml, topology as topo_lib
     from repro.core.engine import ConsensusEngine
 
@@ -307,6 +329,18 @@ def _tiny_drivers():
         loss_fn, stacked, sample_batches, engine, 0.1,
         target_fn=target_fn, max_rounds=2, key=jax.random.PRNGKey(0),
         chunk=2)
+    # buffered telemetry: rows ride the ys, program is cached under the
+    # telemetry-extended key and must re-audit callback-free (JX1/JX4)
+    federated.run_fl_until_scan(
+        loss_fn, stacked, sample_batches, engine, 0.1,
+        target_fn=target_fn, max_rounds=2, key=jax.random.PRNGKey(0),
+        chunk=2, telemetry=telemetry_lib.Telemetry())
+    # streaming telemetry: the debug_callback program is built per call
+    # and never admitted to the cache — nothing for JX4 to flag
+    federated.run_fl_until_scan(
+        loss_fn, stacked, sample_batches, engine, 0.1,
+        target_fn=target_fn, max_rounds=2, key=jax.random.PRNGKey(0),
+        chunk=2, telemetry=telemetry_lib.Telemetry(mode="streaming"))
 
     def sample_tasks(key, t):
         ks = jax.random.split(key, 2)
@@ -347,8 +381,10 @@ def audit_engine_plans(k: int = 8) -> List[Finding]:
             closed = jax.make_jaxpr(
                 lambda p: eng.scan_rounds(p, rounds=2))(params)
             for prim, f, ln in find_callbacks(closed):
+                rule = ("JX4" if any(s in prim for s in _STREAMING_PRIMS)
+                        else "JX1")
                 findings.append(Finding(
-                    "JX1", f, ln,
+                    rule, f, ln,
                     f"{prim} inside {label} — scan_rounds programs are "
                     "cached by the chunked drivers and must stay pure"))
             if not meta["int_lane_gather"]:

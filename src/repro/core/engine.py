@@ -414,7 +414,7 @@ class ConsensusEngine:
             error_feedback=False)
 
     def scan_rounds(self, stacked_params, codec_state=None, keys=None, *,
-                    rounds: Optional[int] = None, t0=0):
+                    rounds: Optional[int] = None, t0=0, telemetry=None):
         """Run many Eq.-(6) rounds inside ONE ``jax.lax.scan`` program.
 
         ``keys``: optional (R, …) stacked PRNG keys, one per round
@@ -439,6 +439,16 @@ class ConsensusEngine:
         is generated IN-SCAN from the folded process key; no host-side
         per-round graph prefetch, and the masks are bit-identical to the
         host ``topology.dropout`` stream.
+
+        ``telemetry`` (:class:`repro.telemetry.Telemetry`) records one
+        row per round (Eq.-(11) joules by link class from the round's
+        ACTUAL surviving links, disagreement, wire bits): buffered mode
+        stays pure (rows ride the scan outputs, ingested host-side
+        right here — so the call must run OUTSIDE any caller jit);
+        streaming mode additionally emits each round live via
+        ``jax.debug.callback``. Params/state are bit-identical with
+        telemetry off, buffered, or streaming: the rows read the round
+        state, the mixing consumes the same mask either way.
         """
         if keys is None and rounds is None:
             raise ValueError("pass per-round keys or rounds=")
@@ -451,20 +461,40 @@ class ConsensusEngine:
         R = (int(rounds) if keys is None
              else jax.tree.leaves(keys)[0].shape[0])
         ts = (t0 + jnp.arange(R, dtype=jnp.int32)
-              if self.graph.kind != "static" else None)
+              if self.graph.kind != "static" or telemetry is not None
+              else None)
+        recorder = (telemetry.recorder_for(self)
+                    if telemetry is not None else None)
+        stream_cb = (telemetry.stream_cb(recorder, "consensus")
+                     if telemetry is not None and telemetry.streaming
+                     else None)
 
         def body(carry, xs):
             t, k = xs
-            p, st = self.step(carry[0], carry[1], k, t=t)
-            return (p, st), None
+            # telemetry draws the round's mask ONCE and shares it with
+            # step() (mask= takes precedence over t=; identical ops, so
+            # results match the telemetry-off t= path bit for bit)
+            mask = (self.round_mask(t)
+                    if telemetry is not None and t is not None else None)
+            p, st = self.step(carry[0], carry[1], k, t=t, mask=mask)
+            row = None
+            if telemetry is not None:
+                row = recorder.row(p, mask, metric=jnp.float32(0.0),
+                                   reached=jnp.asarray(False),
+                                   live=jnp.asarray(True))
+                if stream_cb is not None:
+                    jax.debug.callback(stream_cb, t, row, ordered=True)
+            return (p, st), row
 
         if ts is None and keys is None:
-            (p, st), _ = jax.lax.scan(
+            (p, st), rows = jax.lax.scan(
                 lambda c, _x: body(c, (None, None)),
                 (stacked_params, codec_state), None, length=R)
         else:
-            (p, st), _ = jax.lax.scan(
+            (p, st), rows = jax.lax.scan(
                 body, (stacked_params, codec_state), (ts, keys))
+        if telemetry is not None:
+            telemetry.record_rounds(recorder, rows, t0, driver="consensus")
         return p, st
 
     # -- Eq.-(11) pricing ---------------------------------------------------

@@ -33,7 +33,7 @@ def local_steps(loss_fn, params, batches, lr: float):
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
                            engine, lr: float,
                            codec=None, codec_state=None, key=None,
-                           t=None):
+                           t=None, mask=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step through the engine.
 
@@ -49,7 +49,12 @@ def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
     stochastic rounding. ``t`` (round index, may be traced) drives
     engines with a time-varying
     :class:`~repro.core.topology.GraphProcess`: the round mixes over
-    round ``t``'s surviving links (ignored by static engines).
+    round ``t``'s surviving links (ignored by static engines). ``mask``
+    passes that round's survival mask explicitly when the caller
+    already holds it (the telemetry path draws it once and shares it
+    between the mixing and the metrics row); ``engine.step`` gives an
+    explicit mask precedence over ``t``, and the mask-bearing ops are
+    the same either way, so results are bit-identical.
     """
     engine = ConsensusEngine.wrap(engine, codec=codec)
     new_params = jax.vmap(
@@ -57,7 +62,8 @@ def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
                                                      stacked_batches)
     # static engines ignore t (round_mask is None), so the traced
     # program is unchanged for them
-    params, state = engine.step(new_params, codec_state, key, t=t)
+    params, state = engine.step(new_params, codec_state, key, t=t,
+                                mask=mask)
     if engine.codec is None:
         return params
     return params, state
@@ -84,7 +90,8 @@ def fedavg_round(loss_fn, global_params, stacked_batches, weights,
 
 def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                      target_fn, stacked_params, key, max_rounds: int,
-                     eval_every: int):
+                     eval_every: int, telemetry=None,
+                     telemetry_extra=None):
     """The ONE compiled FL round-loop program both drivers share: local
     SGD + ``engine.step`` + in-scan ``target_fn`` evaluation per round,
     with a ``lax.cond`` that FREEZES the carry (params, EF codec state,
@@ -127,14 +134,32 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
     that skipped it would shift the stream between the first and repeat
     invocations — impure round functions keep the per-call probe (and
     re-trace) the legacy drivers always had.
+
+    Telemetry (:class:`repro.telemetry.Telemetry`): BUFFERED mode adds
+    one pure per-round metrics row to the scan outputs (exact surviving
+    per-class link counts, disagreement, metric, reached/live flags) —
+    the program stays cache-admissible under a key extended with
+    ``telemetry.trace_signature()`` so it never collides with the
+    telemetry-off entry. STREAMING mode additionally plants a
+    ``jax.debug.callback`` in the body; that callback closes over host
+    state, so streaming programs are built per call and NEVER cached
+    (rule JX4 audits that no cached program contains one).
     """
+    streaming = telemetry is not None and telemetry.streaming
     cache_key = ("fl_chunk", loss_fn, sample_batches, target_fn, engine,
                  float(lr), int(max_rounds), int(eval_every),
                  scanloop.tree_signature(stacked_params))
-    cached = scanloop.get_cached_program(cache_key)
-    if cached is not None:
-        return cached                  # hit: skip the probes entirely
+    if telemetry is not None:
+        cache_key = cache_key + (telemetry.trace_signature(),)
+    if not streaming:
+        cached = scanloop.get_cached_program(cache_key)
+        if cached is not None:
+            return cached              # hit: skip the probes entirely
     has_codec = engine.codec is not None
+    recorder = (telemetry.recorder_for(engine)
+                if telemetry is not None else None)
+    stream_cb = (telemetry.stream_cb(recorder, "fl", telemetry_extra)
+                 if streaming else None)
     sampler, sampler_traced = scanloop.traceable(
         sample_batches, key, jnp.int32(0), name="sample_batches")
     tfn, target_traced = scanloop.traceable(target_fn, stacked_params,
@@ -148,14 +173,20 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                 p, st, k, _ = c
                 k, sk = jax.random.split(k)
                 batches = sampler(sk, t)
+                # telemetry shares ONE survival mask between the round's
+                # mixing and its row; engine.step gives mask= precedence
+                # over t=, so the mask-bearing ops are identical to the
+                # telemetry-off t= path (bit-parity)
+                mask = (engine.round_mask(t) if telemetry is not None
+                        else None)
                 if has_codec:
                     k, ck = jax.random.split(k)
                     p, st = decentralized_fl_round(
                         loss_fn, p, batches, engine, lr, codec_state=st,
-                        key=ck, t=t)
+                        key=ck, t=t, mask=mask)
                 else:
                     p = decentralized_fl_round(loss_fn, p, batches, engine,
-                                               lr, t=t)
+                                               lr, t=t, mask=mask)
                 if eval_every == 1:
                     r, metric = tfn(p)
                     hit = jnp.asarray(r, bool)
@@ -176,13 +207,26 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                                           metric_sds.dtype))
 
                     hit, metric = jax.lax.cond(do_eval, evaluate, skip, p)
-                return ((p, st, k, hit),
-                        (hit, do_eval,
-                         jnp.asarray(metric, metric_sds.dtype)))
+                ys = (hit, do_eval, jnp.asarray(metric, metric_sds.dtype))
+                if telemetry is not None:
+                    row = recorder.row(
+                        p, mask,
+                        metric=jnp.mean(jnp.asarray(metric, jnp.float32)),
+                        reached=hit, live=jnp.asarray(True))
+                    if stream_cb is not None:
+                        jax.debug.callback(stream_cb, t, row, ordered=True)
+                    ys = ys + (row,)
+                return (p, st, k, hit), ys
 
             def frozen(c):
-                return c, (c[3], jnp.asarray(False),
-                           jnp.zeros(metric_sds.shape, metric_sds.dtype))
+                ys = (c[3], jnp.asarray(False),
+                      jnp.zeros(metric_sds.shape, metric_sds.dtype))
+                if telemetry is not None:
+                    row = recorder.frozen_row()
+                    if stream_cb is not None:
+                        jax.debug.callback(stream_cb, t, row, ordered=True)
+                    ys = ys + (row,)
+                return c, ys
 
             pred = jnp.logical_and(jnp.logical_not(carry[3]),
                                    t < max_rounds)
@@ -196,18 +240,21 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
 
         return scanloop.donating_jit(run_chunk, donate_argnums=(0, 1))
 
-    if not (sampler_traced and target_traced):
-        return build()                 # impure round fns: never cached
+    if streaming or not (sampler_traced and target_traced):
+        # streaming telemetry (host-closing debug_callback) and impure
+        # round fns: built per call, never cached (JX1/JX4 domain)
+        return build()
     return scanloop.cached_program(cache_key, build)
 
 
 def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
                     target_fn, max_rounds, key, eval_every, codec, chunk,
-                    return_state):
+                    return_state, telemetry=None, telemetry_extra=None):
     """Shared chunked loop behind :func:`run_fl_until` (chunk=1) and
     :func:`run_fl_until_scan`: one program dispatch and ONE host sync
-    (the chunk's reached mask + metric row) per chunk, early exit
-    between chunks when any round hit."""
+    (the chunk's reached mask + metric row, plus the telemetry rows
+    when enabled) per chunk, early exit between chunks when any round
+    hit."""
     engine = ConsensusEngine.wrap(engine, codec=codec)
     # copy-on-entry (donating backends only): donation then consumes
     # driver-owned buffers, never the caller's pytree
@@ -218,7 +265,10 @@ def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
     run_chunk = _fl_scan_program(
         loss_fn, engine, lr, sample_batches=sample_batches,
         target_fn=target_fn, stacked_params=stacked_params, key=key,
-        max_rounds=max_rounds, eval_every=eval_every)
+        max_rounds=max_rounds, eval_every=eval_every,
+        telemetry=telemetry, telemetry_extra=telemetry_extra)
+    recorder = (telemetry.recorder_for(engine)
+                if telemetry is not None else None)
 
     history = []
     rounds_used = max_rounds
@@ -227,7 +277,10 @@ def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
         ts = jnp.arange(start, start + chunk, dtype=jnp.int32)
         (stacked_params, codec_state, key, reached), ys = run_chunk(
             stacked_params, codec_state, key, reached, ts)
-        hits, evaled, metrics = (np.asarray(y) for y in ys)  # ONE sync
+        hits, evaled, metrics = (np.asarray(y) for y in ys[:3])  # ONE sync
+        if telemetry is not None:
+            telemetry.record_rounds(recorder, ys[3], start, driver="fl",
+                                    extra=telemetry_extra)
         history.extend(float(m) for m, v in zip(metrics, evaled) if v)
         h = scanloop.first_hit(hits)
         if h is not None:
@@ -241,7 +294,8 @@ def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
 def run_fl_until(loss_fn, stacked_params, sample_batches, engine,
                  lr: float, *, target_fn: Callable, max_rounds: int, key,
                  eval_every: int = 1, codec=None,
-                 return_state: bool = False):
+                 return_state: bool = False, telemetry=None,
+                 telemetry_extra=None):
     """Drive decentralized FL rounds until ``target_fn(stacked_params) >=
     target`` (it returns (reached: bool, metric)) or ``max_rounds``.
 
@@ -267,13 +321,15 @@ def run_fl_until(loss_fn, stacked_params, sample_batches, engine,
         loss_fn, stacked_params, sample_batches, engine, lr,
         target_fn=target_fn, max_rounds=max_rounds, key=key,
         eval_every=eval_every, codec=codec, chunk=1,
-        return_state=return_state)
+        return_state=return_state, telemetry=telemetry,
+        telemetry_extra=telemetry_extra)
 
 
 def run_fl_until_scan(loss_fn, stacked_params, sample_batches, engine,
                       lr: float, *, target_fn: Callable, max_rounds: int,
                       key, eval_every: int = 1, codec=None,
-                      chunk: int = 32, return_state: bool = False):
+                      chunk: int = 32, return_state: bool = False,
+                      telemetry=None, telemetry_extra=None):
     """Device-resident :func:`run_fl_until`: ``chunk`` FL rounds (local
     SGD + ``engine.step`` + in-scan ``target_fn`` evaluation) per
     compiled ``lax.scan`` program, ONE host sync per chunk instead of
@@ -300,9 +356,20 @@ def run_fl_until_scan(loss_fn, stacked_params, sample_batches, engine,
     buffers on backends with donation support, so K-stacked populations
     update in place instead of doubling peak memory (never reuse the
     pytrees passed in — scanloop's donation invariant).
+
+    ``telemetry`` (a :class:`repro.telemetry.Telemetry`) records one
+    row per round — Eq.-(11) joules by link class, wire bits,
+    surviving-edge counts, disagreement, reached flags — synced once
+    per chunk (buffered mode, pure, cache-admissible) or additionally
+    emitted live per round via ``jax.debug.callback`` (streaming mode,
+    program built per call and never cached). Round results are
+    bit-identical with telemetry off, buffered, or streaming.
+    ``telemetry_extra``: optional dict merged into every emitted event
+    (e.g. ``{"task_id": i}``).
     """
     return _run_fl_chunked(
         loss_fn, stacked_params, sample_batches, engine, lr,
         target_fn=target_fn, max_rounds=max_rounds, key=key,
         eval_every=eval_every, codec=codec, chunk=chunk,
-        return_state=return_state)
+        return_state=return_state, telemetry=telemetry,
+        telemetry_extra=telemetry_extra)

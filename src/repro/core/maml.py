@@ -98,7 +98,7 @@ def maml_meta_step(loss_fn: Callable, meta_params, support, query, *,
 
 def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
                         inner_lr: float, outer_lr: float, inner_steps: int,
-                        first_order: bool):
+                        first_order: bool, telemetry=None):
     """The ONE compiled MAML round-loop program both drivers share.
 
     Data is sampled INSIDE the scan from per-round derived keys (the
@@ -129,14 +129,26 @@ def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
     ``pure_callback`` fallback) are never cached — the probe consumes
     elements from stateful host samplers, and skipping it on a cache
     hit would shift their stream between invocations.
+
+    Telemetry: the per-round metrics (``meta_loss`` etc.) ALREADY ride
+    the scan outputs, so BUFFERED telemetry needs no program change at
+    all — the drivers ingest the same stacked metrics host-side and the
+    cache key is untouched (buffered runs share the telemetry-off
+    program). STREAMING telemetry plants a ``jax.debug.callback`` in
+    the body that emits each round's meta-loss live; that callback
+    closes over host state, so streaming programs are built per call
+    and never cached (rule JX4).
     """
+    streaming = telemetry is not None and telemetry.streaming
     cache_key = ("maml_chunk", loss_fn, sample_tasks, float(inner_lr),
                  float(outer_lr), int(inner_steps), bool(first_order))
-    cached = scanloop.get_cached_program(cache_key)
-    if cached is not None:
-        return cached                  # hit: skip the probe entirely
+    if not streaming:
+        cached = scanloop.get_cached_program(cache_key)
+        if cached is not None:
+            return cached              # hit: skip the probe entirely
     sampler, sampler_traced = scanloop.traceable(
         sample_tasks, key, jnp.int32(0), name="sample_tasks")
+    stream_cb = telemetry.maml_stream_cb() if streaming else None
 
     def build():
         step = functools.partial(
@@ -148,6 +160,9 @@ def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
             k, sk = jax.random.split(k)
             support, query = sampler(sk, t)
             p, m = step(p, support, query)
+            if stream_cb is not None:
+                jax.debug.callback(stream_cb, t, m["meta_loss"],
+                                   m["meta_grad_norm"], ordered=True)
             return (p, k), m
 
         def run_chunk(p, k, ts):
@@ -156,8 +171,9 @@ def _scan_round_program(loss_fn: Callable, sample_tasks: Callable, key, *,
 
         return scanloop.donating_jit(run_chunk, donate_argnums=(0,))
 
-    if not sampler_traced:
-        return build()                 # impure sampler: never cached
+    if streaming or not sampler_traced:
+        # streaming telemetry / impure sampler: never cached
+        return build()
     return scanloop.cached_program(cache_key, build)
 
 
@@ -195,7 +211,7 @@ def maml_train(loss_fn: Callable, meta_params, sample_tasks: Callable,
 def maml_train_scan(loss_fn: Callable, meta_params, sample_tasks: Callable,
                     *, rounds: int, inner_lr: float, outer_lr: float,
                     inner_steps: int = 1, first_order: bool = True,
-                    key=None, chunk: int = 32):
+                    key=None, chunk: int = 32, telemetry=None):
     """Device-resident MAML driver: ``chunk`` rounds per compiled program.
 
     Bit-identical to :func:`maml_train` — same PRNG stream (the key is
@@ -207,7 +223,13 @@ def maml_train_scan(loss_fn: Callable, meta_params, sample_tasks: Callable,
     :func:`_scan_round_program` for the traced-sampler contract and the
     buffer-donation invariant. ``rounds`` need not be a multiple of
     ``chunk`` (the remainder runs as one shorter scan — at most two
-    compiled programs in total)."""
+    compiled programs in total).
+
+    ``telemetry`` records one meta-round event per round from the
+    chunk's stacked metrics (buffered mode reuses the telemetry-off
+    program — metrics already ride the scan outputs; streaming mode
+    emits each round live via ``jax.debug.callback`` from an uncached
+    program). Params and history stay bit-identical in every mode."""
     key = key if key is not None else jax.random.PRNGKey(0)
     if rounds <= 0:
         return meta_params, []
@@ -215,10 +237,15 @@ def maml_train_scan(loss_fn: Callable, meta_params, sample_tasks: Callable,
     meta_params = scanloop.own(meta_params)    # donation never touches
     run_chunk = _scan_round_program(           # the caller's pytree
         loss_fn, sample_tasks, key, inner_lr=inner_lr, outer_lr=outer_lr,
-        inner_steps=inner_steps, first_order=first_order)
+        inner_steps=inner_steps, first_order=first_order,
+        telemetry=telemetry)
     history = []
     for start in range(0, rounds, chunk):
         ts = jnp.arange(start, min(start + chunk, rounds), dtype=jnp.int32)
         (meta_params, key), ms = run_chunk(meta_params, key, ts)
+        if telemetry is not None:
+            telemetry.record_maml_rounds(
+                {"meta_loss": ms["meta_loss"],
+                 "meta_grad_norm": ms["meta_grad_norm"]}, start)
         history.extend(float(x) for x in np.asarray(ms["meta_loss"]))
     return meta_params, history

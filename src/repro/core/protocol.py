@@ -101,6 +101,13 @@ class MTLProtocol:
                     bit-identical to ``chunk=1`` (the host-loop
                     fallback). Samplers/target_fn that don't trace fall
                     back to ``jax.pure_callback`` transparently.
+    telemetry:      optional :class:`repro.telemetry.Telemetry` threaded
+                    through BOTH stages — meta rounds land as ``maml``
+                    events, every task's FL rounds as ``fl`` events
+                    tagged ``task_id`` (so the per-task Eq.-(11) ledger
+                    ``telemetry.joules(task_id=i)`` reconciles with the
+                    post-hoc billing). Results are bit-identical with
+                    telemetry off, buffered, or streaming.
     """
 
     def __init__(self, *, loss_fn, init_fn, network: ClusterNetwork,
@@ -109,7 +116,7 @@ class MTLProtocol:
                  inner_steps=1, fl_local_steps=20,
                  first_order=True,
                  energy_params: Optional[energy.EnergyParams] = None,
-                 codec=None, chunk: int = 16):
+                 codec=None, chunk: int = 16, telemetry=None):
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.net = network
@@ -123,6 +130,7 @@ class MTLProtocol:
         self.fl_local_steps = fl_local_steps
         self.first_order = first_order
         self.chunk = max(int(chunk), 1)
+        self.telemetry = telemetry
         self.energy_params = energy_params or energy.paper_calibrated()
         if not first_order:
             self.energy_params = dataclasses.replace(
@@ -136,6 +144,10 @@ class MTLProtocol:
         self.cluster_topology = network.cluster_topology()
         self.engine = ConsensusEngine(self.cluster_topology, codec=codec)
         self.codec = self.engine.codec
+        if self.telemetry is not None:
+            # pre-register with THIS protocol's billing constants so the
+            # streamed ledger prices like ProtocolResult does
+            self.telemetry.recorder_for(self.engine, self.energy_params)
 
     # -- stage 1 ------------------------------------------------------------
     def meta_train(self, key, t0: int):
@@ -163,7 +175,7 @@ class MTLProtocol:
             self.loss_fn, meta_params, sample_tasks, rounds=t0,
             inner_lr=self.inner_lr, outer_lr=self.outer_lr,
             inner_steps=self.inner_steps, first_order=self.first_order,
-            key=kdata, chunk=self.chunk)
+            key=kdata, chunk=self.chunk, telemetry=self.telemetry)
 
     # -- stage 2 ------------------------------------------------------------
     def adapt_task(self, key, task_id: int, init_params, *,
@@ -190,7 +202,9 @@ class MTLProtocol:
         return federated.run_fl_until_scan(
             self.loss_fn, stacked, sample_batches, self.engine,
             self.fl_lr, target_fn=target, max_rounds=max_rounds, key=key,
-            chunk=self.chunk)
+            chunk=self.chunk, telemetry=self.telemetry,
+            telemetry_extra=({"task_id": int(task_id)}
+                             if self.telemetry is not None else None))
 
     # -- full protocol --------------------------------------------------------
     def run(self, key, t0: int, *, max_rounds: int = 500) -> ProtocolResult:

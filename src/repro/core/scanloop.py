@@ -228,6 +228,42 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 PROGRAM_CACHE_SIZE = 32
 _program_cache: "collections.OrderedDict" = collections.OrderedDict()
 
+#: program-cache counters ("hits", "misses", "inserts", "evictions") —
+#: the runtime-inspectable complement to :data:`TRACE_COUNTS`. Bumped by
+#: :func:`get_cached_program` / :func:`cached_program`; read them
+#: through :func:`cache_stats`, not directly.
+CACHE_STATS: collections.Counter = collections.Counter()
+
+
+def cache_stats() -> dict:
+    """Snapshot of the compiled-program cache counters plus registry
+    size — the harness half of ``telemetry.report()``.
+
+    Returns a plain dict: ``hits`` / ``misses`` (from the drivers'
+    :func:`get_cached_program` probes), ``inserts`` / ``evictions``
+    (from :func:`cached_program`), ``size`` / ``capacity`` (current LRU
+    occupancy), ``registered_programs`` (live :class:`ProgramRecord`
+    count), and ``trace_counts`` (a dict copy of
+    :data:`TRACE_COUNTS`)."""
+    return {
+        "hits": CACHE_STATS["hits"],
+        "misses": CACHE_STATS["misses"],
+        "inserts": CACHE_STATS["inserts"],
+        "evictions": CACHE_STATS["evictions"],
+        "size": len(_program_cache),
+        "capacity": PROGRAM_CACHE_SIZE,
+        "registered_programs": len(registered_programs()),
+        "trace_counts": dict(TRACE_COUNTS),
+    }
+
+
+def reset_cache_stats():
+    """Zero the hit/miss/eviction counters AND :data:`TRACE_COUNTS`
+    (tests, benchmark sections). Does NOT drop cached programs — use
+    :func:`clear_program_cache` for that."""
+    CACHE_STATS.clear()
+    TRACE_COUNTS.clear()
+
 
 def tree_signature(tree):
     """Hashable (treedef, ((shape, dtype), …)) signature of a pytree —
@@ -237,11 +273,11 @@ def tree_signature(tree):
                            for x in leaves))
 
 
-def get_cached_program(key):
-    """Cached program for ``key`` (LRU-bumped), or None. Drivers check
-    this BEFORE probing their round functions, so cache hits skip the
-    per-call ``traceable``/``eval_shape`` probes too — an entry only
-    exists if the probe verdict was 'traced' when it was built."""
+def _cache_lookup(key):
+    """LRU-bumping lookup WITHOUT touching :data:`CACHE_STATS` — the
+    shared primitive under :func:`get_cached_program` (which counts) and
+    :func:`cached_program` (whose driver already counted its probe, so
+    re-counting here would double every miss)."""
     try:
         fn = _program_cache.pop(key)       # move-to-end on hit
     except KeyError:
@@ -250,21 +286,38 @@ def get_cached_program(key):
     return fn
 
 
+def get_cached_program(key):
+    """Cached program for ``key`` (LRU-bumped), or None. Drivers check
+    this BEFORE probing their round functions, so cache hits skip the
+    per-call ``traceable``/``eval_shape`` probes too — an entry only
+    exists if the probe verdict was 'traced' when it was built. Each
+    probe bumps ``hits`` or ``misses`` in :data:`CACHE_STATS`."""
+    fn = _cache_lookup(key)
+    CACHE_STATS["hits" if fn is not None else "misses"] += 1
+    return fn
+
+
 def cached_program(key, build: Callable):
     """Memoize a compiled chunk program (LRU, size
     :data:`PROGRAM_CACHE_SIZE`). ``key`` must be a hashable tuple
     covering EVERYTHING the trace bakes in (see the module docstring for
     the convention the drivers use); ``build()`` constructs the jitted
-    program on a miss. Returns the cached callable."""
-    fn = get_cached_program(key)
+    program on a miss. Returns the cached callable.
+
+    Admissions bump ``inserts`` and LRU drops bump ``evictions`` in
+    :data:`CACHE_STATS` (the lookup itself is stats-silent — drivers
+    count their entry probe via :func:`get_cached_program`)."""
+    fn = _cache_lookup(key)
     if fn is None:
         fn = build()
         rec = getattr(fn, "_program_record", None)
         if rec is not None:
             rec.cache_key = key        # audit: this program was admitted
+        CACHE_STATS["inserts"] += 1
     _program_cache[key] = fn
     while len(_program_cache) > PROGRAM_CACHE_SIZE:
         _program_cache.popitem(last=False)
+        CACHE_STATS["evictions"] += 1
     return fn
 
 

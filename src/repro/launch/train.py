@@ -80,7 +80,8 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     energy_params=None, consensus_dtype=None,
                     consensus_plan: str = "auto", codec=None, mesh=None,
                     chunk: int = 1, dropout_p: float = 0.0,
-                    dropout_seed: int = 0):
+                    dropout_seed: int = 0, telemetry=None,
+                    metrics_path=None):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
@@ -106,6 +107,17 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     generated in-scan from the folded ``dropout_seed`` key (any maskable
     plan; the modeled Eq.-(11) estimate still prices the full graph —
     an upper bound under fading).
+
+    ``telemetry`` (:class:`repro.telemetry.Telemetry`) records one row
+    per round — Eq.-(11) joules by link class over the round's ACTUAL
+    surviving links, wire bits, disagreement — synced once per chunk
+    (buffered; streaming mode also emits live via
+    ``jax.debug.callback``). ``metrics_path`` is the shorthand the
+    ``--metrics out.jsonl`` CLI flag uses: a buffered Telemetry with a
+    JSONL sink is created (and closed) here, giving a round-by-round
+    energy ledger that a dropout run's summed stream reconciles with
+    exactly. Loss curves and params are bit-identical with telemetry
+    off, buffered, or streaming.
     """
     assert agents % tasks == 0
     per = agents // tasks
@@ -147,7 +159,7 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         p, _ = jax.lax.scan(one, p, b)
         return p
 
-    def fl_round(stacked, codec_state, key, t):
+    def fl_round(stacked, codec_state, key, t, mask=None):
         # same split as the pre-codec trainer — codec=None runs keep
         # their exact RNG stream (reproducible loss curves); the codec
         # rounding key is folded out of band
@@ -161,17 +173,19 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
 
         batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
+        # mask= (telemetry shares one drawn mask with its metrics row)
+        # takes precedence over t= inside step — identical ops either way
         if codec is not None:
             new, codec_state = engine.step(
                 new, codec_state, jax.random.fold_in(key, agents + 1),
-                t=t)
+                t=t, mask=mask)
         elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
-            mixed, _ = engine.step(cast, t=t)
+            mixed, _ = engine.step(cast, t=t, mask=mask)
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
-            new, _ = engine.step(new, t=t)
+            new, _ = engine.step(new, t=t, mask=mask)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
@@ -185,8 +199,16 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     def fl_body(carry, t):
         stacked, codec_state, key = carry
         key, sk = jax.random.split(key)
-        stacked, codec_state, l = fl_round(stacked, codec_state, sk, t)
-        return (stacked, codec_state, key), l
+        mask = engine.round_mask(t) if tel is not None else None
+        stacked, codec_state, l = fl_round(stacked, codec_state, sk, t,
+                                           mask)
+        if tel is None:
+            return (stacked, codec_state, key), l
+        row = rec.row(stacked, mask, metric=l,
+                      reached=jnp.asarray(False), live=jnp.asarray(True))
+        if stream_cb is not None:
+            jax.debug.callback(stream_cb, t, row, ordered=True)
+        return (stacked, codec_state, key), (l, row)
 
     fl_chunk = scanloop.donating_jit(
         lambda s, cs, k, ts: jax.lax.scan(fl_body, (s, cs, k), ts),
@@ -210,6 +232,18 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     # which under-priced any cluster larger than 2 robots
     cluster_topo = topo_lib.clusters(1, per)
 
+    from repro import telemetry as telemetry_lib
+    tel = telemetry
+    own_tel = tel is None and metrics_path is not None
+    if own_tel:
+        tel = telemetry_lib.Telemetry(
+            sinks=(telemetry_lib.JsonlSink(metrics_path),))
+    # the recorder bills with THIS run's calibrated ep (wire-format
+    # model_bits baked above), over the round's actual surviving links
+    rec = tel.recorder_for(engine, ep) if tel is not None else None
+    stream_cb = (tel.stream_cb(rec, "fl")
+                 if tel is not None and tel.streaming else None)
+
     codec_state = (codec.init_state(stacked)
                    if codec is not None and codec.stateful else None)
     # own(): fl_chunk donates the stacked/EF carries on donating backends
@@ -222,6 +256,9 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         ts = jnp.arange(start, start + n, dtype=jnp.int32)
         (stacked, codec_state, key), ls = fl_chunk(stacked, codec_state,
                                                    key, ts)
+        if tel is not None:
+            ls, rows = ls
+            tel.record_rounds(rec, rows, start, driver="fl")
         for r, l in enumerate(np.asarray(ls), start):   # one sync/chunk
             hist.append(float(l))
             print(f"round {r:3d}  loss {float(l):.4f}")
@@ -233,6 +270,12 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     print(f"estimated FL energy for {rounds} rounds x {tasks} clusters: "
           f"{E / 1e3:.2f} kJ ({wire_mb:.2f} MB per exchange"
           f"{', codec ' + codec.name if codec is not None else ''})")
+    if tel is not None:
+        n_ev = len(tel.events(driver="fl"))
+        print(f"telemetry: {n_ev} round events, measured comm energy "
+              f"{tel.joules() / 1e3:.2f} kJ (per-round Eq.-11 ledger)")
+        if own_tel:
+            tel.close()
     return stacked, hist, E
 
 
@@ -268,6 +311,10 @@ def main():
                          "links, masks generated in-scan "
                          "(repro.core.topology.GraphProcess)")
     ap.add_argument("--dropout-seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
+                    help="write a per-round telemetry event log (JSONL; "
+                         "Eq.-11 joules by link class, wire bits, "
+                         "disagreement — see repro.telemetry.schema)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -284,7 +331,7 @@ def main():
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
             consensus_plan=args.consensus_plan, codec=args.codec,
             chunk=args.chunk, dropout_p=args.dropout_p,
-            dropout_seed=args.dropout_seed)
+            dropout_seed=args.dropout_seed, metrics_path=args.metrics)
 
 
 if __name__ == "__main__":

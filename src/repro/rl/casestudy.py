@@ -147,6 +147,18 @@ class CaseStudy:
     #: round's surviving graph inside the scan from the folded
     #: process key (zero host-side per-round graph prefetch).
     chunk: int = 8
+    #: optional :class:`repro.telemetry.Telemetry`: meta rounds land as
+    #: ``maml`` events, every task's FL rounds as ``fl`` events tagged
+    #: ``task_id`` — one pure metrics row per round rides the scan
+    #: outputs (buffered mode; streaming mode also emits each round
+    #: live via ``jax.debug.callback`` from programs that are never
+    #: cache-admitted). The per-round Eq.-(11) stream prices each
+    #: round's ACTUAL surviving links with this case study's
+    #: ``energy_params``, so ``telemetry.joules(task_id=i)`` equals the
+    #: post-hoc ``last_adapt_comm_joules`` replay EXACTLY under
+    #: dropout. t0/t_i/params are bit-identical with telemetry off,
+    #: buffered, or streaming.
+    telemetry: object = None
 
     def __post_init__(self):
         self.cfg = self.cfg or get_arch("paper-dqn")
@@ -202,10 +214,14 @@ class CaseStudy:
         # chunked stage-1 driver: `chunk` meta rounds per compiled scan
         # program, key split per round exactly like the host loop (same
         # PRNG stream, bit-identical history), losses synced per chunk
-        def meta_body(carry, _t):
+        def meta_body(carry, t):
             p, k = carry
             k, sk = jax.random.split(k)
             p, m = meta_round(p, sk)     # jit-of-jit inlines when traced
+            if self.telemetry is not None and self.telemetry.streaming:
+                jax.debug.callback(self._meta_stream_cb, t,
+                                   m["meta_loss"], m["meta_grad_norm"],
+                                   ordered=True)
             return (p, k), m["meta_loss"]
 
         self._meta_chunk = scanloop.donating_jit(
@@ -230,7 +246,23 @@ class CaseStudy:
             for tid in range(gw.NUM_TASKS)}
         self.engine = self._engines[0]
 
-        def fl_round(task_id, stacked_params, codec_state, key, t):
+        tel = self.telemetry
+        if tel is not None:
+            # recorders carry THIS case study's billing constants (not
+            # the Telemetry default) so the stream reconciles exactly
+            # with the post-hoc last_adapt_comm_joules replay
+            self._recorders = {
+                tid: tel.recorder_for(eng, self.energy_params)
+                for tid, eng in self._engines.items()}
+            if tel.streaming:
+                self._stream_cbs = {
+                    tid: tel.stream_cb(self._recorders[tid], "fl",
+                                       {"task_id": tid})
+                    for tid in self._engines}
+                self._meta_stream_cb = tel.maml_stream_cb()
+
+        def fl_round(task_id, stacked_params, codec_state, key, t,
+                     mask=None):
             # split C+1 exactly as pre-codec (codec=None rounds keep
             # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
@@ -246,11 +278,13 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
+            # mask= (telemetry shares one drawn mask with the metrics
+            # row) takes precedence over t= inside step; identical ops
             new, codec_state = self._engines[task_id].step(
                 new, codec_state,
                 None if self.codec is None
                 else jax.random.fold_in(key, C + 1),
-                t=t)
+                t=t, mask=mask)
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
             return new, codec_state, R
@@ -270,12 +304,30 @@ class CaseStudy:
             def live(c):
                 st, cs, k, _ = c
                 k, sk = jax.random.split(k)
-                st, cs, R = fl_round(task_id, st, cs, sk, t)
+                mask = (self._engines[task_id].round_mask(t)
+                        if tel is not None else None)
+                st, cs, R = fl_round(task_id, st, cs, sk, t, mask)
                 hit = R >= self.r_target
-                return (st, cs, k, hit), (hit, jnp.asarray(True), R)
+                ys = (hit, jnp.asarray(True), R)
+                if tel is not None:
+                    row = self._recorders[task_id].row(
+                        st, mask, metric=R, reached=hit,
+                        live=jnp.asarray(True))
+                    if tel.streaming:
+                        jax.debug.callback(self._stream_cbs[task_id], t,
+                                           row, ordered=True)
+                    ys = ys + (row,)
+                return (st, cs, k, hit), ys
 
             def frozen(c):
-                return c, (c[3], jnp.asarray(False), jnp.float32(0))
+                ys = (c[3], jnp.asarray(False), jnp.float32(0))
+                if tel is not None:
+                    row = self._recorders[task_id].frozen_row()
+                    if tel.streaming:
+                        jax.debug.callback(self._stream_cbs[task_id], t,
+                                           row, ordered=True)
+                    ys = ys + (row,)
+                return c, ys
 
             pred = jnp.logical_and(jnp.logical_not(carry[3]), t < limit)
             return jax.lax.cond(pred, live, frozen, carry)
@@ -305,6 +357,9 @@ class CaseStudy:
             n = min(self.chunk, t0 - start)
             ts = jnp.arange(start, start + n, dtype=jnp.int32)
             (params, kdata), losses = self._meta_chunk(params, kdata, ts)
+            if self.telemetry is not None:
+                self.telemetry.record_maml_rounds(
+                    {"meta_loss": losses}, start)
             hist.extend(float(x) for x in np.asarray(losses))
         return params, hist
 
@@ -344,7 +399,11 @@ class CaseStudy:
             ts = jnp.arange(start, start + self.chunk, dtype=jnp.int32)
             (stacked, codec_state, key, reached), ys = step(
                 stacked, codec_state, key, reached, ts, limit)
-            hits, live_mask, Rs = (np.asarray(y) for y in ys)  # ONE sync
+            hits, live_mask, Rs = (np.asarray(y) for y in ys[:3])  # ONE sync
+            if self.telemetry is not None:
+                self.telemetry.record_rounds(
+                    self._recorders[task_id], ys[3], start, driver="fl",
+                    extra={"task_id": task_id})
             hist.extend(float(r) for r, v in zip(Rs, live_mask) if v)
             h = scanloop.first_hit(hits)
             if h is not None:

@@ -1,0 +1,222 @@
+"""Device-side metric rows and the host-side ring buffer.
+
+The scanned drivers cannot emit anything mid-chunk on the default path —
+a chunk is ONE compiled XLA program (see :mod:`repro.core.scanloop`) —
+so per-round observability has to ride the scan outputs: each round
+appends one fixed-shape ROW (a small dict of scalars) to the chunk's
+stacked ys, and the whole per-round buffer reaches the host in the same
+single device→host sync the driver already pays at the chunk boundary.
+That keeps the buffered path pure (no callbacks → JX1/JX4-clean and
+program-cache-admissible) and bit-parity trivial: the row computation
+reads the round's state, it never feeds back into it.
+
+Two halves live here:
+
+* :class:`RoundRecorder` — built per engine; its :meth:`RoundRecorder.row`
+  runs INSIDE the trace and records only what must be measured on
+  device: exact int32 surviving-link counts per class (from the same
+  ``engine.round_mask(t)`` the mixing consumed — never a re-draw),
+  consensus disagreement ‖x_i − x̄‖, the round's eval metric, and
+  reached/live flags. Everything derivable on the host — Eq.-(11)
+  joules, wire bits — is priced in :meth:`RoundRecorder.finalize` in
+  float64 with the LITERAL :meth:`Topology.round_comm_joules
+  <repro.core.topology.Topology.round_comm_joules>` expression, so the
+  summed stream reconciles EXACTLY (``==``, not ``pytest.approx``) with
+  the post-hoc billing replay in :mod:`repro.rl.casestudy`.
+* :class:`MetricBuffer` — the host ring buffer the finalized events land
+  in; fixed capacity (oldest rounds dropped) or unbounded.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, topology as topo_lib
+
+#: traced per-round row fields, in emission order. ``live`` marks real
+#: rounds (False = the frozen lax.cond branch after the target was hit
+#: or past max_rounds — zero links, excluded from ledgers and sinks).
+ROW_FIELDS = ("live", "reached", "metric", "disagreement",
+              "n_sl", "n_ul", "n_dl")
+
+
+def consensus_disagreement(stacked):
+    """Mean over agents of ‖x_i − x̄‖ (f32, full flattened tree) — the
+    convergence observable of the consensus plans. Traced; runs on the
+    POST-mix params so round r reports the disagreement its own mixing
+    left behind."""
+    leaves = jax.tree.leaves(stacked)
+    K = leaves[0].shape[0]
+    sq = jnp.zeros((K,), jnp.float32)
+    for x in leaves:
+        xf = x.astype(jnp.float32).reshape(K, -1)
+        d = xf - jnp.mean(xf, axis=0, keepdims=True)
+        sq = sq + jnp.sum(d * d, axis=1)
+    return jnp.mean(jnp.sqrt(sq))
+
+
+class RoundRecorder:
+    """Per-engine row maker (traced) + event pricer (host, float64).
+
+    Construction bakes the engine's static billing constants the same
+    way the post-hoc replay computes them: ``bits`` =
+    ``codec.price_bits(p.model_bits)`` (or raw ``model_bits`` uncoded)
+    and the class link masks from ``topology.link_class``. Per-edge
+    heterogeneous pricing (``edge_efficiency``) is refused — in-scan
+    rows carry per-CLASS counts only.
+    """
+
+    def __init__(self, engine, energy_params=None):
+        topo = getattr(engine, "topology", None)
+        if topo is None:
+            raise ValueError(
+                "telemetry needs an engine built from a Topology (raw "
+                "mixing matrices carry no link classes to bill)")
+        if topo.edge_efficiency is not None:
+            raise NotImplementedError(
+                "per-edge efficiencies are priced post-hoc only; in-scan "
+                "telemetry rows carry per-class counts")
+        self.engine = engine
+        self.topology = topo
+        self.codec = engine.codec
+        self.energy_params = (energy_params
+                              or energy.paper_calibrated("fig3"))
+        link_class = np.asarray(topo.link_class)
+        self._class_masks = {
+            "SL": link_class == topo_lib.SL,
+            "UL": link_class == topo_lib.UL,
+            "DL": link_class == topo_lib.DL,
+        }
+        self._static_counts = {k: int(m.sum())
+                               for k, m in self._class_masks.items()}
+        p = self.energy_params
+        bits = p.model_bits
+        if self.codec is not None:
+            bits = self.codec.price_bits(bits)
+        self._priced_bits = float(bits)
+
+    # -- traced (inside the scan body) ----------------------------------
+
+    def row(self, stacked, mask, *, metric, reached, live):
+        """One live round's row. ``mask`` is the surviving-edge mask the
+        round's mixing ACTUALLY used (``None`` on static graphs, where
+        the counts are numpy constants folded into the program)."""
+        if mask is None:
+            counts = {k: jnp.int32(self._static_counts[k])
+                      for k in ("SL", "UL", "DL")}
+        else:
+            counts = {k: jnp.sum(mask & jnp.asarray(self._class_masks[k]),
+                                 dtype=jnp.int32)
+                      for k in ("SL", "UL", "DL")}
+        return {
+            "live": jnp.asarray(live, bool),
+            "reached": jnp.asarray(reached, bool),
+            "metric": jnp.asarray(metric, jnp.float32),
+            "disagreement": consensus_disagreement(stacked),
+            "n_sl": counts["SL"], "n_ul": counts["UL"],
+            "n_dl": counts["DL"],
+        }
+
+    def frozen_row(self):
+        """The frozen ``lax.cond`` branch's row: all-zero, ``live`` off —
+        pricing and ledgers skip it, so post-hit padding rounds never
+        bill."""
+        z32 = jnp.int32(0)
+        return {"live": jnp.asarray(False), "reached": jnp.asarray(False),
+                "metric": jnp.float32(0.0),
+                "disagreement": jnp.float32(0.0),
+                "n_sl": z32, "n_ul": z32, "n_dl": z32}
+
+    # -- host (once per chunk, after the sync) --------------------------
+
+    def price(self, n_sl: int, n_ul: int, n_dl: int) -> dict:
+        """Eq.-(11) joules of one round from its surviving per-class
+        counts — float64, written as the SAME Python expression
+        ``Topology.round_comm_joules`` evaluates (float addition is not
+        associative; matching the expression keeps the stream's sum
+        bitwise equal to the post-hoc replay)."""
+        p = self.energy_params
+        bits = self._priced_bits
+        sl_cost = energy.sidelink_cost_per_bit(p)
+        return {
+            "wire_bits": bits * (n_sl + n_ul + n_dl),
+            "joules_sl": bits * (n_sl * sl_cost),
+            "joules_ul": bits * (n_ul / p.E_UL),
+            "joules_dl": bits * (n_dl / p.E_DL),
+            "joules": bits * (n_sl * sl_cost
+                              + n_ul / p.E_UL + n_dl / p.E_DL),
+        }
+
+    def finalize(self, rows, start: int, driver: str = "fl",
+                 extra: Optional[dict] = None):
+        """Stacked chunk rows (device or numpy, leading axis = rounds)
+        → list of host event dicts, one per round, priced in float64."""
+        host = {k: np.asarray(v) for k, v in rows.items()}
+        n = host["live"].shape[0]
+        base = {"type": "round", "driver": driver,
+                "plan": self.engine.plan.kind,
+                "topology": self.topology.name, "K": int(self.topology.K)}
+        if extra:
+            base.update(extra)
+        events = []
+        for i in range(n):
+            e = dict(base)
+            e["round"] = int(start) + i
+            e["live"] = bool(host["live"][i])
+            e["reached"] = bool(host["reached"][i])
+            e["metric"] = float(host["metric"][i])
+            e["disagreement"] = float(host["disagreement"][i])
+            n_sl = int(host["n_sl"][i])
+            n_ul = int(host["n_ul"][i])
+            n_dl = int(host["n_dl"][i])
+            e.update(n_sl=n_sl, n_ul=n_ul, n_dl=n_dl,
+                     edges=n_sl + n_ul + n_dl)
+            e.update(self.price(n_sl, n_ul, n_dl))
+            events.append(e)
+        return events
+
+    def event(self, t: int, row, driver: str = "fl",
+              extra: Optional[dict] = None) -> dict:
+        """One round's event (the streaming callback path)."""
+        single = {k: np.asarray(v)[None] for k, v in row.items()}
+        return self.finalize(single, start=int(t), driver=driver,
+                             extra=extra)[0]
+
+
+class MetricBuffer:
+    """Host-side ring buffer of finalized round events. ``capacity``
+    bounds retention (oldest rounds dropped first); ``None`` keeps
+    everything — the default, since one event is a few hundred bytes."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        self.capacity = capacity
+        self._events = collections.deque(maxlen=capacity)
+        self.dropped = 0            # rounds evicted by the ring
+
+    def append(self, event: dict):
+        if (self.capacity is not None
+                and len(self._events) == self.capacity):
+            self.dropped += 1
+        self._events.append(event)
+
+    def extend(self, events):
+        for e in events:
+            self.append(e)
+
+    def rows(self, live_only: bool = True):
+        """Events in round order; ``live_only`` drops the frozen
+        padding rounds (the default — they carry no information)."""
+        if live_only:
+            return [e for e in self._events if e.get("live", True)]
+        return list(self._events)
+
+    def __len__(self):
+        return len(self._events)
+
+    def clear(self):
+        self._events.clear()
+        self.dropped = 0

@@ -1,0 +1,40 @@
+"""Harness counters: the compiled-program side of ``telemetry.report()``.
+
+Everything here reads state :mod:`repro.core.scanloop` already tracks —
+:data:`~repro.core.scanloop.TRACE_COUNTS` (retraces per driver family),
+the program-cache hit/miss/eviction counters behind
+:func:`~repro.core.scanloop.cache_stats`, and the donation flags on
+every live :class:`~repro.core.scanloop.ProgramRecord` — so the answer
+to "did my sweep recompile / recopy anything?" is one call away instead
+of buried in CI assertions.
+"""
+from __future__ import annotations
+
+from repro.core import scanloop
+
+
+def harness_report() -> dict:
+    """Snapshot of the scan-driver harness counters.
+
+    ``program_cache``: :func:`scanloop.cache_stats` (hits, misses,
+    inserts, evictions, size/capacity, trace counts).
+    ``programs``: one entry per live :class:`ProgramRecord` —
+    ``donation_honored`` is True when the driver requested donation AND
+    the backend gate kept it (False on CPU, where XLA would copy
+    anyway), ``cached`` marks program-cache admission (the JX1/JX4
+    purity domain).
+    """
+    programs = []
+    for rec in scanloop.registered_programs():
+        programs.append({
+            "name": rec.name,
+            "donate_argnums": list(rec.donate_argnums),
+            "donation_gated": rec.donation_gated,
+            "donation_honored": bool(rec.donate_argnums)
+            and not rec.donation_gated,
+            "cached": rec.cache_key is not None,
+        })
+    return {
+        "program_cache": scanloop.cache_stats(),
+        "programs": programs,
+    }

@@ -300,6 +300,42 @@ def test_jx1_uncached_callback_program_silent():
     assert [f for f in findings if f.rule == "JX1"] == []
 
 
+def test_jx4_cached_streaming_program_fires():
+    # a streaming-telemetry debug_callback smuggled into a CACHED program
+    # must fire JX4 (and NOT JX1 — that rule now covers data callbacks)
+    def streaming(x):
+        jax.debug.callback(lambda v: None, x, ordered=True)
+        return x * 2.0
+
+    key = ("test-streaming-prog", "sig")
+    try:
+        prog = scanloop.cached_program(
+            key, lambda: scanloop.donating_jit(streaming))
+        prog(jnp.ones((4,), jnp.float32))       # bake abstract args
+        findings = audit_registered_programs([prog._program_record])
+    finally:
+        scanloop._program_cache.pop(key, None)
+    hits = [f for f in findings if f.rule == "JX4"]
+    assert len(hits) == 1
+    assert "test-streaming-prog" in hits[0].message
+    assert os.path.basename(hits[0].file) == os.path.basename(THIS_FILE)
+    assert hits[0].line > 0
+    assert [f for f in findings if f.rule == "JX1"] == []
+
+
+def test_jx4_uncached_streaming_program_silent():
+    # the drivers' streaming path: program built per call, never admitted
+    # to the cache — exactly what keeps the live tree JX4-clean
+    def streaming(x):
+        jax.debug.callback(lambda v: None, x, ordered=True)
+        return x * 2.0
+
+    prog = scanloop.donating_jit(streaming)
+    prog(jnp.ones((4,), jnp.float32))
+    findings = audit_registered_programs([prog._program_record])
+    assert [f for f in findings if f.rule in ("JX1", "JX4")] == []
+
+
 def test_find_callbacks_sees_through_scan():
     def body(c, x):
         y = jax.pure_callback(
