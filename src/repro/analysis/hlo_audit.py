@@ -35,9 +35,19 @@ H2_SLACK_BYTES = 128
 
 def audit_square_buffers(k: int = 4096, *, plan: str = "sharded",
                          num_blocks: int = 8,
-                         codec: Optional[str] = "int8") -> List[Finding]:
+                         codec: Optional[str] = "int8",
+                         dropout: float = 0.3) -> List[Finding]:
     """H1: compile one ``engine.step`` round at population ``k`` and scan
-    the optimized module for square buffers of dim >= ``k``."""
+    the optimized module for square buffers of dim >= ``k``.
+
+    The audited round is the MASKED one (``dropout`` > 0 bakes a
+    ``GraphProcess.dropout`` into the engine and steps with a traced
+    ``t=``): since the per-edge survival convention, time-varying rounds
+    draw per-LANE keeps over the (K, H) neighbour table and renormalize
+    σ directly on the lanes — no dense rebuild — so the no-(K, K) claim
+    must hold with dropout ACTIVE, not just on the static fast path.
+    ``dropout=0.0`` audits the static program instead.
+    """
     import jax
     import jax.numpy as jnp
     from repro.core import topology as topo_lib
@@ -45,22 +55,31 @@ def audit_square_buffers(k: int = 4096, *, plan: str = "sharded",
     from repro.launch.hlo_analysis import square_buffers
 
     findings: List[Finding] = []
+    graph = (topo_lib.GraphProcess.dropout(dropout, seed=0)
+             if dropout else None)
     eng = ConsensusEngine(topo_lib.ring(k), codec=codec, plan=plan,
-                          num_blocks=num_blocks)
+                          num_blocks=num_blocks, graph=graph)
     meta = eng.audit_meta()
     params = {"w": jnp.zeros((k, 64), jnp.float32)}
     state = eng.init_state(params)
     key = jax.random.PRNGKey(0)
-    txt = jax.jit(lambda p, st, kk: eng.step(p, st, kk)).lower(
-        params, state, key).compile().as_text()
+    if graph is not None:
+        lowered = jax.jit(
+            lambda p, st, kk, tt: eng.step(p, st, kk, t=tt)).lower(
+            params, state, key, jnp.int32(0))
+    else:
+        lowered = jax.jit(lambda p, st, kk: eng.step(p, st, kk)).lower(
+            params, state, key)
+    txt = lowered.compile().as_text()
     squares = square_buffers(txt, k)
     if squares and not meta["kk_buffer"]:
+        masked = "masked " if graph is not None else ""
         for dt, dim, nbytes in squares:
             findings.append(Finding(
                 "H1", f"engine:{plan}", 0,
                 f"({dim}, {dim}) {dt} buffer ({nbytes / 1e6:.0f} MB) in "
-                f"the compiled {plan} module at K={k} — the plan must "
-                "never materialize the dense sigma stack"))
+                f"the compiled {masked}{plan} module at K={k} — the plan "
+                "must never materialize the dense sigma stack"))
     return findings
 
 
@@ -114,18 +133,32 @@ def audit_collective_pricing(k: int = 8, n: int = 256) -> List[Finding]:
     key = jax.random.PRNGKey(0)
 
     for plan in ("distributed", "sharded"):
-        for codec in (None, "bf16", "int8"):
+        for codec, dropout in ((None, 0.0), ("bf16", 0.0), ("int8", 0.0),
+                               ("int8", 0.3)):
             kw = {"num_blocks": k} if plan == "sharded" else {}
+            graph = (topo_lib.GraphProcess.dropout(dropout, seed=0)
+                     if dropout else None)
             eng = ConsensusEngine(topo, codec=codec, plan=plan,
-                                  mesh=mesh, **kw)
+                                  mesh=mesh, graph=graph, **kw)
             meta = eng.audit_meta()
             wire_op = meta["wire_collective"]
             state = eng.init_state(params)
-            txt = jax.jit(lambda p, st, kk: eng.step(p, st, kk)).lower(
-                params, state, key).compile().as_text()
+            if graph is not None:
+                # masked rounds still ship the full static collective —
+                # the distributed schedule superset permutes every slot
+                # and the sharded all-gather carries every agent's wire;
+                # survival only zeroes σ. Pricing stays the static
+                # _expected_wire_bytes, so the H2 bound is unchanged.
+                txt = jax.jit(
+                    lambda p, st, kk, tt: eng.step(p, st, kk, t=tt)).lower(
+                    params, state, key, jnp.int32(0)).compile().as_text()
+            else:
+                txt = jax.jit(lambda p, st, kk: eng.step(p, st, kk)).lower(
+                    params, state, key).compile().as_text()
             measured = collective_bytes(txt).get(wire_op, 0)
             expected = _expected_wire_bytes(eng, params)
-            label = f"engine:{plan}/{codec}"
+            label = (f"engine:{plan}/{codec}"
+                     + (f"/p={dropout}" if dropout else ""))
             if expected is None:
                 continue
             if measured == 0:

@@ -360,7 +360,11 @@ def _tiny_drivers():
 
 def audit_engine_plans(k: int = 8) -> List[Finding]:
     """JX1 + JX2 over ``engine.scan_rounds`` jaxprs for all four plans
-    (int8 and top-k wires on the sparse/sharded paths)."""
+    (int8 and top-k wires on the sparse/sharded paths), each audited
+    both static and MASKED (a ``GraphProcess.dropout`` engine — the
+    in-scan per-lane survival draws and σ renormalization must stay
+    callback-free and keep the integer wire integer through the
+    combine)."""
     import jax
     import jax.numpy as jnp
     from repro.core import topology as topo_lib
@@ -373,11 +377,15 @@ def audit_engine_plans(k: int = 8) -> List[Finding]:
     for plan in PLAN_KINDS:
         codecs = ("int8", "topk:0.25") if plan in ("sparse-pallas",
                                                    "sharded") else (None,)
-        for codec in codecs:
+        for codec, dropout in [(c, p) for c in codecs for p in (0.0, 0.3)]:
             kw = {"num_blocks": 2} if plan == "sharded" else {}
-            eng = ConsensusEngine(topo, codec=codec, plan=plan, **kw)
+            graph = (topo_lib.GraphProcess.dropout(dropout, seed=0)
+                     if dropout else None)
+            eng = ConsensusEngine(topo, codec=codec, plan=plan,
+                                  graph=graph, **kw)
             meta = eng.audit_meta()
-            label = f"scan_rounds[{plan}/{codec}]"
+            label = (f"scan_rounds[{plan}/{codec}"
+                     + (f"/p={dropout}]" if dropout else "]"))
             closed = jax.make_jaxpr(
                 lambda p: eng.scan_rounds(p, rounds=2))(params)
             for prim, f, ln in find_callbacks(closed):

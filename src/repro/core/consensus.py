@@ -596,7 +596,7 @@ def distributed_consensus_step(stacked_params, mix, *,
                                codec=None, codec_state=None, key=None,
                                gamma: float = 1.0,
                                error_feedback: bool = True,
-                               schedule=None):
+                               schedule=None, sig_override=None):
     """Eq. (6) on the DISTRIBUTED path with codec-aware wires: one agent
     per mesh position, neighbour exchange via ``jax.lax.ppermute`` rounds
     from :func:`permutation_schedule` (works for ANY concrete graph, not
@@ -610,6 +610,14 @@ def distributed_consensus_step(stacked_params, mix, *,
     traffic). Otherwise runs the vmap-with-axis_name emulation, which
     shares the collective semantics — the CPU test path.
 
+    ``sig_override``: traced (K, M) per-slot weights replacing the
+    schedule's baked γ·σ stack for THIS round — the σ is a runtime
+    operand of the compiled program (the ppermute pairs stay trace-time
+    structure), which is how the time-varying engine masks individual
+    schedule slots in-scan without a retrace: faded slots ride with
+    σ = 0, exact no-ops in Eq. (6), while the wire still ships all M
+    permutations of the fixed schedule superset.
+
     Returns ``(new_stacked_params, new_codec_state)``; the state is the
     stacked error-feedback residual (None for stateless codecs).
     """
@@ -622,8 +630,16 @@ def distributed_consensus_step(stacked_params, mix, *,
         schedule = permutation_schedule(mix, gamma)
     K = jax.tree.leaves(stacked_params)[0].shape[0]
     pairs_list = [p for p, _ in schedule]
-    sig_stack = (jnp.stack([jnp.asarray(s) for _, s in schedule], axis=1)
-                 if schedule else jnp.zeros((K, 0), jnp.float32))
+    if sig_override is not None:
+        sig_stack = jnp.asarray(sig_override, jnp.float32)
+        if sig_stack.shape != (K, len(schedule)):
+            raise ValueError(
+                f"sig_override is {sig_stack.shape}, schedule wants "
+                f"(K={K}, M={len(schedule)})")
+    else:
+        sig_stack = (jnp.stack([jnp.asarray(s) for _, s in schedule],
+                               axis=1)
+                     if schedule else jnp.zeros((K, 0), jnp.float32))
     keys = None if key is None else jax.random.split(key, K)
     if stateful and codec_state is None:
         codec_state = jax.tree.map(

@@ -42,38 +42,47 @@ Time-varying graphs (:class:`repro.core.topology.GraphProcess`)
 ---------------------------------------------------------------
 ``ConsensusEngine(topo, graph=GraphProcess.dropout(p, seed))`` resolves
 a time-varying graph process ONCE at construction, making per-round
-link failures a capability of every maskable plan instead of a
-dense-only traced-mix hack. Each round ``t``, :meth:`round_mask` draws
-the (K, K) edge-survival mask in-scan from ``fold_in(PRNGKey(seed), t)``
-(:func:`repro.core.topology.survival_mask` — symmetric graphs fade
-whole undirected pairs, self loops are kept) and :meth:`masked_mixing`
-REBUILDS the σ matrix on the surviving graph with the engine's mixing
-kind, so dropped links reallocate their σ mass (doubly-stochastic kinds
-stay doubly stochastic on every surviving subgraph). Per plan:
+link failures a capability of EVERY plan. Survival is drawn per EDGE:
+each directed edge owns a canonical id (symmetric pairs share one, so
+a faded channel kills both directions) and round ``t``'s draw is the
+pure function ``uniform(fold_in(fold_in(key, t), edge_id)) >= p``
+(:func:`repro.core.topology.survival_mask`, the single blessed draw
+site — rule R1). Because every edge's fate is independent of HOW the
+edges are enumerated, each plan draws survival in its own native
+shape — O(#edges) work, never a dense rebuild — via
+:meth:`round_survival`:
 
-* ``dense-xla``     — the masked mix rides the matmul as a traced
-  operand;
+* ``dense-xla``     — the (K, K) mask; :meth:`masked_mixing` REBUILDS
+  the σ matrix on the surviving graph with the engine's mixing kind,
+  riding the matmul as a traced operand (dropped links reallocate
+  their σ mass; doubly-stochastic kinds stay doubly stochastic on
+  every surviving subgraph);
 * ``sparse-pallas`` / ``sharded`` — the gather INDICES stay baked from
-  the full base graph; the per-round renormalized σ is gathered into
-  the (K, H) lane table and rides the fused (dequant-)consensus kernels
-  as a traced operand, so faded neighbour lanes simply carry σ = 0
-  (exact no-ops) — one compiled program for every round;
-* ``distributed``   — unsupported (its ppermute schedule is a
-  host-resolved trace-time structure); construction raises.
+  the full base graph; survival is drawn straight into the (K, H)
+  neighbour-lane table and the per-lane σ is renormalized DIRECTLY on
+  the lanes (same values bit for bit as the dense rebuild under the
+  default uniform data sizes) and rides the fused (dequant-)consensus
+  kernels as a traced operand, so faded lanes carry σ = 0 (exact
+  no-ops) — one compiled program for every round and O(K·H) per-round
+  work, no (K, K) buffer anywhere (rule H1 holds at K = 4096 WITH
+  dropout active);
+* ``distributed``   — the ppermute schedule SUPERSET of the base graph
+  is resolved once at construction (every surviving graph is a
+  subgraph, and each directed edge is carried by exactly one schedule
+  slot); survival is drawn straight into the (M, K) schedule table,
+  the per-slot σ is renormalized on the survivors and rides the
+  permutes as a traced (K, M) operand — faded slots apply σ = 0 while
+  the wire still ships the full M permutations (a fixed TDMA-frame-
+  like schedule; Eq.-(11) billing counts only the surviving real
+  edges). Graphs whose schedule superset exceeds
+  :data:`DISTRIBUTED_SCHEDULE_BOUND` slots are refused at
+  construction.
 
-Masks are bit-identical to the host :func:`repro.core.topology.dropout`
-stream via the shared fold-in convention, which is what lets callers
-bill Eq.-(11) joules post hoc over exactly the rounds used with ZERO
-host-side per-round graph prefetch.
-
-COST NOTE: each masked round draws a (K, K) uniform and rebuilds the
-(K, K) σ in-scan before gathering the (K, H) lane weights — O(K²) work
-and memory per round even on the sparse/sharded plans. That is free at
-the populations the time-varying paths target (the 12-robot case study,
-K ≤ O(10³) sweeps) but re-introduces a quadratic term the sharded plan
-otherwise avoids at K ≫ 10⁴; huge populations should keep static
-graphs, use precomputed ``GraphProcess.schedule`` masks, or wait for
-the per-lane draw convention (ROADMAP).
+Draws are bit-identical to the host
+:func:`repro.core.topology.dropout` stream via the shared per-edge
+fold-in convention, which is what lets callers bill Eq.-(11) joules
+post hoc over exactly the rounds used with ZERO host-side per-round
+graph prefetch.
 
 Multi-round programs: :meth:`ConsensusEngine.scan_rounds` runs R rounds
 inside one ``lax.scan`` with the codec/EF state in the carry — the
@@ -109,10 +118,20 @@ import numpy as np
 from repro.core import consensus
 
 PLAN_KINDS = ("dense-xla", "sparse-pallas", "sharded", "distributed")
-#: plans that accept a per-round survival mask (traced σ operands); the
-#: distributed plan's ppermute schedule is host-resolved at trace time
-#: and cannot re-route around faded links without a retrace.
-MASKABLE_PLANS = ("dense-xla", "sparse-pallas", "sharded")
+#: plans that accept a per-round survival mask (traced σ operands).
+#: Since the per-edge draw convention, ALL of them: the distributed
+#: plan keeps its ppermute schedule superset fixed at trace time and
+#: masks individual schedule slots via a traced (K, M) σ operand.
+MASKABLE_PLANS = ("dense-xla", "sparse-pallas", "sharded", "distributed")
+
+#: largest ppermute-schedule superset a time-varying ``distributed``
+#: engine accepts (schedule length ≈ the base graph's max degree — one
+#: slot per matching). Every masked round ships all M slots whether or
+#: not their edges survived (the superset is the fixed TDMA frame), so
+#: a graph needing more slots than this would spend more air time on
+#: faded slots than a prefetched-schedule rebuild costs; such graphs
+#: are refused at construction.
+DISTRIBUTED_SCHEDULE_BOUND = 64
 
 #: per-plan compiled-artifact expectations ``repro.analysis`` keys on.
 #: ``kk_buffer``: whether the plan's program may legitimately
@@ -177,12 +196,16 @@ class ConsensusEngine:
                 a time-varying ``graph`` is attached.
     gamma:      CHOCO consensus step size (damps off-diagonal σ).
     graph:      a :class:`repro.core.topology.GraphProcess` (or None ⇒
-                static). Non-static processes turn every maskable plan
-                time-varying: each round's edge-survival mask is drawn
-                in-scan from the folded process key and the σ is rebuilt
-                on the surviving graph (see the module docstring). The
-                ``distributed`` plan refuses non-static processes here,
-                at construction.
+                static). Non-static processes turn EVERY plan
+                time-varying: each round's edge survival is drawn
+                in-scan from the folded process key in the plan's
+                native shape — (K, K) mask, (K, H) lanes, or (M, K)
+                schedule slots — and the σ is renormalized on the
+                survivors (see the module docstring). The
+                ``distributed`` plan resolves its ppermute schedule
+                superset here, at construction, and refuses graphs
+                needing more than :data:`DISTRIBUTED_SCHEDULE_BOUND`
+                slots.
     """
 
     def __init__(self, topology, *, codec=None, mesh=None,
@@ -214,15 +237,9 @@ class ConsensusEngine:
         self.plan = self._resolve_plan(plan, axis_name, num_blocks)
         self._schedule = None          # distributed ppermute rounds, lazy
         self._masked_struct = None     # (idx, lane-valid) for masked sig
+        self._sched_struct = None      # (srcs, real) of the schedule
+        self._sched_keep = None        # schedule-kind masks, plan-shaped
         if self.graph.kind != "static":
-            if self.plan.kind not in MASKABLE_PLANS:
-                raise ValueError(
-                    f"time-varying graphs ({self.graph!r}) are not "
-                    f"supported on the {self.plan.kind!r} plan — its "
-                    "ppermute schedule is resolved on the host at trace "
-                    "time; use one of the maskable plans "
-                    f"{MASKABLE_PLANS} (or prefetch concrete Topology "
-                    "objects via repro.core.topology.dropout)")
             if self.topology is None:
                 # a raw σ matrix's generating rule is unknown, so the
                 # per-round rebuild would silently REPLACE the caller's
@@ -244,6 +261,25 @@ class ConsensusEngine:
                 raise ValueError(
                     f"schedule masks are {self.graph.masks.shape[1:]}, "
                     f"population is K={self.K}")
+            if self.plan.kind == "distributed":
+                # resolve the ppermute schedule SUPERSET now: every
+                # surviving graph is a subgraph of the base graph, so a
+                # schedule covering the base graph covers every round —
+                # masked slots ride as σ = 0 on a traced operand, no
+                # retrace. One slot per matching ⇒ length ≈ max degree.
+                self._schedule = consensus.permutation_schedule(
+                    self.mix, self.gamma)
+                if len(self._schedule) > DISTRIBUTED_SCHEDULE_BOUND:
+                    raise ValueError(
+                        f"time-varying graphs on the distributed plan "
+                        f"mask a fixed ppermute schedule superset, and "
+                        f"this graph needs {len(self._schedule)} "
+                        f"schedule slots (≈ max degree "
+                        f"{self.topology.max_degree}) — over the "
+                        f"{DISTRIBUTED_SCHEDULE_BOUND}-slot bound "
+                        "(DISTRIBUTED_SCHEDULE_BOUND). Use a sparser "
+                        "base graph, or the sharded plan (per-lane "
+                        "masks, no schedule)")
 
     # -- plan selection -----------------------------------------------------
     def _resolve_plan(self, plan: str, axis_name: str,
@@ -314,24 +350,152 @@ class ConsensusEngine:
         return consensus.mixing_weights(
             sizes, mask, self.mix_kind, include_self=self.include_self)
 
-    def _masked_structure(self, mix_t):
-        """(idx, sig_t) for the sparse/sharded plans: the CONCRETE
-        full-graph lane indices (baked once, lazily) and the per-round σ
-        gathered from the masked mix — faded lanes land at σ = 0, so the
-        fused kernels skip them exactly without rebuilding the gather."""
+    def lane_structure(self):
+        """(idx, valid) neighbour-lane table of the BASE graph for the
+        sparse/sharded plans: idx (K, H) int32 ascending neighbour
+        indices (padding lanes index the agent itself), valid (K, H)
+        bool marking real lanes. Baked once, lazily, as numpy — the
+        cache outlives any one trace, so it must never hold
+        tracer-backed arrays."""
         if self._masked_struct is None:
-            # numpy constants: this cache outlives any one trace, so it
-            # must never hold tracer-backed arrays
-            idx_np, _ = consensus.sparse_structure(self.mix)
-            self._masked_struct = (idx_np, np.arange(self.K)[:, None])
-        idx, rows = self._masked_struct
-        # padding lanes index the agent itself; mix_t's diagonal is 0
-        # (self weight is implicit), so they stay exact no-ops
-        return jnp.asarray(idx), jnp.asarray(mix_t, jnp.float32)[rows, idx]
+            A = (np.asarray(self.topology.adjacency, bool).copy()
+                 if self.topology is not None else self.mix != 0)
+            np.fill_diagonal(A, False)
+            deg = A.sum(axis=1)
+            H = max(int(deg.max()), 1) if self.K else 1
+            idx = np.tile(np.arange(self.K, dtype=np.int32)[:, None],
+                          (1, H))
+            for k in range(self.K):
+                nbr = np.flatnonzero(A[k])
+                idx[k, :len(nbr)] = nbr
+            valid = np.arange(H)[None, :] < deg[:, None]
+            self._masked_struct = (idx, valid)
+        return self._masked_struct
+
+    def schedule_structure(self):
+        """(srcs, real) of the distributed plan's ppermute schedule
+        superset: srcs (M, K) int32 — the mesh position each target
+        receives from in slot m — and real (M, K) bool marking slots
+        that carry an actual base-graph edge (the rest are permutation-
+        completion padding, σ = 0 forever). Baked once, lazily, numpy."""
+        if self._sched_struct is None:
+            if self._schedule is None:
+                self._schedule = consensus.permutation_schedule(
+                    self.mix, self.gamma)
+            M = len(self._schedule)
+            srcs = np.zeros((M, self.K), np.int32)
+            real = np.zeros((M, self.K), bool)
+            for m, (pairs, sig) in enumerate(self._schedule):
+                for s, tgt in pairs:
+                    srcs[m, tgt] = s
+                real[m] = np.asarray(sig) != 0.0
+            self._sched_struct = (srcs, real)
+        return self._sched_struct
+
+    def round_survival(self, t=None, mask=None):
+        """Round ``t``'s edge survival in THIS plan's native shape —
+        the in-scan fast path that never materializes (K, K) on the
+        non-dense plans: a (K, K) bool mask on dense-xla, surviving-
+        lane (K, H) bools on sparse-pallas/sharded, surviving-slot
+        (M, K) bools on distributed. ``t`` may be traced; ``mask``
+        instead converts an explicit (K, K) survival mask (e.g. a
+        host-prefetched :func:`repro.core.topology.dropout` round) to
+        the plan shape — bit-identical to the in-scan draw of the same
+        round by the shared per-edge fold-in convention. Returns None
+        for a static graph with no explicit mask."""
+        from repro.core import topology as topo_lib
+        kind = self.plan.kind
+        if kind == "dense-xla":
+            return (jnp.asarray(mask) if mask is not None
+                    else self.round_mask(t))
+        if mask is None and self.graph.kind == "static":
+            return None
+        if kind == "distributed":
+            srcs, real = self.schedule_structure()
+            rows = np.arange(self.K, dtype=np.int32)[None, :]
+        else:
+            srcs, real = self.lane_structure()      # (idx, valid)
+            rows = np.arange(self.K, dtype=np.int32)[:, None]
+        if mask is not None:
+            keep = jnp.asarray(mask)[rows, srcs]
+        elif self.graph.kind == "dropout":
+            keep = topo_lib.survival_mask(
+                self.K, self.graph.p, self._graph_key, t,
+                symmetric=self._symmetric, receivers=rows, senders=srcs)
+        else:                                        # schedule masks
+            if self._sched_keep is None:
+                # pre-gather the (R, K, K) mask stack into the plan
+                # shape ONCE (numpy), so the in-scan lookup is a
+                # dynamic slice of lanes/slots, never a (K, K) constant
+                self._sched_keep = np.asarray(
+                    self.graph.masks[:, rows, srcs])
+            stack = jnp.asarray(self._sched_keep)
+            keep = stack[jnp.asarray(t) % stack.shape[0]]
+        return keep & jnp.asarray(real)
+
+    def _sizes(self):
+        return (np.ones(self.K, np.float32) if self.data_sizes is None
+                else self.data_sizes)
+
+    def _lane_sigma(self, survival):
+        """(idx, sig_t) structure for the sparse/sharded plans: σ
+        renormalized DIRECTLY on the surviving (K, H) lanes — same
+        formulas as :func:`repro.core.consensus.mixing_weights` per
+        entry, O(K·H) with no dense rebuild. Faded/padding lanes land
+        at σ = 0, exact no-ops in the fused kernels. Bit-identical to
+        gathering the dense rebuild under uniform data sizes (sums of
+        equal addends are association-free)."""
+        idx, _valid = self.lane_structure()
+        keep = jnp.asarray(survival)
+        sizes = jnp.asarray(self._sizes())
+        if self.mix_kind == "paper":
+            w = jnp.where(keep, sizes[jnp.asarray(idx)], 0.0)
+            denom = w.sum(axis=1)
+            if self.include_self:
+                denom = denom + sizes
+            sig = w / jnp.maximum(denom, 1e-12)[:, None]
+        elif self.mix_kind == "metropolis":
+            deg = keep.sum(axis=1).astype(jnp.float32)
+            sig = jnp.where(
+                keep,
+                1.0 / (1.0 + jnp.maximum(deg[:, None],
+                                         deg[jnp.asarray(idx)])),
+                0.0)
+        else:
+            raise ValueError(f"unknown kind {self.mix_kind!r}")
+        return jnp.asarray(idx), sig
+
+    def _schedule_sigma(self, survival):
+        """γ-scaled (K, M) schedule σ for the distributed plan,
+        renormalized on the surviving (M, K) slots — the traced
+        ``sig_override`` operand that replaces the baked full-graph
+        ``sig_stack`` without retracing (the ppermute pairs stay
+        trace-time structure). Every real directed edge occupies
+        exactly one slot, so the per-target sum over slots equals the
+        dense rebuild's per-row sum over neighbours."""
+        srcs, _real = self.schedule_structure()
+        keep = jnp.asarray(survival)                 # (M, K)
+        sizes = jnp.asarray(self._sizes())
+        if self.mix_kind == "paper":
+            w = jnp.where(keep, sizes[jnp.asarray(srcs)], 0.0)
+            denom = w.sum(axis=0)
+            if self.include_self:
+                denom = denom + sizes
+            sig = w / jnp.maximum(denom, 1e-12)[None, :]
+        elif self.mix_kind == "metropolis":
+            deg = keep.sum(axis=0).astype(jnp.float32)
+            sig = jnp.where(
+                keep,
+                1.0 / (1.0 + jnp.maximum(deg[None, :],
+                                         deg[jnp.asarray(srcs)])),
+                0.0)
+        else:
+            raise ValueError(f"unknown kind {self.mix_kind!r}")
+        return (self.gamma * sig).T
 
     # -- the round ----------------------------------------------------------
     def step(self, stacked_params, codec_state=None, key=None, *, mix=None,
-             t=None, mask=None):
+             t=None, mask=None, survival=None):
         """One Eq.-(6) consensus round on agent-stacked params (leading
         axis K). Returns ``(new_stacked_params, new_codec_state)`` for
         EVERY plan and codec (state is None for codec-free rounds).
@@ -339,14 +503,19 @@ class ConsensusEngine:
         ``key`` enables stochastic rounding for quantizing codecs.
 
         Time-varying graphs: ``t`` (round index, may be traced) draws
-        the round's survival mask from the engine's graph process —
-        the preferred entry point for the scanned drivers; ``mask``
-        passes an explicit (K, K) bool survival mask instead (e.g. a
-        host-prefetched :func:`topology.dropout` round). Both rebuild σ
-        on the surviving graph via :meth:`masked_mixing` and run it as
-        a traced operand — dense-xla takes the full masked mix, the
-        sparse-pallas/sharded gathers take the per-lane σ with faded
-        lanes zeroed (indices stay baked). The distributed plan raises.
+        the round's edge survival from the engine's graph process in
+        the plan's native shape — the preferred entry point for the
+        scanned drivers; ``mask`` passes an explicit (K, K) bool
+        survival mask instead (e.g. a host-prefetched
+        :func:`topology.dropout` round), converted to the plan shape
+        bit-identically; ``survival`` passes a plan-shaped operand a
+        caller already drew via :meth:`round_survival` (so one draw can
+        be shared with telemetry). All three renormalize σ on the
+        surviving edges and run it as a traced operand — dense-xla
+        takes the full masked mix, the sparse-pallas/sharded gathers
+        take the per-lane σ with faded lanes zeroed (indices stay
+        baked), and the distributed plan applies per-slot σ over its
+        fixed ppermute schedule superset (faded slots σ = 0).
 
         ``mix`` overrides the engine's σ matrix wholesale for THIS round
         (may be traced); only the dense-xla plan supports it, every
@@ -358,9 +527,11 @@ class ConsensusEngine:
                 f"per-round mix overrides need the dense-xla plan, not "
                 f"{kind!r} (sparse structure is fixed at trace time; "
                 "time-varying graphs go through mask=/t= instead)")
-        if mask is None and t is not None:
-            mask = self.round_mask(t)
-        if mask is None and mix is None and self.graph.kind != "static":
+        if survival is None and (mask is not None or t is not None):
+            if mix is not None and mask is not None:
+                raise ValueError("pass mix= or mask=/t=, not both")
+            survival = self.round_survival(t, mask=mask)
+        if survival is None and mix is None and self.graph.kind != "static":
             # silently mixing on the full static graph would measure t_i
             # (and bill Eq.-11) on a never-fading network — fail loudly
             raise ValueError(
@@ -369,19 +540,16 @@ class ConsensusEngine:
                 "survival mask (mask=); use scan_rounds for whole "
                 "round loops")
         structure = None
-        if mask is not None:
+        sig_override = None
+        if survival is not None:
             if mix is not None:
                 raise ValueError("pass mix= or mask=/t=, not both")
-            if kind not in MASKABLE_PLANS:
-                raise ValueError(
-                    f"per-round survival masks are not supported on the "
-                    f"{kind!r} plan (host-resolved ppermute schedule); "
-                    f"use one of {MASKABLE_PLANS}")
-            mix_t = self.masked_mixing(mask)
             if kind == "dense-xla":
-                mix = mix_t
+                mix = self.masked_mixing(survival)
+            elif kind == "distributed":
+                sig_override = self._schedule_sigma(survival)
             else:
-                structure = self._masked_structure(mix_t)
+                structure = self._lane_sigma(survival)
         mix_ = self.mix if mix is None else mix
         if kind == "dense-xla" or kind == "sparse-pallas":
             impl = "xla" if kind == "dense-xla" else "sparse"
@@ -411,7 +579,7 @@ class ConsensusEngine:
             stacked_params, mix_, axis_name=self.plan.axis_name,
             mesh=self.mesh, codec=self.codec, codec_state=codec_state,
             key=key, gamma=self.gamma, schedule=self._schedule,
-            error_feedback=False)
+            error_feedback=False, sig_override=sig_override)
 
     def scan_rounds(self, stacked_params, codec_state=None, keys=None, *,
                     rounds: Optional[int] = None, t0=0, telemetry=None):
@@ -471,15 +639,17 @@ class ConsensusEngine:
 
         def body(carry, xs):
             t, k = xs
-            # telemetry draws the round's mask ONCE and shares it with
-            # step() (mask= takes precedence over t=; identical ops, so
-            # results match the telemetry-off t= path bit for bit)
-            mask = (self.round_mask(t)
-                    if telemetry is not None and t is not None else None)
-            p, st = self.step(carry[0], carry[1], k, t=t, mask=mask)
+            # telemetry draws the round's survival ONCE — in the plan's
+            # native shape, never a dense (K, K) rebuild — and shares
+            # it with step() (survival= takes precedence over t=;
+            # identical ops, so results match the telemetry-off t=
+            # path bit for bit)
+            sv = (self.round_survival(t)
+                  if telemetry is not None and t is not None else None)
+            p, st = self.step(carry[0], carry[1], k, t=t, survival=sv)
             row = None
             if telemetry is not None:
-                row = recorder.row(p, mask, metric=jnp.float32(0.0),
+                row = recorder.row(p, sv, metric=jnp.float32(0.0),
                                    reached=jnp.asarray(False),
                                    live=jnp.asarray(True))
                 if stream_cb is not None:

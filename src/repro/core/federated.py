@@ -33,7 +33,7 @@ def local_steps(loss_fn, params, batches, lr: float):
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
                            engine, lr: float,
                            codec=None, codec_state=None, key=None,
-                           t=None, mask=None):
+                           t=None, mask=None, survival=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step through the engine.
 
@@ -50,20 +50,21 @@ def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
     engines with a time-varying
     :class:`~repro.core.topology.GraphProcess`: the round mixes over
     round ``t``'s surviving links (ignored by static engines). ``mask``
-    passes that round's survival mask explicitly when the caller
-    already holds it (the telemetry path draws it once and shares it
-    between the mixing and the metrics row); ``engine.step`` gives an
-    explicit mask precedence over ``t``, and the mask-bearing ops are
+    passes that round's (K, K) survival mask explicitly;  ``survival``
+    passes the round's PLAN-SHAPED survival a caller already drew via
+    ``engine.round_survival(t)`` (the telemetry path draws it once and
+    shares it between the mixing and the metrics row); ``engine.step``
+    gives them precedence over ``t``, and the survival-bearing ops are
     the same either way, so results are bit-identical.
     """
     engine = ConsensusEngine.wrap(engine, codec=codec)
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
-    # static engines ignore t (round_mask is None), so the traced
+    # static engines ignore t (round_survival is None), so the traced
     # program is unchanged for them
     params, state = engine.step(new_params, codec_state, key, t=t,
-                                mask=mask)
+                                mask=mask, survival=survival)
     if engine.codec is None:
         return params
     return params, state
@@ -173,20 +174,21 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                 p, st, k, _ = c
                 k, sk = jax.random.split(k)
                 batches = sampler(sk, t)
-                # telemetry shares ONE survival mask between the round's
-                # mixing and its row; engine.step gives mask= precedence
-                # over t=, so the mask-bearing ops are identical to the
-                # telemetry-off t= path (bit-parity)
-                mask = (engine.round_mask(t) if telemetry is not None
-                        else None)
+                # telemetry shares ONE plan-shaped survival draw between
+                # the round's mixing and its row; engine.step gives
+                # survival= precedence over t=, so the survival-bearing
+                # ops are identical to the telemetry-off t= path
+                # (bit-parity)
+                sv = (engine.round_survival(t) if telemetry is not None
+                      else None)
                 if has_codec:
                     k, ck = jax.random.split(k)
                     p, st = decentralized_fl_round(
                         loss_fn, p, batches, engine, lr, codec_state=st,
-                        key=ck, t=t, mask=mask)
+                        key=ck, t=t, survival=sv)
                 else:
                     p = decentralized_fl_round(loss_fn, p, batches, engine,
-                                               lr, t=t, mask=mask)
+                                               lr, t=t, survival=sv)
                 if eval_every == 1:
                     r, metric = tfn(p)
                     hit = jnp.asarray(r, bool)
@@ -210,7 +212,7 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                 ys = (hit, do_eval, jnp.asarray(metric, metric_sds.dtype))
                 if telemetry is not None:
                     row = recorder.row(
-                        p, mask,
+                        p, sv,
                         metric=jnp.mean(jnp.asarray(metric, jnp.float32)),
                         reached=hit, live=jnp.asarray(True))
                     if stream_cb is not None:

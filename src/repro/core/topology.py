@@ -334,30 +334,82 @@ def survival_key(seed: int):
 
 
 def survival_mask(adjacency, p: float, key, t, symmetric: Optional[bool]
-                  = None):
-    """(K, K) bool edge-survival mask of round ``t`` — THE shared fold-in
-    convention: ``u = uniform(fold_in(key, t), (K, K)); keep = u >= p``,
-    with symmetric graphs keeping whole undirected PAIRS (one draw per
-    upper-triangle entry, mirrored — a faded channel kills both
-    directions) and asymmetric edges (star's UL/DL, hierarchical
-    backhaul) dropping per directed edge.
+                  = None, *, receivers=None, senders=None):
+    """Edge-survival bools of round ``t`` — THE shared fold-in
+    convention, defined PER EDGE. Each directed edge (receiver ``i``,
+    sender ``j``) owns one canonical id — ``min(i,j)·K + max(i,j)`` on
+    symmetric graphs (one draw per undirected PAIR: a faded channel
+    kills both directions together) or ``i·K + j`` on asymmetric ones
+    (star's UL/DL, hierarchical backhaul fade per directed edge) — and
+    survives round ``t`` iff
+
+        ``uniform(fold_in(fold_in(key, t), edge_id)) >= p`` .
+
+    Self loops never fade (``i == j`` keeps unconditionally): an agent
+    always reaches its own model, whatever the radio does. ``p = 0``
+    keeps every edge, ``p = 1`` drops every non-self edge — both exact
+    (``uniform`` draws in [0, 1)).
+
+    Two call forms share this one draw site (analysis rule R1):
+
+    * dense — ``survival_mask(adjacency, p, key, t)`` evaluates the
+      convention over the full (K, K) index grid and returns
+      ``adjacency & keep`` (the host :func:`dropout` stream and the
+      dense-xla plan);
+    * per-edge — ``survival_mask(K, p, key, t, symmetric=...,
+      receivers=i, senders=j)`` evaluates it ONLY at the given
+      (receiver, sender) index arrays (broadcast together) and returns
+      the raw keep bools of that shape: O(#edges) work and memory with
+      no (K, K) anywhere, which is how the engine's sparse/sharded
+      plans draw their (K, H) lane survival and the distributed plan
+      its (M, K) ppermute-schedule survival from the same stream —
+      bit-identical to the dense grid at those entries, because every
+      edge's draw is a pure function of ``(key, t, edge_id)``. Callers
+      AND with lane validity / adjacency themselves; ``symmetric=`` is
+      required (there is no adjacency to infer pair-folding from).
 
     ``t`` may be a TRACED int32 (``jax.random.fold_in`` accepts traced
     data), which is what lets the scanned drivers generate each round's
-    surviving graph INSIDE a ``lax.scan`` body; jax's counter-based PRNG
-    is bit-deterministic across eager and jitted execution, so the
-    host-side :func:`dropout` stream (which calls this same function
-    concretely) and the in-scan masks of
-    :meth:`repro.core.engine.ConsensusEngine.round_mask` agree bit for
-    bit — the bit-parity invariant the engine's time-varying plans and
-    the post-hoc Eq.-(11) billing both rely on.
+    surviving edges INSIDE a ``lax.scan`` body; jax's counter-based
+    PRNG is bit-deterministic across eager, jitted and vmapped
+    execution, so the host-side :func:`dropout` stream (which calls
+    this same function concretely) and the in-scan draws of
+    :meth:`repro.core.engine.ConsensusEngine.round_survival` agree bit
+    for bit — the bit-parity invariant the engine's time-varying plans
+    and the post-hoc Eq.-(11) billing both rely on.
     """
-    A = np.asarray(adjacency, bool)
-    sym = bool((A == A.T).all()) if symmetric is None else bool(symmetric)
-    keep = jax.random.uniform(jax.random.fold_in(key, t), A.shape) >= p
-    if sym:                              # one draw per undirected pair
-        up = jnp.triu(keep, 1)
-        keep = up | up.T
+    A = None
+    if receivers is not None or senders is not None:
+        if receivers is None or senders is None:
+            raise ValueError(
+                "per-edge survival draws need BOTH receivers= and senders=")
+        if symmetric is None:
+            raise ValueError(
+                "per-edge survival draws need an explicit symmetric= "
+                "(there is no adjacency to infer pair-folding from)")
+        K = int(adjacency)
+        sym = bool(symmetric)
+        i = jnp.asarray(receivers, jnp.uint32)
+        j = jnp.asarray(senders, jnp.uint32)
+        i, j = jnp.broadcast_arrays(i, j)
+    else:
+        A = np.asarray(adjacency, bool)
+        K = A.shape[0]
+        sym = bool((A == A.T).all()) if symmetric is None else bool(symmetric)
+        i = jnp.broadcast_to(
+            jnp.arange(K, dtype=jnp.uint32)[:, None], (K, K))
+        j = jnp.broadcast_to(
+            jnp.arange(K, dtype=jnp.uint32)[None, :], (K, K))
+    rk = jax.random.fold_in(key, t)
+    lo = jnp.minimum(i, j) if sym else i
+    hi = jnp.maximum(i, j) if sym else j
+    eid = lo * jnp.uint32(K) + hi
+    u = jax.vmap(
+        lambda e: jax.random.uniform(jax.random.fold_in(rk, e)))(
+        eid.ravel()).reshape(eid.shape)
+    keep = (u >= p) | (i == j)
+    if A is None:
+        return keep
     return jnp.asarray(A) & keep
 
 
@@ -378,10 +430,14 @@ class GraphProcess:
       masks; round ``t`` applies ``masks[t % R]`` (MATCHA-style
       randomized link schedules, TDMA frames).
 
-    The per-round mix is REBUILT from the surviving graph (self loops
+    The per-round σ is RENORMALIZED on the surviving graph (self loops
     kept, σ mass of dropped links reallocated by the engine's mixing
     kind — doubly-stochastic kinds stay doubly stochastic on every
-    surviving subgraph), never silently zeroed.
+    surviving subgraph), never silently zeroed — and in each plan's
+    NATIVE shape: the dense-xla plan rebuilds the (K, K) mix, the
+    sparse-pallas/sharded plans renormalize directly on their (K, H)
+    lanes, and the distributed plan scales its (K, M) schedule slots
+    (bitwise the same weights on every surviving edge).
     """
 
     kind: str = "static"                  # static | dropout | schedule

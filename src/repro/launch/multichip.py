@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=8", ""))
+
+"""Multi-chip dry-run harness for the consensus engine.
+
+The FIRST import above pins 8 placeholder host devices BEFORE jax
+initializes (the ``launch/dryrun`` pattern), so this module — and only
+this module — sees an emulated multi-device mesh; tests and benchmarks
+importing jax normally see 1 device. Everything here is compile-and-
+inspect plus small numeric parity runs: no accelerator is required, and
+the artifacts audited are the SAME compiled modules a real 8-chip mesh
+would execute per device (SPMD partitioning happens at compile time).
+
+Three checks per run, all with dropout ACTIVE (the masked round is the
+one the per-edge survival convention compiles; auditing the static fast
+path would miss every regression this harness exists to catch):
+
+* **H1, no (K, K) buffer** — the masked sharded step at ``--k`` (default
+  4096) must compile with no square buffer of dim >= K anywhere in the
+  optimized module: per-lane survival draws + lane-σ renormalization
+  replace the dense rebuild, so dropout no longer reintroduces the
+  O(K²) wall the plan removes.
+* **collective layout** — the plan's wire collective (``all-gather`` on
+  sharded, ``collective-permute`` on distributed, from
+  ``engine.audit_meta()``) must ship nonzero bytes, and an int8 codec
+  must keep ``s8`` lanes IN the collective's result layout (decode
+  fusing after the gather, not before — the JX2 invariant, asserted on
+  the partitioned artifact).
+* **JX3 donation honored** — the step jitted with donated params/state
+  must alias every donated leaf in ``input_output_alias``; XLA drops
+  donation silently when layouts fail to pair up, doubling peak memory
+  exactly where a real mesh can least afford it.
+
+Plus mesh-vs-emulation parity: the sharded and distributed plans driven
+on the 8-device mesh must agree with their single-device emulations
+(``mesh=None`` vmap fallback) to allclose on a masked round — same
+survival bits by construction (the per-edge convention is a pure
+function of (key, t, edge id)), different collectives.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.multichip [--k 4096]
+        [--parity-k 32] [--out report.json]
+
+Exit status 1 on any violation (CI runs this as the multi-chip smoke).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.analysis.jaxpr_audit import alias_param_indices
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine
+from repro.launch.hlo_analysis import collective_bytes, square_buffers
+
+DROPOUT_P, DROPOUT_SEED = 0.3, 0
+
+
+def agent_mesh(n: int = 8) -> Mesh:
+    """1-D mesh over the first ``n`` host devices (axis ``"agents"``)."""
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"{len(devs)} device(s) visible — the multichip module must "
+            "be the first jax import (XLA_FLAGS pins 8 host devices)")
+    return Mesh(np.array(devs[:n]), ("agents",))
+
+
+def _wire_dtypes(hlo_text: str, kind: str):
+    """Element dtypes in the result layouts of every ``kind`` collective
+    in the module (``-done`` halves skipped, like collective_bytes)."""
+    dts = set()
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\))|(?:\S+))\s+"
+            + re.escape(kind) + r"(-start|-done)?\(", hlo_text, re.M):
+        shape_str, phase = m.groups()
+        if phase == "-done":
+            continue
+        dts.update(mm.group(1) for mm in
+                   re.finditer(r"(pred|[suc]\d+|bf16|f16|f32|f64)\[",
+                               shape_str))
+    return dts
+
+
+def _masked_step_fn(eng):
+    def step(p, st, kk, tt):
+        return eng.step(p, st, kk, t=tt)
+    return step
+
+
+def _compile_masked_step(eng, params, *, donate=True):
+    """Compile one masked round (traced ``t``), donated params/state."""
+    state = eng.init_state(params)
+    key = jax.random.PRNGKey(0)
+    donate_argnums = (0, 1) if donate else ()
+    jitted = jax.jit(_masked_step_fn(eng), donate_argnums=donate_argnums)
+    t0 = time.time()
+    compiled = jitted.lower(params, state, key, jnp.int32(0)).compile()
+    secs = time.time() - t0
+    return compiled, (params, state, key), secs
+
+
+def _donation_gaps(hlo_text, abstract_args, donate_argnums):
+    """Flat parameter indices of donated leaves NOT covered by the
+    module's input_output_alias directive (check_donation's arithmetic,
+    applied to an already-compiled module)."""
+    aliased = alias_param_indices(hlo_text)
+    starts, n = [], 0
+    for a in abstract_args:
+        starts.append(n)
+        n += len(jax.tree.leaves(a))
+    missing = []
+    for argnum in donate_argnums:
+        leaves = len(jax.tree.leaves(abstract_args[argnum]))
+        missing += [i for i in range(starts[argnum],
+                                     starts[argnum] + leaves)
+                    if i not in aliased]
+    return missing
+
+
+def dry_run_sharded(k: int = 4096, *, num_blocks: int = 8,
+                    codec: str = "int8", n: int = 64, verbose=True):
+    """Masked sharded round at scale on the 8-device mesh: H1 +
+    collective layout + donation, one compile."""
+    mesh = agent_mesh(num_blocks)
+    eng = ConsensusEngine(
+        topo_lib.ring(k), codec=codec, plan="sharded",
+        num_blocks=num_blocks, mesh=mesh,
+        graph=topo_lib.GraphProcess.dropout(DROPOUT_P, seed=DROPOUT_SEED))
+    params = {"w": jnp.zeros((k, n), jnp.float32)}
+    compiled, args, secs = _compile_masked_step(eng, params)
+    txt = compiled.as_text()
+    wire_op = eng.audit_meta()["wire_collective"]
+    colls = collective_bytes(txt)
+    report = {
+        "plan": "sharded", "k": k, "num_blocks": num_blocks,
+        "codec": codec, "dropout_p": DROPOUT_P,
+        "compile_seconds": round(secs, 2),
+        "collectives": {kk: v for kk, v in colls.items() if v},
+        "wire_dtypes": sorted(_wire_dtypes(txt, wire_op)),
+    }
+    violations = []
+    squares = square_buffers(txt, k)
+    for dt, dim, nbytes in squares:
+        violations.append(
+            f"H1: ({dim}, {dim}) {dt} buffer ({nbytes / 1e6:.0f} MB) in "
+            f"the compiled MASKED sharded module at K={k}")
+    if colls.get(wire_op, 0) == 0:
+        violations.append(
+            f"layout: no {wire_op} bytes in the sharded module — the "
+            "wire collective vanished from the partitioned program")
+    if codec and codec.startswith("int8") and "s8" not in report["wire_dtypes"]:
+        violations.append(
+            f"layout: {wire_op} result carries {report['wire_dtypes']} "
+            "but no s8 — the int8 wire was decoded before the collective")
+    gaps = _donation_gaps(txt, args, (0, 1))
+    if gaps:
+        violations.append(
+            f"JX3: donation dropped for {len(gaps)} params/state leaves "
+            f"(flat indices {gaps}) in the masked sharded step")
+    report["violations"] = violations
+    if verbose:
+        print(f"== sharded K={k} blocks={num_blocks} codec={codec} "
+              f"p={DROPOUT_P} (compile {secs:.1f}s)")
+        print(f"   collectives: {report['collectives']}  "
+              f"wire={wire_op}:{report['wire_dtypes']}")
+        print(f"   square buffers >= {k}: {squares or 'none'}")
+    return report
+
+
+def dry_run_distributed(k: int = 8, *, codec: str = "int8", n: int = 64,
+                        verbose=True):
+    """Masked distributed round, one agent per mesh position: the
+    ppermute schedule superset must survive partitioning with survival
+    riding the traced sig_override only."""
+    mesh = agent_mesh(k)
+    eng = ConsensusEngine(
+        topo_lib.ring(k), codec=codec, plan="distributed", mesh=mesh,
+        graph=topo_lib.GraphProcess.dropout(DROPOUT_P, seed=DROPOUT_SEED))
+    params = {"w": jnp.zeros((k, n), jnp.float32)}
+    compiled, args, secs = _compile_masked_step(eng, params)
+    txt = compiled.as_text()
+    wire_op = eng.audit_meta()["wire_collective"]
+    colls = collective_bytes(txt)
+    report = {
+        "plan": "distributed", "k": k, "codec": codec,
+        "dropout_p": DROPOUT_P, "compile_seconds": round(secs, 2),
+        "schedule_slots": len(eng._schedule),
+        "collectives": {kk: v for kk, v in colls.items() if v},
+        "wire_dtypes": sorted(_wire_dtypes(txt, wire_op)),
+    }
+    violations = []
+    if colls.get(wire_op, 0) == 0:
+        violations.append(
+            f"layout: no {wire_op} bytes in the distributed module — "
+            "the masked schedule superset lost its permutes")
+    gaps = _donation_gaps(txt, args, (0, 1))
+    if gaps:
+        violations.append(
+            f"JX3: donation dropped for {len(gaps)} params/state leaves "
+            f"(flat indices {gaps}) in the masked distributed step")
+    report["violations"] = violations
+    if verbose:
+        print(f"== distributed K={k} codec={codec} p={DROPOUT_P} "
+              f"({report['schedule_slots']} schedule slots, "
+              f"compile {secs:.1f}s)")
+        print(f"   collectives: {report['collectives']}  "
+              f"wire={wire_op}:{report['wire_dtypes']}")
+    return report
+
+
+def parity_mesh_vs_emulation(k: int = 32, *, num_blocks: int = 8,
+                             rounds: int = 4, verbose=True):
+    """Both multi-device plans vs their single-device emulations on
+    ``rounds`` masked rounds: same survival bits by construction, so the
+    trajectories must agree to allclose (different collectives — bitwise
+    is not on the table across compilation strategies)."""
+    gp = topo_lib.GraphProcess.dropout(DROPOUT_P, seed=DROPOUT_SEED)
+    key = jax.random.PRNGKey(1)
+    keys = jax.random.split(jax.random.PRNGKey(2), rounds)
+    violations = []
+    cases = [("sharded", topo_lib.ring(k),
+              {"num_blocks": num_blocks}),
+             ("distributed", topo_lib.ring(8), {})]
+    for plan, topo, kw in cases:
+        kk = topo.K
+        mesh = agent_mesh(kk if plan == "distributed" else num_blocks)
+        params = {"w": jax.random.normal(key, (kk, 16)),
+                  "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (kk, 4))}
+        outs = []
+        for m in (mesh, None):
+            eng = ConsensusEngine(topo, codec="int8", plan=plan,
+                                  mesh=m, graph=gp, **kw)
+            run = jax.jit(lambda p, st, ks, t0:
+                          eng.scan_rounds(p, st, ks, t0=t0))
+            p, st = run(params, eng.init_state(params), keys,
+                        jnp.int32(0))
+            outs.append(jax.tree.map(np.asarray, p))
+        err = max(float(np.abs(a - b).max()) for a, b in
+                  zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])))
+        if verbose:
+            print(f"== parity {plan} K={kk}: mesh vs emulation "
+                  f"max|Δ|={err:.2e} over {rounds} masked rounds")
+        if err > 1e-5:
+            violations.append(
+                f"parity: {plan} mesh vs emulation diverge by {err:.2e} "
+                f"(> 1e-5) over {rounds} masked rounds at K={kk}")
+    return {"rounds": rounds, "violations": violations}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=4096,
+                    help="sharded H1 population (acceptance: 4096)")
+    ap.add_argument("--parity-k", type=int, default=32,
+                    help="population for the mesh-vs-emulation parity runs")
+    ap.add_argument("--out", default=None, help="JSON report path")
+    args = ap.parse_args(argv)
+
+    reports = {
+        "devices": len(jax.devices()),
+        "sharded": dry_run_sharded(args.k),
+        "distributed": dry_run_distributed(),
+        "parity": parity_mesh_vs_emulation(args.parity_k),
+    }
+    violations = (reports["sharded"]["violations"]
+                  + reports["distributed"]["violations"]
+                  + reports["parity"]["violations"])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=1)
+    for v in violations:
+        print(f"VIOLATION  {v}")
+    print(f"\nmultichip dry-run: {len(violations)} violation(s) on "
+          f"{reports['devices']} emulated devices")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -159,7 +159,7 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         p, _ = jax.lax.scan(one, p, b)
         return p
 
-    def fl_round(stacked, codec_state, key, t, mask=None):
+    def fl_round(stacked, codec_state, key, t, survival=None):
         # same split as the pre-codec trainer — codec=None runs keep
         # their exact RNG stream (reproducible loss curves); the codec
         # rounding key is folded out of band
@@ -173,19 +173,20 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
 
         batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
-        # mask= (telemetry shares one drawn mask with its metrics row)
-        # takes precedence over t= inside step — identical ops either way
+        # survival= (telemetry shares one plan-shaped draw with its
+        # metrics row) takes precedence over t= inside step — identical
+        # ops either way
         if codec is not None:
             new, codec_state = engine.step(
                 new, codec_state, jax.random.fold_in(key, agents + 1),
-                t=t, mask=mask)
+                t=t, survival=survival)
         elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
-            mixed, _ = engine.step(cast, t=t, mask=mask)
+            mixed, _ = engine.step(cast, t=t, survival=survival)
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
-            new, _ = engine.step(new, t=t, mask=mask)
+            new, _ = engine.step(new, t=t, survival=survival)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
@@ -199,12 +200,12 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     def fl_body(carry, t):
         stacked, codec_state, key = carry
         key, sk = jax.random.split(key)
-        mask = engine.round_mask(t) if tel is not None else None
+        sv = engine.round_survival(t) if tel is not None else None
         stacked, codec_state, l = fl_round(stacked, codec_state, sk, t,
-                                           mask)
+                                           sv)
         if tel is None:
             return (stacked, codec_state, key), l
-        row = rec.row(stacked, mask, metric=l,
+        row = rec.row(stacked, sv, metric=l,
                       reached=jnp.asarray(False), live=jnp.asarray(True))
         if stream_cb is not None:
             jax.debug.callback(stream_cb, t, row, ordered=True)

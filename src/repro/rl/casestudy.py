@@ -133,10 +133,10 @@ class CaseStudy:
     #: consensus execution plan for the per-cluster Eq.-(6) engine:
     #: "auto" rides the engine's normal selection (the 2-robot clusters
     #: sit far below the sparse-gather floor, so auto keeps them on
-    #: dense-xla), or force any maskable plan ("dense-xla",
-    #: "sparse-pallas", "sharded") — all of them support dropout_p > 0
-    #: via in-scan masks; "distributed" is rejected with dropout_p > 0
-    #: (host-resolved ppermute schedule).
+    #: dense-xla), or force any plan — ALL of them, "distributed"
+    #: included, support dropout_p > 0 via in-scan per-edge survival
+    #: draws (the distributed plan masks slots of its fixed ppermute
+    #: schedule superset with a traced σ operand).
     plan: str = "auto"
     #: protocol rounds per compiled program: both stages run inside
     #: chunked ``lax.scan`` programs, so the host syncs (the per-round
@@ -262,7 +262,7 @@ class CaseStudy:
                 self._meta_stream_cb = tel.maml_stream_cb()
 
         def fl_round(task_id, stacked_params, codec_state, key, t,
-                     mask=None):
+                     survival=None):
             # split C+1 exactly as pre-codec (codec=None rounds keep
             # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
@@ -278,13 +278,14 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
-            # mask= (telemetry shares one drawn mask with the metrics
-            # row) takes precedence over t= inside step; identical ops
+            # survival= (telemetry shares one plan-shaped draw with the
+            # metrics row) takes precedence over t= inside step;
+            # identical ops either way
             new, codec_state = self._engines[task_id].step(
                 new, codec_state,
                 None if self.codec is None
                 else jax.random.fold_in(key, C + 1),
-                t=t, mask=mask)
+                t=t, survival=survival)
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
             return new, codec_state, R
@@ -304,14 +305,14 @@ class CaseStudy:
             def live(c):
                 st, cs, k, _ = c
                 k, sk = jax.random.split(k)
-                mask = (self._engines[task_id].round_mask(t)
-                        if tel is not None else None)
-                st, cs, R = fl_round(task_id, st, cs, sk, t, mask)
+                sv = (self._engines[task_id].round_survival(t)
+                      if tel is not None else None)
+                st, cs, R = fl_round(task_id, st, cs, sk, t, sv)
                 hit = R >= self.r_target
                 ys = (hit, jnp.asarray(True), R)
                 if tel is not None:
                     row = self._recorders[task_id].row(
-                        st, mask, metric=R, reached=hit,
+                        st, sv, metric=R, reached=hit,
                         live=jnp.asarray(True))
                     if tel.streaming:
                         jax.debug.callback(self._stream_cbs[task_id], t,

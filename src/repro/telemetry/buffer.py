@@ -15,7 +15,8 @@ Two halves live here:
 * :class:`RoundRecorder` — built per engine; its :meth:`RoundRecorder.row`
   runs INSIDE the trace and records only what must be measured on
   device: exact int32 surviving-link counts per class (from the same
-  ``engine.round_mask(t)`` the mixing consumed — never a re-draw),
+  plan-shaped ``engine.round_survival(t)`` the mixing consumed — never
+  a re-draw, never a dense (K, K) rebuild),
   consensus disagreement ‖x_i − x̄‖, the round's eval metric, and
   reached/live flags. Everything derivable on the host — Eq.-(11)
   joules, wire bits — is priced in :meth:`RoundRecorder.finalize` in
@@ -86,13 +87,34 @@ class RoundRecorder:
         self.energy_params = (energy_params
                               or energy.paper_calibrated("fig3"))
         link_class = np.asarray(topo.link_class)
+        # the per-class link table in the ENGINE PLAN's native survival
+        # shape, so masked-round counts never touch a (K, K) buffer on
+        # the plans that avoid one (rule H1 holds with dropout active):
+        # (K, K) classes on dense-xla, (K, H) lane classes on
+        # sparse-pallas/sharded (padding lanes -> NONE), (M, K)
+        # schedule-slot classes on distributed (completion padding ->
+        # NONE). Every real directed edge appears exactly once in each
+        # representation, so the per-class counts are identical ints.
+        if engine.plan.kind == "distributed":
+            srcs, real = engine.schedule_structure()
+            rows = np.arange(srcs.shape[1])[None, :]
+            table = np.where(real, link_class[rows, srcs], topo_lib.NONE)
+        elif engine.plan.kind in ("sparse-pallas", "sharded"):
+            idx, valid = engine.lane_structure()
+            rows = np.arange(idx.shape[0])[:, None]
+            table = np.where(valid, link_class[rows, idx], topo_lib.NONE)
+        else:
+            table = link_class
         self._class_masks = {
-            "SL": link_class == topo_lib.SL,
-            "UL": link_class == topo_lib.UL,
-            "DL": link_class == topo_lib.DL,
+            "SL": table == topo_lib.SL,
+            "UL": table == topo_lib.UL,
+            "DL": table == topo_lib.DL,
         }
-        self._static_counts = {k: int(m.sum())
-                               for k, m in self._class_masks.items()}
+        self._static_counts = {
+            "SL": int((link_class == topo_lib.SL).sum()),
+            "UL": int((link_class == topo_lib.UL).sum()),
+            "DL": int((link_class == topo_lib.DL).sum()),
+        }
         p = self.energy_params
         bits = p.model_bits
         if self.codec is not None:
@@ -101,15 +123,20 @@ class RoundRecorder:
 
     # -- traced (inside the scan body) ----------------------------------
 
-    def row(self, stacked, mask, *, metric, reached, live):
-        """One live round's row. ``mask`` is the surviving-edge mask the
-        round's mixing ACTUALLY used (``None`` on static graphs, where
-        the counts are numpy constants folded into the program)."""
-        if mask is None:
+    def row(self, stacked, survival, *, metric, reached, live):
+        """One live round's row. ``survival`` is the PLAN-SHAPED
+        surviving-edge operand the round's mixing ACTUALLY used — from
+        ``engine.round_survival(t)``: (K, K) on dense-xla, (K, H) lanes
+        on sparse-pallas/sharded, (M, K) slots on distributed (``None``
+        on static graphs, where the counts are numpy constants folded
+        into the program). Counts stay exact int32 in every shape, so
+        the priced stream reconciles with the post-hoc replay."""
+        if survival is None:
             counts = {k: jnp.int32(self._static_counts[k])
                       for k in ("SL", "UL", "DL")}
         else:
-            counts = {k: jnp.sum(mask & jnp.asarray(self._class_masks[k]),
+            counts = {k: jnp.sum(survival
+                                 & jnp.asarray(self._class_masks[k]),
                                  dtype=jnp.int32)
                       for k in ("SL", "UL", "DL")}
         return {

@@ -18,7 +18,8 @@ P, SEED, ROUNDS = 0.3, 5, 32
 
 PLANS = [("dense-xla", {}),
          ("sparse-pallas", {}),
-         ("sharded", {"num_blocks": 4})]       # the shard_map emulation
+         ("sharded", {"num_blocks": 4}),       # the shard_map emulation
+         ("distributed", {})]                  # masked ppermute schedule
 
 
 def _topo():
@@ -67,6 +68,76 @@ def test_survival_mask_symmetry_and_p0():
     assert not (m & ~topo.adjacency).any()     # subgraph of the base
     m0 = np.asarray(topo_lib.survival_mask(topo.adjacency, 0.0, key, 2))
     np.testing.assert_array_equal(m0, topo.adjacency)   # p=0: identity
+
+
+def test_survival_mask_degenerate_p_and_self_loops():
+    """p=0 keeps every edge, p=1 keeps ONLY self-loops — agents never
+    fade out of their own neighbourhood, no matter how lossy the
+    network (the σ renormalization needs a non-empty row)."""
+    A = np.asarray(topo_lib.ring(K).adjacency).copy()
+    np.fill_diagonal(A, True)                  # base graph w/ self-loops
+    key = topo_lib.survival_key(9)
+    m1 = np.asarray(topo_lib.survival_mask(A, 1.0, key, 0))
+    np.testing.assert_array_equal(m1, np.eye(K, dtype=bool))
+    m0 = np.asarray(topo_lib.survival_mask(A, 0.0, key, 0))
+    np.testing.assert_array_equal(m0, A)
+    # mid-p: the diagonal survives every round
+    for t in range(6):
+        mt = np.asarray(topo_lib.survival_mask(A, 0.7, key, t))
+        assert mt.diagonal().all(), f"t={t}"
+
+
+def test_survival_mask_asymmetric_adjacency_no_pair_folding():
+    """Directed base graphs draw each DIRECTED edge independently —
+    edge id ``i*K + j`` with no min/max pair folding — so (i, j) and
+    (j, i) fade independently, while the symmetric convention folds
+    them onto one id and they fade together."""
+    rng = np.random.default_rng(0)
+    A = rng.random((K, K)) < 0.8               # dense directed graph
+    np.fill_diagonal(A, False)
+    assert not (A == A.T).all()
+    key = topo_lib.survival_key(4)
+    # auto-detection sees the asymmetry and picks per-direction ids
+    m = np.asarray(topo_lib.survival_mask(A, 0.5, key, 1))
+    both = A & A.T & ~np.eye(K, dtype=bool)    # reciprocated edge pairs
+    assert (m[both] != m.T[both]).any()        # directions disagree
+    # the same base FORCED symmetric folds the pairs back together
+    ms = np.asarray(topo_lib.survival_mask(A, 0.5, key, 1,
+                                           symmetric=True))
+    np.testing.assert_array_equal(ms[both], ms.T[both])
+    # per-edge call form matches the dense grid entry for entry
+    ii, jj = np.nonzero(A)
+    lanes = np.asarray(topo_lib.survival_mask(
+        K, 0.5, key, 1, symmetric=False, receivers=ii, senders=jj))
+    np.testing.assert_array_equal(lanes, m[ii, jj])
+
+
+def test_round_survival_is_the_dense_mask_in_plan_shape():
+    """engine.round_survival(t) on the non-dense plans is EXACTLY the
+    dense (K, K) mask gathered into the plan's native table — (K, H)
+    lanes on sparse-pallas/sharded, (M, K) schedule slots on
+    distributed — with padding forced dead. No (K, K) buffer, same
+    bits."""
+    topo = _topo()
+    dense = ConsensusEngine(topo, graph=_gp())
+    for plan, kw in [("sparse-pallas", {}), ("sharded", {"num_blocks": 4})]:
+        eng = ConsensusEngine(topo, plan=plan, graph=_gp(), **kw)
+        idx, valid = eng.lane_structure()
+        rows = np.arange(K)[:, None]
+        for t in (0, 3):
+            grid = np.asarray(dense.round_mask(jnp.int32(t)))
+            sv = np.asarray(eng.round_survival(jnp.int32(t)))
+            np.testing.assert_array_equal(sv[valid],
+                                          grid[rows, idx][valid])
+            assert not sv[~valid].any(), f"{plan} t={t}: padding lanes"
+    eng = ConsensusEngine(topo, plan="distributed", graph=_gp())
+    srcs, real = eng.schedule_structure()
+    cols = np.arange(K)[None, :]
+    for t in (0, 3):
+        grid = np.asarray(dense.round_mask(jnp.int32(t)))
+        sv = np.asarray(eng.round_survival(jnp.int32(t)))
+        np.testing.assert_array_equal(sv[real], grid[cols, srcs][real])
+        assert not sv[~real].any(), f"distributed t={t}: padding slots"
 
 
 def test_graph_process_validation_and_schedule():
@@ -132,6 +203,17 @@ def test_in_scan_masks_match_host_prefetch(plan, plan_kw, codec):
         p, st = s, eng.init_state(s)
         for t0 in range(0, ROUNDS, chunk):
             p, st = run(p, st, keys[t0:t0 + chunk], jnp.int32(t0))
+        if plan == "distributed":
+            # the distributed accumulation chain fuses differently at
+            # different scan lengths (1-ULP FMA effects between a
+            # length-1 and a length-32 program — even with masks riding
+            # as operands in both), so bit-parity is asserted against a
+            # prefetched drive chunked EXACTLY the same way
+            p_ref, st_ref = s, eng.init_state(s)
+            for t0 in range(0, ROUNDS, chunk):
+                p_ref, st_ref = run_prefetched(
+                    p_ref, st_ref, keys[t0:t0 + chunk],
+                    masks[t0:t0 + chunk])
         assert _tree_equal(p, p_ref), f"params chunk={chunk}"
         if codec is None:
             assert st is None and st_ref is None
@@ -157,17 +239,48 @@ def test_masked_mixing_matches_host_survivor_mixing():
                                           err_msg=f"{kind} t={t}")
 
 
-def test_distributed_plan_refuses_time_varying_graphs():
-    """The distributed plan's ppermute schedule is host-resolved at
-    trace time — non-static GraphProcesses must fail LOUDLY at engine
-    construction, and explicit masks at step time."""
-    with pytest.raises(ValueError, match="distributed"):
-        ConsensusEngine(_topo(), plan="distributed", graph=_gp())
-    eng = ConsensusEngine(_topo(), plan="distributed")
+def test_distributed_plan_supports_time_varying_graphs():
+    """Since the per-edge draw convention, the distributed plan is
+    maskable: the ppermute schedule SUPERSET stays host-resolved and
+    static while per-round survival zeroes schedule slots through the
+    traced ``sig_override`` operand. Jitted ``t=`` and jitted ``mask=``
+    drives must agree bit for bit (same compilation level — the
+    distributed accumulation chain fuses differently under jit vs
+    eager, so parity is asserted jit-vs-jit)."""
+    assert set(MASKABLE_PLANS) == {"dense-xla", "sparse-pallas",
+                                   "sharded", "distributed"}
+    eng = ConsensusEngine(_topo(), plan="distributed", graph=_gp())
     s = _stacked(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="mask"):
-        eng.step(s, mask=jnp.asarray(_topo().adjacency))
-    assert set(MASKABLE_PLANS) == {"dense-xla", "sparse-pallas", "sharded"}
+    step_t = jax.jit(lambda p, t: eng.step(p, t=t)[0])
+    step_m = jax.jit(lambda p, m: eng.step(p, mask=m)[0])
+    for t, rt in enumerate(topo_lib.dropout(_topo(), P, seed=SEED,
+                                            rounds=4)):
+        a = step_t(s, jnp.int32(t))
+        b = step_m(s, jnp.asarray(rt.adjacency))
+        assert _tree_equal(a, b), f"t={t}"
+    # explicit masks on a STATIC distributed engine work too (the
+    # schedule superset is the full base graph)
+    eng_st = ConsensusEngine(_topo(), plan="distributed")
+    full_mask = jnp.asarray(_topo().adjacency)
+    a, _ = jax.jit(lambda p: eng_st.step(p, mask=full_mask))(s)
+    b, _ = jax.jit(lambda p: eng_st.step(p))(s)
+    assert _tree_equal(a, b)                   # all-keep mask is a no-op
+
+
+def test_distributed_plan_bounds_schedule_superset():
+    """Satellite: the construction-time error path refuses only graphs
+    whose max degree exceeds the fixed schedule-superset bound — and the
+    message names the time-varying support, the slot count, and the
+    bound, not a blanket 'distributed refuses non-static graphs'."""
+    from repro.core.engine import DISTRIBUTED_SCHEDULE_BOUND
+    with pytest.raises(ValueError, match="schedule slots") as ei:
+        ConsensusEngine(topo_lib.full(DISTRIBUTED_SCHEDULE_BOUND + 6),
+                        plan="distributed", graph=_gp())
+    assert "time-varying" in str(ei.value)
+    assert str(DISTRIBUTED_SCHEDULE_BOUND) in str(ei.value)
+    # under the bound: constructs fine at the same K on a sparse graph
+    ConsensusEngine(topo_lib.ring(DISTRIBUTED_SCHEDULE_BOUND + 6),
+                    plan="distributed", graph=_gp())
 
 
 def test_time_varying_step_requires_round_index_or_mask():
@@ -317,8 +430,10 @@ def test_casestudy_respects_plan_knob():
     assert cs_sp.engine.graph.kind == "dropout"
     # per-task graph seeds follow dropout_seed + task_id
     assert cs_sp._engines[1].graph.seed == cs_sp.dropout_seed + 1
-    with pytest.raises(ValueError, match="distributed"):
-        CaseStudy(plan="distributed", dropout_p=0.2)
+    # the distributed plan takes dropout too (masked schedule superset)
+    cs_d = CaseStudy(plan="distributed", dropout_p=0.2)
+    assert cs_d.engine.plan.kind == "distributed"
+    assert cs_d.engine.graph.kind == "dropout"
 
 
 @pytest.mark.parametrize("plan,chunk", [("sparse-pallas", 8),

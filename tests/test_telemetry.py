@@ -78,7 +78,8 @@ def _assert_trees_equal(a, b):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("plan", ["dense-xla", "sparse-pallas", "sharded"])
+@pytest.mark.parametrize("plan", ["dense-xla", "sparse-pallas",
+                                  "sharded", "distributed"])
 @pytest.mark.parametrize("chunk", [1, 7, 32])
 def test_parity_matrix(plan, chunk):
     (p0, r0, h0), _ = _run(None, chunk, plan)
@@ -145,6 +146,23 @@ def test_ledger_reconciles_exactly_with_dropout_replay():
         assert e["edges"] == e["n_sl"] + e["n_ul"] + e["n_dl"]
         assert e["joules"] == pytest.approx(
             e["joules_sl"] + e["joules_ul"] + e["joules_dl"])
+
+
+def test_distributed_ledger_reconciles_exactly_with_dropout_replay():
+    """Acceptance: with dropout active on the DISTRIBUTED plan — the
+    masked ppermute schedule superset — the in-scan (M, K) slot counts
+    still bill each surviving directed edge exactly once, so the
+    streamed Eq.-(11) joules equal the post-hoc host replay bitwise."""
+    buf = tl.Telemetry()
+    (_, rounds, _), eng = _run(buf, 7, "distributed")
+    assert rounds > 0
+    want = sum(
+        t.round_comm_joules(buf.energy_params, codec=eng.codec)
+        for t in topo_lib.dropout(topo_lib.ring(K), P_DROP,
+                                  seed=DROP_SEED, rounds=rounds))
+    assert buf.joules() == want            # EXACT, not approx
+    for e in buf.events(driver="fl"):
+        assert e["edges"] == e["n_sl"] + e["n_ul"] + e["n_dl"]
 
 
 def test_casestudy_stream_reconciles_with_measured_ledger():
