@@ -58,6 +58,11 @@ rebuild → gather back to the lanes), both built from public engine
 APIs, bit-identical outputs, at K ∈ {1024, 4096} — median-of-3, with
 the full run asserting ≥ 5× at K=4096.
 
+``async_rows`` times STALENESS-TOLERANT rounds: the same scanned loop
+lockstep vs asynchronous (bernoulli availability, τ=3, decay 0.9 — the
+per-agent draws, float staleness σ, freezes, and clock/age carry all
+in-scan) — median-of-3 µs/round, reported not gated.
+
 Writes ``BENCH_consensus_scale.json`` (CWD; --out to override).
 
 Run: PYTHONPATH=src python -m benchmarks.consensus_scale [--quick|--smoke]
@@ -570,6 +575,45 @@ def mask_scale_rows(ks=MASK_SCALE_KS, p: float = 0.2, seed: int = 0,
     return rows
 
 
+def async_rows(rounds: int = 64, configs=None):
+    """µs/round of the STALENESS-TOLERANT async round loop vs the
+    lockstep loop on the same engine plan. The async path adds, per
+    round and all in-scan: the per-agent availability draw (one
+    fold-in per (agent, t) id), delivered/stale lane classification,
+    float staleness σ (decay^age, hard τ drop, renormalized on the
+    lanes), the per-agent bitwise freeze, and the clock/age AsyncState
+    advance. Median-of-3 per mode (R3); reported, not gated — the
+    delta is the measured price of churn-tolerance, and the lockstep
+    row doubles as the baseline the reduction tests pin bitwise."""
+    if configs is None:
+        configs = (("cluster", topo_lib.clusters(6, 2), "dense-xla", {}),
+                   ("ring", topo_lib.ring(256), "sparse-pallas", {}))
+    rows = []
+    for fam, topo, plan, kw in configs:
+        x = _stacked(topo.K, jnp.float32)
+        sync_eng = ConsensusEngine(topo, plan=plan, **kw)
+        asyn_eng = ConsensusEngine(
+            topo, plan=plan,
+            agents=topo_lib.AgentProcess.bernoulli(0.6, seed=0),
+            tau=3, staleness_decay=0.9, **kw)
+        run_sync = jax.jit(
+            lambda s, e=sync_eng: e.scan_rounds(s, rounds=rounds)[0])
+        run_asyn = jax.jit(
+            lambda s, e=asyn_eng: e.scan_rounds(s, rounds=rounds)[0])
+        us_sync = _median_us(run_sync, x) / rounds
+        us_asyn = _median_us(run_asyn, x) / rounds
+        for mode, us in (("lockstep", us_sync), ("staleness", us_asyn)):
+            rows.append(dict(
+                K=topo.K, topology=fam, plan=plan, rounds=rounds,
+                mode=mode, us_per_round=us,
+                overhead_vs_lockstep=us / max(us_sync, 1e-9)))
+        print(f"async_rows   {fam:10s} {plan:14s} lockstep "
+              f"{us_sync:9.1f} us/round  staleness {us_asyn:9.1f} "
+              f"us/round  ({us_asyn / max(us_sync, 1e-9):.2f}x, "
+              "median of 3)")
+    return rows
+
+
 def casestudy_eq11(codecs):
     """Codec-priced Eq.-(11) joules of ONE consensus round of the paper's
     12-robot case study (6 clusters × 2 robots, calibrated b(W))."""
@@ -644,6 +688,12 @@ def main():
         # masked-round scaling stays runnable in CI (tiny K, no gate —
         # the >= 5x acceptance assertion runs in the full sweep only)
         mask_rows = mask_scale_rows(ks=(256,), min_speedup_at_4096=None)
+        # async staleness rounds stay runnable in CI (tiny: one config,
+        # reported not gated)
+        as_rows = async_rows(
+            rounds=16,
+            configs=(("cluster", topo_lib.clusters(6, 2),
+                      "dense-xla", {}),))
     else:
         ks = tuple(k for k in KS if k <= 256) if args.quick else KS
         dtypes = ("float32",) if args.quick else DTYPES
@@ -656,6 +706,7 @@ def main():
         drop_rows = dropout_rows()
         tel_rows = telemetry_rows()
         mask_rows = mask_scale_rows()
+        as_rows = async_rows()
     payload = {
         "bench": "consensus_scale",
         "backend": jax.default_backend(),
@@ -670,6 +721,7 @@ def main():
         "dropout_rows": drop_rows,
         "telemetry_rows": tel_rows,
         "mask_scale_rows": mask_rows,
+        "async_rows": as_rows,
     }
     if args.smoke:
         payload["smoke"] = True

@@ -1,0 +1,52 @@
+"""Staleness-tolerant asynchronous consensus under agent churn.
+
+Real wireless fleets have duty-cycled radios, heavy-tail stragglers,
+and agents that join or leave mid-protocol. This example attaches an
+`AgentProcess` to a consensus engine and runs the SAME scanned round
+loop the lockstep protocol uses — sleeping agents freeze bitwise,
+awake receivers mix their neighbours' last-published params weighted
+by staleness (`staleness_decay**age`, hard-dropped past `tau` rounds),
+and the per-round telemetry ledger bills only the wires actually
+DELIVERED, reconciling exactly with a host-side availability replay.
+
+Run:  PYTHONPATH=src python examples/async_fleet.py
+"""
+import jax
+import numpy as np
+
+from repro import telemetry as telemetry_lib
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine
+
+K, ROUNDS = 8, 12
+
+
+def run(agents, label):
+    kw = ({"agents": agents, "tau": 3, "staleness_decay": 0.9}
+          if agents is not None else {})
+    eng = ConsensusEngine(topo_lib.ring(K), codec="int8", **kw)
+    tel = telemetry_lib.Telemetry()
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, 32))}
+    mixed, _ = eng.scan_rounds(stacked, rounds=ROUNDS, telemetry=tel)
+    ev = tel.events(driver="consensus")
+    joules = sum(e["joules"] for e in ev)
+    spread = float(np.std(np.asarray(mixed["w"]), axis=0).mean())
+    print(f"{label:>22}: active/round "
+          f"{[e['n_active'] for e in ev]}  max wire age "
+          f"{max(e['max_age'] for e in ev)}  comm {joules:.1f} J  "
+          f"disagreement {spread:.4f}")
+
+
+def main():
+    run(None, "lockstep (baseline)")
+    run(topo_lib.AgentProcess.bernoulli(0.6, seed=1), "60% duty cycle")
+    run(topo_lib.AgentProcess.straggler(K, scale=0.3, seed=1),
+        "heavy-tail stragglers")
+    run(topo_lib.AgentProcess.arrival(np.arange(K) * 2),
+        "staggered arrivals")
+    run(topo_lib.AgentProcess.departure(np.full(K, ROUNDS - 4)),
+        "mass departure")
+
+
+if __name__ == "__main__":
+    main()

@@ -329,6 +329,18 @@ def _tiny_drivers():
         loss_fn, stacked, sample_batches, engine, 0.1,
         target_fn=target_fn, max_rounds=2, key=jax.random.PRNGKey(0),
         chunk=2)
+    # async FL: churn + dropout + staleness bound through the REAL
+    # chunked driver — the availability draws, staleness weights, and
+    # per-agent freezes run in-scan and must audit callback-free like
+    # every other cached program
+    async_engine = ConsensusEngine(
+        topo_lib.ring(K), codec="int8",
+        graph=topo_lib.GraphProcess.dropout(0.3, seed=0),
+        agents=topo_lib.AgentProcess.bernoulli(0.6, seed=0), tau=2)
+    federated.run_fl_until_scan(
+        loss_fn, stacked, sample_batches, async_engine, 0.1,
+        target_fn=target_fn, max_rounds=2, key=jax.random.PRNGKey(0),
+        chunk=2, telemetry=telemetry_lib.Telemetry())
     # buffered telemetry: rows ride the ys, program is cached under the
     # telemetry-extended key and must re-audit callback-free (JX1/JX4)
     federated.run_fl_until_scan(
@@ -364,7 +376,9 @@ def audit_engine_plans(k: int = 8) -> List[Finding]:
     both static and MASKED (a ``GraphProcess.dropout`` engine — the
     in-scan per-lane survival draws and σ renormalization must stay
     callback-free and keep the integer wire integer through the
-    combine)."""
+    combine), plus one ASYNC configuration per plan (``AgentProcess``
+    churn + staleness bound τ — availability draws, staleness weights,
+    and the per-agent freeze are in-scan too)."""
     import jax
     import jax.numpy as jnp
     from repro.core import topology as topo_lib
@@ -377,15 +391,24 @@ def audit_engine_plans(k: int = 8) -> List[Finding]:
     for plan in PLAN_KINDS:
         codecs = ("int8", "topk:0.25") if plan in ("sparse-pallas",
                                                    "sharded") else (None,)
-        for codec, dropout in [(c, p) for c in codecs for p in (0.0, 0.3)]:
+        configs = [(c, p, False) for c in codecs for p in (0.0, 0.3)]
+        # one async config per plan: churn + dropout + τ, the maximal
+        # in-scan branch (staleness weights, renormalized float σ, age
+        # clocks, per-agent freeze)
+        configs.append((codecs[0], 0.3, True))
+        for codec, dropout, asynchronous in configs:
             kw = {"num_blocks": 2} if plan == "sharded" else {}
             graph = (topo_lib.GraphProcess.dropout(dropout, seed=0)
                      if dropout else None)
+            agents = (topo_lib.AgentProcess.bernoulli(0.6, seed=0)
+                      if asynchronous else None)
             eng = ConsensusEngine(topo, codec=codec, plan=plan,
-                                  graph=graph, **kw)
+                                  graph=graph, agents=agents,
+                                  tau=2 if asynchronous else None, **kw)
             meta = eng.audit_meta()
             label = (f"scan_rounds[{plan}/{codec}"
-                     + (f"/p={dropout}]" if dropout else "]"))
+                     + (f"/p={dropout}" if dropout else "")
+                     + ("/async]" if asynchronous else "]"))
             closed = jax.make_jaxpr(
                 lambda p: eng.scan_rounds(p, rounds=2))(params)
             for prim, f, ln in find_callbacks(closed):

@@ -2,12 +2,14 @@
 
 Rules (IDs referenced from ROADMAP.md §Invariants and allowlist.toml):
 
-R1  edge-survival fold-in draws must go through
-    ``topology.survival_mask``: a ``jax.random.uniform``/``bernoulli``
-    call consuming a ``fold_in(...)`` key anywhere else forks the
-    host/in-scan bit-parity convention the Eq.-(11) post-hoc billing
-    replays. (The definition site, ``core/topology.py::survival_mask``,
-    is structurally exempt.)
+R1  edge-survival / agent-availability fold-in draws must go through
+    ``topology.survival_mask`` or ``topology.availability_mask``: a
+    ``jax.random.uniform``/``bernoulli`` call consuming a
+    ``fold_in(...)`` key anywhere else forks the host/in-scan
+    bit-parity convention the Eq.-(11) post-hoc billing replays. (The
+    two definition sites, ``core/topology.py::survival_mask`` (edge
+    half) and ``core/topology.py::availability_mask`` (agent half),
+    are structurally exempt.)
 R2  no naked ``jax.jit`` in ``core/`` or ``rl/`` — round programs must
     go through ``scanloop.donating_jit`` so donation policy and the
     ``repro.analysis`` program registry see them (``core/scanloop.py``,
@@ -165,12 +167,15 @@ def lint_file(path: str, rel: str) -> List[Finding]:
     out: List[Finding] = []
 
     for line, func in facts.fold_draws:                               # R1
-        if rel.endswith("core/topology.py") and func == "survival_mask":
+        if rel.endswith("core/topology.py") and func in (
+                "survival_mask", "availability_mask"):
             continue          # the one blessed definition site
         out.append(Finding(
             "R1", rel, line,
-            f"raw uniform(fold_in(...)) edge-survival draw in {func}() — "
-            "go through topology.survival_mask (host/in-scan bit parity)"))
+            f"raw uniform(fold_in(...)) fold-in draw in {func}() — go "
+            "through topology.survival_mask (edges) or "
+            "topology.availability_mask (agents) for host/in-scan bit "
+            "parity"))
 
     if any(rel.startswith(s) for s in _R2_SCOPES) \
             and rel not in _R2_EXEMPT:                                # R2

@@ -73,10 +73,36 @@ def mixing_weights(data_sizes, adjacency, kind: str = "paper",
                    convergence difference.
     kind="metropolis": σ_{k,h} = 1 / (1 + max(deg_k, deg_h)), self weight
                    1 − Σ — symmetric, doubly stochastic.
+
+    ``adjacency`` may be bool (the lockstep protocol: an edge is up or
+    down) or FLOAT per-edge weights in [0, 1] (the async engine's
+    staleness-decayed lanes: λ^age on stale wires, 1 on fresh, 0 on
+    dropped). The float path scales each edge's mass by its weight
+    before normalizing — a stale neighbour is a faded lane with memory
+    — and a {0, 1}-valued float input reproduces the bool path bit for
+    bit (IEEE: ``1.0·x == x`` and ``0.0·x == +0.0`` for the finite
+    positive sizes here), which is what keeps the always-on/τ=∞
+    reduction exact. Metropolis degrees generalize to weighted degrees
+    ``Σ_h w_{k,h}`` on the float path.
     """
     sizes = jnp.asarray(data_sizes, jnp.float32)
-    A = jnp.asarray(adjacency, bool)
-    K = A.shape[0]
+    A = jnp.asarray(adjacency)
+    if jnp.issubdtype(A.dtype, jnp.floating):
+        A = A.astype(jnp.float32)
+        if kind == "paper":
+            w = A * sizes[None, :]
+            denom = w.sum(axis=1, keepdims=True)
+            if include_self:
+                denom = denom + sizes[:, None]
+            denom = jnp.maximum(denom, 1e-12)
+            return w / denom
+        if kind == "metropolis":
+            deg = A.sum(axis=1)
+            w = A * (1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])))
+            self_w = 1.0 - w.sum(axis=1)
+            return w + jnp.diag(self_w)
+        raise ValueError(_unknown_kind_msg(kind))
+    A = A.astype(bool)
     if kind == "paper":
         w = jnp.where(A, sizes[None, :], 0.0)
         denom = w.sum(axis=1, keepdims=True)
@@ -90,7 +116,20 @@ def mixing_weights(data_sizes, adjacency, kind: str = "paper",
                       0.0)
         self_w = 1.0 - w.sum(axis=1)
         return w + jnp.diag(self_w)
-    raise ValueError(f"unknown kind {kind!r}")
+    raise ValueError(_unknown_kind_msg(kind))
+
+
+MIX_KINDS = ("paper", "metropolis")
+
+
+def _unknown_kind_msg(kind) -> str:
+    """Refusal text for a bad mixing kind, naming the nearest match."""
+    import difflib
+    close = difflib.get_close_matches(str(kind), MIX_KINDS, n=1)
+    hint = f"; did you mean {close[0]!r}?" if close else ""
+    return (f"unknown mixing kind {kind!r}: supported kinds are "
+            f"'paper' (Eq.-(6) data-size weights) and 'metropolis' "
+            f"(doubly stochastic){hint}")
 
 
 def _effective_mix(mix):

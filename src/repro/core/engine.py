@@ -84,6 +84,30 @@ fold-in convention, which is what lets callers bill Eq.-(11) joules
 post hoc over exactly the rounds used with ZERO host-side per-round
 graph prefetch.
 
+Asynchronous consensus (:class:`repro.core.topology.AgentProcess`)
+------------------------------------------------------------------
+``ConsensusEngine(topo, agents=AgentProcess.…, tau=τ)`` layers per-AGENT
+availability on top of per-LINK survival: each round the engine draws
+WHO is awake (:func:`repro.core.topology.availability_mask`, the agent
+half of the fold-in convention — duty cycles, heavy-tail stragglers,
+arrivals, departures), and the protocol degrades instead of wedging.
+Inactive agents freeze — no local compute, no wires, params/codec
+residuals/round clocks hold bit-for-bit — while their neighbours keep
+mixing the frozen last-published state at staleness-decayed weight
+λ^age through the SAME per-plan σ machinery (``masked_mixing`` /
+``_lane_sigma`` / ``_schedule_sigma``, which accept float weights),
+until the wire age passes the hard bound τ and the lane drops with σ
+renormalizing over the survivors. The ``(clock, age)``
+:class:`AsyncState` threads through the scan carry
+(:meth:`async_step` / :meth:`scan_rounds` / the FL drivers), and
+telemetry bills Eq.-(11) only on DELIVERED wires — what active agents
+actually sent. Two invariants pin the construction:
+``AgentProcess.always_on()`` with τ=∞ reduces to the lockstep engine
+bit for bit (stale weights are exactly {0, 1} floats, and IEEE
+``1.0·x == x`` / ``0.0·x == +0.0`` make the weighted σ identical to
+the bool rebuild), and the in-scan availability draws are bit-parity
+with the host :func:`repro.core.topology.availability_stream` replay.
+
 Multi-round programs: :meth:`ConsensusEngine.scan_rounds` runs R rounds
 inside one ``lax.scan`` with the codec/EF state in the carry — the
 building block of the chunked protocol drivers
@@ -108,8 +132,9 @@ position meshes take ``distributed`` and everything else ``sharded``
 """
 from __future__ import annotations
 
+import difflib
 from dataclasses import dataclass
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -167,8 +192,62 @@ class ExecutionPlan:
 
     def __post_init__(self):
         if self.kind not in PLAN_KINDS:
+            close = difflib.get_close_matches(
+                str(self.kind), PLAN_KINDS + ("auto",), n=1)
+            hint = f"; did you mean {close[0]!r}?" if close else ""
             raise ValueError(f"unknown plan {self.kind!r}; "
-                             f"choose from {PLAN_KINDS} or 'auto'")
+                             f"choose from {PLAN_KINDS} or 'auto'{hint}")
+
+
+class AsyncState(NamedTuple):
+    """Per-caller carry of an async (agent-availability) engine:
+
+    * ``clock`` — (K,) int32 per-agent round clocks: how many rounds
+      each agent has actually PARTICIPATED in (ticks only while
+      active; a straggler's clock lags the global round index);
+    * ``age``   — plan-shaped int32 last-received-wire age per lane —
+      (K, K) on dense-xla, (K, H) lanes on sparse-pallas/sharded,
+      (M, K) schedule slots on distributed — rounds since receiver k
+      last got a FRESH wire from that lane's sender (0 after a
+      delivery, +1 per round otherwise).
+
+    ``init_async_state`` starts both at zero — the protocol's "all
+    agents exchanged initial models at t=0" convention.
+    """
+
+    clock: jnp.ndarray
+    age: jnp.ndarray
+
+
+class AsyncRound(NamedTuple):
+    """One round's resolved availability facts (``async_round``):
+    ``act`` (K,) activity bools; ``weights`` plan-shaped float32
+    staleness-scaled σ input (1 fresh, λ^age stale, 0 dropped);
+    ``delivered`` plan-shaped bools marking wires ACTUALLY shipped
+    this round (what Eq.-(11) bills); ``age`` the post-round wire
+    ages (the next carry's ``AsyncState.age``)."""
+
+    act: jnp.ndarray
+    weights: jnp.ndarray
+    delivered: jnp.ndarray
+    age: jnp.ndarray
+
+
+def where_active(active, new, old):
+    """Per-agent freeze/select over K-stacked pytrees: leaf ``[k]``
+    takes ``new[k]`` where ``active[k]`` else ``old[k]`` (broadcast over
+    trailing axes). An inactive agent's params / codec residuals /
+    clocks hold bit-for-bit; an all-True (all-False) mask returns the
+    first (second) operand's values exactly, which is what keeps the
+    always-on lockstep reduction and the fully-dead-round no-op
+    bitwise."""
+    act = jnp.asarray(active, bool)
+
+    def sel(n, o):
+        a = act.reshape(act.shape + (1,) * (jnp.ndim(n) - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree.map(sel, new, old)
 
 
 class ConsensusEngine:
@@ -206,6 +285,26 @@ class ConsensusEngine:
                 superset here, at construction, and refuses graphs
                 needing more than :data:`DISTRIBUTED_SCHEDULE_BOUND`
                 slots.
+    agents:     a :class:`repro.core.topology.AgentProcess` (or None ⇒
+                lockstep). Attaching one turns the engine ASYNC: each
+                round's per-agent availability is drawn in-scan from
+                the same fold-in convention, inactive agents freeze
+                (params, codec residuals, round clocks), and mixing
+                becomes staleness-weighted — a sleeping neighbour's
+                frozen last-published state mixes at weight
+                ``staleness_decay ** age`` until ``age > tau``, where
+                its lane drops and σ renormalizes (see
+                :meth:`async_round`). ``AgentProcess.always_on()``
+                with ``tau=None`` reduces to the lockstep engine bit
+                for bit.
+    tau:        hard staleness bound in rounds (async only): a lane
+                whose wire age exceeds τ drops from the mix entirely.
+                None ⇒ ∞ (stale lanes never drop); 0 ⇒ only fresh
+                wires mix.
+    staleness_decay: λ ∈ (0, 1] — stale lanes mix at λ^age. The
+                default 1.0 keeps stale weights at exactly 1 (the
+                lockstep-exact choice); smaller values fade old wires
+                smoothly before the hard τ cut.
     """
 
     def __init__(self, topology, *, codec=None, mesh=None,
@@ -213,12 +312,17 @@ class ConsensusEngine:
                  num_blocks: Optional[int] = None, data_sizes=None,
                  mix_kind: str = "paper", include_self: bool = True,
                  gamma: float = 1.0, error_feedback: bool = True,
-                 block_n: Optional[int] = None, graph=None):
+                 block_n: Optional[int] = None, graph=None,
+                 agents=None, tau=None, staleness_decay: float = 1.0):
         from repro import comms   # deferred: core stays import-light
         from repro.core import topology as topo_lib
         if isinstance(topology, ConsensusEngine):
             raise TypeError("pass a Topology or mix, not an engine "
                             "(use ConsensusEngine.wrap)")
+        if mix_kind not in consensus.MIX_KINDS:
+            # validated here, at construction, so a typo'd kind is
+            # refused before any (possibly jitted) round traces it
+            raise ValueError(consensus._unknown_kind_msg(mix_kind))
         self.topology = topology if hasattr(topology, "mixing") else None
         self.mix = np.asarray(
             topology.mixing(data_sizes, kind=mix_kind,
@@ -234,6 +338,50 @@ class ConsensusEngine:
         self.data_sizes = (None if data_sizes is None
                            else np.asarray(data_sizes, np.float32))
         self.graph = graph if graph is not None else topo_lib.GraphProcess.static()
+        if agents is not None and not isinstance(agents,
+                                                 topo_lib.AgentProcess):
+            raise TypeError(
+                f"agents= takes a repro.core.topology.AgentProcess (or "
+                f"None), got {agents!r}; build one with "
+                "AgentProcess.always_on() / .bernoulli(p_active) / "
+                ".straggler(K) / .arrival(t_join) / .departure(t_leave)")
+        self.agents = agents
+        if agents is not None:
+            if self.topology is None:
+                raise ValueError(
+                    "agent-availability (async) engines need an engine "
+                    "built from a Topology: staleness σ is REBUILT per "
+                    "round from the delivered/stale lanes with the "
+                    "engine's mixing kind, which cannot faithfully "
+                    "renormalize an arbitrary raw mix matrix")
+            pk = agents.K
+            if pk is not None and pk != self.K:
+                raise ValueError(
+                    f"agents={agents!r} pins a population of {pk} "
+                    f"agents but this engine's topology has K="
+                    f"{self.K}; rebuild the process at K={self.K}")
+        if tau is not None and agents is None:
+            raise ValueError(
+                f"tau={tau!r} (the hard staleness bound) only applies "
+                "to async engines: pass agents=AgentProcess.… alongside "
+                "it, or drop tau= for the lockstep protocol")
+        if tau is not None:
+            tf = float(tau)
+            if np.isnan(tf) or tf < 0:
+                raise ValueError(
+                    f"tau={tau!r} is not a staleness bound: τ counts "
+                    "rounds since the last delivered wire — use "
+                    "tau=None (∞: stale lanes never drop), tau=0 "
+                    "(only fresh wires mix), or a positive round count")
+            tau = None if np.isinf(tf) else tf
+        self.tau = tau
+        self.staleness_decay = float(staleness_decay)
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError(
+                f"staleness_decay={staleness_decay!r} must lie in "
+                "(0, 1]: a stale lane mixes at weight λ^age — use "
+                "λ=1.0 (no decay, the lockstep-exact default) or a "
+                "positive fraction like 0.9")
         self.plan = self._resolve_plan(plan, axis_name, num_blocks)
         self._schedule = None          # distributed ppermute rounds, lazy
         self._masked_struct = None     # (idx, lane-valid) for masked sig
@@ -261,25 +409,27 @@ class ConsensusEngine:
                 raise ValueError(
                     f"schedule masks are {self.graph.masks.shape[1:]}, "
                     f"population is K={self.K}")
-            if self.plan.kind == "distributed":
-                # resolve the ppermute schedule SUPERSET now: every
-                # surviving graph is a subgraph of the base graph, so a
-                # schedule covering the base graph covers every round —
-                # masked slots ride as σ = 0 on a traced operand, no
-                # retrace. One slot per matching ⇒ length ≈ max degree.
-                self._schedule = consensus.permutation_schedule(
-                    self.mix, self.gamma)
-                if len(self._schedule) > DISTRIBUTED_SCHEDULE_BOUND:
-                    raise ValueError(
-                        f"time-varying graphs on the distributed plan "
-                        f"mask a fixed ppermute schedule superset, and "
-                        f"this graph needs {len(self._schedule)} "
-                        f"schedule slots (≈ max degree "
-                        f"{self.topology.max_degree}) — over the "
-                        f"{DISTRIBUTED_SCHEDULE_BOUND}-slot bound "
-                        "(DISTRIBUTED_SCHEDULE_BOUND). Use a sparser "
-                        "base graph, or the sharded plan (per-lane "
-                        "masks, no schedule)")
+        if (self.plan.kind == "distributed"
+                and (self.graph.kind != "static"
+                     or self.agents is not None)):
+            # resolve the ppermute schedule SUPERSET now: every
+            # surviving (or delivered) graph is a subgraph of the base
+            # graph, so a schedule covering the base graph covers every
+            # round — masked slots ride as σ = 0 on a traced operand,
+            # no retrace. One slot per matching ⇒ length ≈ max degree.
+            self._schedule = consensus.permutation_schedule(
+                self.mix, self.gamma)
+            if len(self._schedule) > DISTRIBUTED_SCHEDULE_BOUND:
+                raise ValueError(
+                    f"time-varying/async engines on the distributed "
+                    f"plan mask a fixed ppermute schedule superset, "
+                    f"and this graph needs {len(self._schedule)} "
+                    f"schedule slots (≈ max degree "
+                    f"{self.topology.max_degree}) — over the "
+                    f"{DISTRIBUTED_SCHEDULE_BOUND}-slot bound "
+                    "(DISTRIBUTED_SCHEDULE_BOUND). Use a sparser "
+                    "base graph, or the sharded plan (per-lane "
+                    "masks, no schedule)")
 
     # -- plan selection -----------------------------------------------------
     def _resolve_plan(self, plan: str, axis_name: str,
@@ -433,6 +583,139 @@ class ConsensusEngine:
             keep = stack[jnp.asarray(t) % stack.shape[0]]
         return keep & jnp.asarray(real)
 
+    # -- per-agent availability (the async protocol) ------------------------
+    def availability(self, t):
+        """(K,) activity bools of round ``t`` under this engine's
+        :class:`~repro.core.topology.AgentProcess` (all-True when no
+        agents= is attached). ``t`` may be traced — drawn in-scan,
+        bit-identical to the host
+        :func:`repro.core.topology.availability_stream` replay."""
+        from repro.core import topology as topo_lib
+        return topo_lib.agent_availability(self.agents, self.K, t)
+
+    def _real_edges(self):
+        """Plan-shaped bool mask of the REAL base-graph lanes (numpy
+        constants baked at trace time): the adjacency on dense-xla,
+        lane validity on sparse-pallas/sharded, real schedule slots on
+        distributed."""
+        kind = self.plan.kind
+        if kind == "dense-xla":
+            return np.asarray(self.topology.adjacency, bool)
+        if kind == "distributed":
+            return self.schedule_structure()[1]
+        return self.lane_structure()[1]
+
+    def _act_shapes(self, act):
+        """Broadcast the (K,) activity vector into this plan's native
+        survival shape: ``(act_recv, act_sender)`` per lane — receiver
+        rows/sender columns on the (K, K) grid, receiver rows/sender
+        lane indices on (K, H), receiver columns/sender schedule
+        sources on (M, K)."""
+        kind = self.plan.kind
+        if kind == "dense-xla":
+            return act[:, None], act[None, :]
+        if kind == "distributed":
+            srcs, _real = self.schedule_structure()
+            return act[None, :], act[jnp.asarray(srcs)]
+        idx, _valid = self.lane_structure()
+        return act[:, None], act[jnp.asarray(idx)]
+
+    def init_async_state(self) -> AsyncState:
+        """Zeroed :class:`AsyncState` carry — clocks at 0, every wire
+        age 0 ("all agents exchanged initial models at t=0")."""
+        if self.agents is None:
+            raise ValueError(
+                "init_async_state() is the async protocol's carry: this "
+                "engine has no agents= AgentProcess attached — pass "
+                "agents=AgentProcess.bernoulli(p_active) (or another "
+                "availability process) at construction")
+        shape = np.asarray(self._real_edges()).shape
+        return AsyncState(jnp.zeros(self.K, jnp.int32),
+                          jnp.zeros(shape, jnp.int32))
+
+    def async_round(self, t, age) -> AsyncRound:
+        """Resolve round ``t``'s availability facts against the wire
+        ages ``age`` (the :class:`AsyncState` carry): who is awake,
+        which wires actually ship, and the staleness-scaled σ input.
+
+        Per lane (receiver k ← sender h), with ``up`` the link survival
+        of the engine's graph process (all real lanes, for a static
+        graph):
+
+        * DELIVERED (``act[h] & act[k] & up``): a fresh wire ships;
+          weight 1, age resets to 0. A lane whose SENDER is awake but
+          whose LINK faded drops outright (weight 0) — exactly today's
+          lockstep fade semantics, which is what keeps the always-on
+          reduction bitwise.
+        * STALE (``act[k] & ~act[h]``, real lane): the sender sleeps,
+          so the receiver keeps mixing the sender's FROZEN last-
+          published params at weight ``staleness_decay ** age`` — a
+          stale neighbour is a faded lane with memory — until
+          ``age > τ``, where the lane drops and σ renormalizes over
+          the survivors. (Optimistic-cache caveat: if the sender's
+          last pre-sleep wire itself faded, the cache is the frozen
+          params, not the older wire actually received — the engine
+          models the cache, not a (K, H, N) wire buffer.)
+        * otherwise weight 0 (receiver asleep, or padding lane).
+
+        ``age`` counts rounds since the last delivery and increments
+        on every non-delivered lane. With ``AgentProcess.always_on``
+        and τ=∞ every real surviving lane is DELIVERED, the weights
+        are exactly {0.0, 1.0}, and the staleness σ reproduces the
+        lockstep σ bit for bit.
+        """
+        if self.agents is None:
+            raise ValueError(
+                "async_round() needs an agents= AgentProcess attached "
+                "at construction (this engine runs the lockstep "
+                "protocol; use step(t=...) instead)")
+        act = self.availability(t)
+        act_recv, act_send = self._act_shapes(act)
+        real = jnp.asarray(self._real_edges())
+        link = self.round_survival(t)   # already ANDed with real lanes
+        up = real if link is None else jnp.asarray(link)
+        age = jnp.asarray(age, jnp.int32)
+        delivered = act_send & act_recv & up
+        new_age = jnp.where(delivered, 0, age + 1)
+        stale = act_recv & ~act_send & real
+        if self.tau is not None:
+            stale = stale & (new_age <= self.tau)
+        if self.staleness_decay == 1.0:
+            stale_w = jnp.float32(1.0)
+        else:
+            stale_w = (jnp.float32(self.staleness_decay)
+                       ** new_age.astype(jnp.float32))
+        weights = jnp.where(delivered, jnp.float32(1.0),
+                            jnp.where(stale, stale_w, jnp.float32(0.0)))
+        return AsyncRound(act, weights, delivered, new_age)
+
+    def async_step(self, stacked_params, codec_state=None, key=None, *,
+                   t=None, state: Optional[AsyncState] = None,
+                   round_info: Optional[AsyncRound] = None):
+        """One async Eq.-(6) round: resolve availability, staleness-mix
+        through :meth:`step`, freeze inactive agents' params and codec
+        residuals, and advance clocks/ages. Returns ``(params,
+        codec_state, AsyncState, AsyncRound)`` — thread the state into
+        the next call (start from :meth:`init_async_state`); pass
+        ``round_info=`` to reuse facts already drawn (e.g. shared with
+        telemetry), else they are drawn from ``t``."""
+        if state is None:
+            raise ValueError(
+                "async_step needs state= (the AsyncState carry — start "
+                "from init_async_state())")
+        ar = (round_info if round_info is not None
+              else self.async_round(t, state.age))
+        p, st = self.step(stacked_params, codec_state, key,
+                          survival=ar.weights)
+        p = where_active(ar.act, p, stacked_params)
+        if st is not None:
+            old = (codec_state if codec_state is not None
+                   else self.init_state(stacked_params))
+            st = where_active(ar.act, st, old)
+        new_state = AsyncState(
+            state.clock + ar.act.astype(state.clock.dtype), ar.age)
+        return p, st, new_state, ar
+
     def _sizes(self):
         return (np.ones(self.K, np.float32) if self.data_sizes is None
                 else self.data_sizes)
@@ -444,25 +727,35 @@ class ConsensusEngine:
         entry, O(K·H) with no dense rebuild. Faded/padding lanes land
         at σ = 0, exact no-ops in the fused kernels. Bit-identical to
         gathering the dense rebuild under uniform data sizes (sums of
-        equal addends are association-free)."""
+        equal addends are association-free).
+
+        ``survival`` may be bool lane keeps (the lockstep protocol) or
+        FLOAT per-lane weights in [0, 1] (the async staleness path:
+        λ^age on stale lanes, 1 fresh, 0 dropped) — each lane's σ mass
+        scales by its weight before renormalizing; {0, 1} floats
+        reproduce the bool path bit for bit, and metropolis degrees
+        generalize to weighted degrees."""
         idx, _valid = self.lane_structure()
         keep = jnp.asarray(survival)
         sizes = jnp.asarray(self._sizes())
+        weighted = jnp.issubdtype(keep.dtype, jnp.floating)
+        if weighted:
+            keep = keep.astype(jnp.float32)
         if self.mix_kind == "paper":
-            w = jnp.where(keep, sizes[jnp.asarray(idx)], 0.0)
+            w = (keep * sizes[jnp.asarray(idx)] if weighted
+                 else jnp.where(keep, sizes[jnp.asarray(idx)], 0.0))
             denom = w.sum(axis=1)
             if self.include_self:
                 denom = denom + sizes
             sig = w / jnp.maximum(denom, 1e-12)[:, None]
         elif self.mix_kind == "metropolis":
-            deg = keep.sum(axis=1).astype(jnp.float32)
-            sig = jnp.where(
-                keep,
-                1.0 / (1.0 + jnp.maximum(deg[:, None],
-                                         deg[jnp.asarray(idx)])),
-                0.0)
+            deg = (keep.sum(axis=1) if weighted
+                   else keep.sum(axis=1).astype(jnp.float32))
+            inv = 1.0 / (1.0 + jnp.maximum(deg[:, None],
+                                           deg[jnp.asarray(idx)]))
+            sig = keep * inv if weighted else jnp.where(keep, inv, 0.0)
         else:
-            raise ValueError(f"unknown kind {self.mix_kind!r}")
+            raise ValueError(consensus._unknown_kind_msg(self.mix_kind))
         return jnp.asarray(idx), sig
 
     def _schedule_sigma(self, survival):
@@ -472,25 +765,31 @@ class ConsensusEngine:
         ``sig_stack`` without retracing (the ppermute pairs stay
         trace-time structure). Every real directed edge occupies
         exactly one slot, so the per-target sum over slots equals the
-        dense rebuild's per-row sum over neighbours."""
+        dense rebuild's per-row sum over neighbours. Like
+        :meth:`_lane_sigma`, ``survival`` may be bool slot keeps or
+        float staleness weights — {0, 1} floats reproduce the bool
+        path bit for bit."""
         srcs, _real = self.schedule_structure()
         keep = jnp.asarray(survival)                 # (M, K)
         sizes = jnp.asarray(self._sizes())
+        weighted = jnp.issubdtype(keep.dtype, jnp.floating)
+        if weighted:
+            keep = keep.astype(jnp.float32)
         if self.mix_kind == "paper":
-            w = jnp.where(keep, sizes[jnp.asarray(srcs)], 0.0)
+            w = (keep * sizes[jnp.asarray(srcs)] if weighted
+                 else jnp.where(keep, sizes[jnp.asarray(srcs)], 0.0))
             denom = w.sum(axis=0)
             if self.include_self:
                 denom = denom + sizes
             sig = w / jnp.maximum(denom, 1e-12)[None, :]
         elif self.mix_kind == "metropolis":
-            deg = keep.sum(axis=0).astype(jnp.float32)
-            sig = jnp.where(
-                keep,
-                1.0 / (1.0 + jnp.maximum(deg[None, :],
-                                         deg[jnp.asarray(srcs)])),
-                0.0)
+            deg = (keep.sum(axis=0) if weighted
+                   else keep.sum(axis=0).astype(jnp.float32))
+            inv = 1.0 / (1.0 + jnp.maximum(deg[None, :],
+                                           deg[jnp.asarray(srcs)]))
+            sig = keep * inv if weighted else jnp.where(keep, inv, 0.0)
         else:
-            raise ValueError(f"unknown kind {self.mix_kind!r}")
+            raise ValueError(consensus._unknown_kind_msg(self.mix_kind))
         return (self.gamma * sig).T
 
     # -- the round ----------------------------------------------------------
@@ -527,6 +826,17 @@ class ConsensusEngine:
                 f"per-round mix overrides need the dense-xla plan, not "
                 f"{kind!r} (sparse structure is fixed at trace time; "
                 "time-varying graphs go through mask=/t= instead)")
+        if self.agents is not None and survival is None:
+            # deriving survival from t=/mask= here would silently
+            # ignore WHO is awake — mixing sleeping agents at full
+            # weight and billing wires nobody sent
+            raise ValueError(
+                f"this engine carries an availability process "
+                f"{self.agents!r}: step() needs the staleness-weighted "
+                "survival from async_round(t, age).weights passed via "
+                "survival= — or drive whole rounds through async_step()"
+                " / scan_rounds(), which thread the (clock, age) "
+                "AsyncState carry for you")
         if survival is None and (mask is not None or t is not None):
             if mix is not None and mask is not None:
                 raise ValueError("pass mix= or mask=/t=, not both")
@@ -626,10 +936,12 @@ class ConsensusEngine:
             # hoist the host-computed schedule out of the scan body
             self._schedule = consensus.permutation_schedule(
                 self.mix, self.gamma)
+        is_async = self.agents is not None
         R = (int(rounds) if keys is None
              else jax.tree.leaves(keys)[0].shape[0])
         ts = (t0 + jnp.arange(R, dtype=jnp.int32)
-              if self.graph.kind != "static" or telemetry is not None
+              if (self.graph.kind != "static" or is_async
+                  or telemetry is not None)
               else None)
         recorder = (telemetry.recorder_for(self)
                     if telemetry is not None else None)
@@ -639,30 +951,57 @@ class ConsensusEngine:
 
         def body(carry, xs):
             t, k = xs
-            # telemetry draws the round's survival ONCE — in the plan's
-            # native shape, never a dense (K, K) rebuild — and shares
-            # it with step() (survival= takes precedence over t=;
-            # identical ops, so results match the telemetry-off t=
-            # path bit for bit)
-            sv = (self.round_survival(t)
-                  if telemetry is not None and t is not None else None)
-            p, st = self.step(carry[0], carry[1], k, t=t, survival=sv)
+            if is_async:
+                p0, st0, ast = carry
+                # the round's availability facts are drawn ONCE and
+                # shared between the mixing weights, the per-agent
+                # freeze, and the telemetry row (which bills only
+                # DELIVERED wires)
+                ar = self.async_round(t, ast.age)
+                p, st = self.step(p0, st0, k, survival=ar.weights)
+                p = where_active(ar.act, p, p0)
+                if st is not None:
+                    st = where_active(ar.act, st, st0)
+                ast = AsyncState(
+                    ast.clock + ar.act.astype(ast.clock.dtype), ar.age)
+                out = (p, st, ast)
+                sv_row, act, age = ar.delivered, ar.act, ar.age
+            else:
+                # telemetry draws the round's survival ONCE — in the
+                # plan's native shape, never a dense (K, K) rebuild —
+                # and shares it with step() (survival= takes precedence
+                # over t=; identical ops, so results match the
+                # telemetry-off t= path bit for bit)
+                sv = (self.round_survival(t)
+                      if telemetry is not None and t is not None
+                      else None)
+                p, st = self.step(carry[0], carry[1], k, t=t, survival=sv)
+                out = (p, st)
+                sv_row, act, age = sv, None, None
             row = None
             if telemetry is not None:
-                row = recorder.row(p, sv, metric=jnp.float32(0.0),
+                row = recorder.row(p, sv_row, metric=jnp.float32(0.0),
                                    reached=jnp.asarray(False),
-                                   live=jnp.asarray(True))
+                                   live=jnp.asarray(True),
+                                   active=act, age=age)
                 if stream_cb is not None:
                     jax.debug.callback(stream_cb, t, row, ordered=True)
-            return (p, st), row
+            return out, row
 
+        carry0 = (stacked_params, codec_state)
+        if is_async:
+            # NOTE: each scan_rounds call starts a FRESH AsyncState
+            # (clocks and ages at zero); callers that chunk a longer
+            # round loop thread the state themselves via async_step or
+            # the FL drivers, which carry it across chunks
+            carry0 = carry0 + (self.init_async_state(),)
         if ts is None and keys is None:
-            (p, st), rows = jax.lax.scan(
+            final, rows = jax.lax.scan(
                 lambda c, _x: body(c, (None, None)),
-                (stacked_params, codec_state), None, length=R)
+                carry0, None, length=R)
         else:
-            (p, st), rows = jax.lax.scan(
-                body, (stacked_params, codec_state), (ts, keys))
+            final, rows = jax.lax.scan(body, carry0, (ts, keys))
+        p, st = final[0], final[1]
         if telemetry is not None:
             telemetry.record_rounds(recorder, rows, t0, driver="consensus")
         return p, st
@@ -715,5 +1054,9 @@ class ConsensusEngine:
     def __repr__(self):
         codec = self.codec.name if self.codec is not None else None
         graph = "" if self.graph.kind == "static" else f", graph={self.graph!r}"
+        agents = "" if self.agents is None else (
+            f", agents={self.agents!r}, tau="
+            f"{'inf' if self.tau is None else self.tau}")
         return (f"ConsensusEngine(K={self.K}, plan={self.plan.kind!r}, "
-                f"codec={codec!r}, blocks={self.plan.num_blocks}{graph})")
+                f"codec={codec!r}, blocks={self.plan.num_blocks}"
+                f"{graph}{agents})")

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scanloop
-from repro.core.engine import ConsensusEngine
+from repro.core.engine import AsyncState, ConsensusEngine, where_active
 from repro.optim import sgd, apply_updates
 
 
@@ -33,7 +33,8 @@ def local_steps(loss_fn, params, batches, lr: float):
 def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
                            engine, lr: float,
                            codec=None, codec_state=None, key=None,
-                           t=None, mask=None, survival=None):
+                           t=None, mask=None, survival=None,
+                           active=None):
     """One FL round, Eq. (6) semantics: every agent takes its local SGD
     steps, then one consensus mixing step through the engine.
 
@@ -56,15 +57,32 @@ def decentralized_fl_round(loss_fn, stacked_params, stacked_batches,
     shares it between the mixing and the metrics row); ``engine.step``
     gives them precedence over ``t``, and the survival-bearing ops are
     the same either way, so results are bit-identical.
+
+    ``active`` (async engines): the round's (K,) activity bools from
+    ``engine.async_round(t, age)`` — inactive agents keep their
+    pre-round params (their local SGD is discarded bit-exactly) and
+    their post-mix params and codec residuals freeze, so a sleeping
+    agent neither moves nor accumulates error-feedback state; pass the
+    matching ``survival=round.weights`` alongside it.
     """
     engine = ConsensusEngine.wrap(engine, codec=codec)
     new_params = jax.vmap(
         lambda p, b: local_steps(loss_fn, p, b, lr))(stacked_params,
                                                      stacked_batches)
+    if active is not None:
+        # inactive agents skip local compute: hold the round's input
+        new_params = where_active(active, new_params, stacked_params)
     # static engines ignore t (round_survival is None), so the traced
     # program is unchanged for them
     params, state = engine.step(new_params, codec_state, key, t=t,
                                 mask=mask, survival=survival)
+    if active is not None:
+        # inactive receivers don't mix; their codec residuals hold too
+        params = where_active(active, params, new_params)
+        if state is not None:
+            old_state = (codec_state if codec_state is not None
+                         else engine.init_state(new_params))
+            state = where_active(active, state, old_state)
     if engine.codec is None:
         return params
     return params, state
@@ -167,28 +185,47 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                                             name="target_fn")
     _, metric_sds = jax.eval_shape(tfn, stacked_params)
 
+    is_async = engine.agents is not None
+
     def build():
 
         def body(carry, t):
             def live(c):
-                p, st, k, _ = c
+                if is_async:
+                    p, st, k, _, ast = c
+                else:
+                    p, st, k, _ = c
                 k, sk = jax.random.split(k)
                 batches = sampler(sk, t)
-                # telemetry shares ONE plan-shaped survival draw between
-                # the round's mixing and its row; engine.step gives
-                # survival= precedence over t=, so the survival-bearing
-                # ops are identical to the telemetry-off t= path
-                # (bit-parity)
-                sv = (engine.round_survival(t) if telemetry is not None
-                      else None)
+                if is_async:
+                    # one availability draw per round, shared between
+                    # the staleness mixing weights, the per-agent
+                    # freeze, and the telemetry row (billing only
+                    # DELIVERED wires)
+                    ar = engine.async_round(t, ast.age)
+                    sv, act, sv_row = ar.weights, ar.act, ar.delivered
+                else:
+                    # telemetry shares ONE plan-shaped survival draw
+                    # between the round's mixing and its row;
+                    # engine.step gives survival= precedence over t=,
+                    # so the survival-bearing ops are identical to the
+                    # telemetry-off t= path (bit-parity)
+                    sv = (engine.round_survival(t)
+                          if telemetry is not None else None)
+                    act, sv_row = None, sv
                 if has_codec:
                     k, ck = jax.random.split(k)
                     p, st = decentralized_fl_round(
                         loss_fn, p, batches, engine, lr, codec_state=st,
-                        key=ck, t=t, survival=sv)
+                        key=ck, t=t, survival=sv, active=act)
                 else:
                     p = decentralized_fl_round(loss_fn, p, batches, engine,
-                                               lr, t=t, survival=sv)
+                                               lr, t=t, survival=sv,
+                                               active=act)
+                if is_async:
+                    ast = AsyncState(
+                        ast.clock + ar.act.astype(ast.clock.dtype),
+                        ar.age)
                 if eval_every == 1:
                     r, metric = tfn(p)
                     hit = jnp.asarray(r, bool)
@@ -212,12 +249,16 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                 ys = (hit, do_eval, jnp.asarray(metric, metric_sds.dtype))
                 if telemetry is not None:
                     row = recorder.row(
-                        p, sv,
+                        p, sv_row,
                         metric=jnp.mean(jnp.asarray(metric, jnp.float32)),
-                        reached=hit, live=jnp.asarray(True))
+                        reached=hit, live=jnp.asarray(True),
+                        active=act,
+                        age=(ar.age if is_async else None))
                     if stream_cb is not None:
                         jax.debug.callback(stream_cb, t, row, ordered=True)
                     ys = ys + (row,)
+                if is_async:
+                    return (p, st, k, hit, ast), ys
                 return (p, st, k, hit), ys
 
             def frozen(c):
@@ -234,11 +275,22 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                                    t < max_rounds)
             return jax.lax.cond(pred, live, frozen, carry)
 
-        def run_chunk(p, st, k, r, ts):
-            # executes at TRACE time only: the counter moves exactly when
-            # jax re-traces this chunk program (the tier-1 guard's signal)
-            scanloop.TRACE_COUNTS["fl_chunk"] += 1
-            return jax.lax.scan(body, (p, st, k, r), ts)
+        if is_async:
+            # the async carry additionally threads the AsyncState —
+            # per-agent clocks and per-lane wire ages persist ACROSS
+            # chunks (handed back to the host at each boundary like the
+            # params), so chunked and per-round drivers see one
+            # continuous availability history
+            def run_chunk(p, st, k, r, ts, ast):
+                scanloop.TRACE_COUNTS["fl_chunk"] += 1
+                return jax.lax.scan(body, (p, st, k, r, ast), ts)
+        else:
+            def run_chunk(p, st, k, r, ts):
+                # executes at TRACE time only: the counter moves exactly
+                # when jax re-traces this chunk program (the tier-1
+                # guard's signal)
+                scanloop.TRACE_COUNTS["fl_chunk"] += 1
+                return jax.lax.scan(body, (p, st, k, r), ts)
 
         return scanloop.donating_jit(run_chunk, donate_argnums=(0, 1))
 
@@ -275,10 +327,17 @@ def _run_fl_chunked(loss_fn, stacked_params, sample_batches, engine, lr, *,
     history = []
     rounds_used = max_rounds
     reached = jnp.asarray(False)
+    astate = (engine.init_async_state() if engine.agents is not None
+              else None)
     for start in range(0, max_rounds, chunk):
         ts = jnp.arange(start, start + chunk, dtype=jnp.int32)
-        (stacked_params, codec_state, key, reached), ys = run_chunk(
-            stacked_params, codec_state, key, reached, ts)
+        if astate is not None:
+            (stacked_params, codec_state, key, reached, astate), ys = \
+                run_chunk(stacked_params, codec_state, key, reached, ts,
+                          astate)
+        else:
+            (stacked_params, codec_state, key, reached), ys = run_chunk(
+                stacked_params, codec_state, key, reached, ts)
         hits, evaled, metrics = (np.asarray(y) for y in ys[:3])  # ONE sync
         if telemetry is not None:
             telemetry.record_rounds(recorder, ys[3], start, driver="fl",

@@ -526,6 +526,204 @@ def dropout(topo: Topology, p: float, seed: int = 0,
     return [next(gen) for _ in range(rounds)]
 
 
+# -- per-agent availability (the async protocol's churn source) -------------
+
+
+def availability_key(seed: int):
+    """Root PRNG key of a per-agent availability stream (seeded churn)."""
+    return jax.random.PRNGKey(seed)
+
+
+def availability_mask(K, p_inactive, key, t, *, agents=None):
+    """Per-agent activity bools for round ``t`` — the AGENT half of the
+    repo's fold-in bit-parity convention (the link half is
+    :func:`survival_mask`; analysis rule R1 blesses exactly these two
+    draw sites).
+
+    Agent ``k`` is ACTIVE in round ``t`` iff
+
+        ``uniform(fold_in(fold_in(key, t), k)) >= p_inactive_k`` ,
+
+    one independent draw per (round, agent), a pure function of
+    ``(key, t, k)``. ``p_inactive`` is a scalar (i.i.d. duty cycle) or a
+    (K,) array of per-agent sleep probabilities (heterogeneous straggler
+    populations); ``p = 0`` keeps every agent awake and ``p = 1`` sleeps
+    it every round — both exact (``uniform`` draws in [0, 1)).
+
+    ``agents=`` restricts the draw to the given agent-id array (any
+    shape) and returns bools of that shape, evaluated at those ids only
+    — bit-identical to the corresponding entries of the full (K,) draw,
+    which is what lets plan-native kernels sample availability at their
+    own lane/slot indices. ``t`` may be traced (the scanned drivers draw
+    availability INSIDE ``lax.scan`` bodies); jax's counter-based PRNG
+    makes the host replay :func:`availability_stream` and the in-scan
+    draws agree bit for bit.
+    """
+    ids = (jnp.arange(int(K), dtype=jnp.uint32) if agents is None
+           else jnp.asarray(agents, jnp.uint32))
+    p = jnp.asarray(p_inactive, jnp.float32)
+    thresh = p if p.ndim == 0 else p[ids.astype(jnp.int32)]
+    rk = jax.random.fold_in(key, t)
+    u = jax.vmap(
+        lambda a: jax.random.uniform(jax.random.fold_in(rk, a)))(
+        ids.ravel()).reshape(ids.shape)
+    return u >= thresh
+
+
+@dataclass(frozen=True)
+class AgentProcess:
+    """A per-agent availability process — WHO participates each round,
+    the companion of :class:`GraphProcess` (which says which LINKS are
+    up). Resolved once at ConsensusEngine construction; per-round
+    activity is then drawn in-scan by :func:`agent_availability`:
+
+    * ``always_on()``          — every agent, every round (the lockstep
+      protocol; with τ=∞ the async engine reduces to today's engine bit
+      for bit);
+    * ``bernoulli(p_active)``  — i.i.d. duty cycle: each agent is awake
+      each round with probability ``p_active`` (duty-cycled radios);
+    * ``straggler(K, ...)``    — heterogeneous heavy-tail population:
+      per-agent sleep probabilities drawn host-side at CONSTRUCTION from
+      a Pareto(``tail``) tail (most agents almost never sleep, a few
+      sleep most rounds — the classic straggler fleet), then applied
+      per round through the same in-scan draw;
+    * ``arrival(t_join)``      — agent ``k`` joins at round
+      ``t_join[k]`` (active iff ``t >= t_join[k]``), deterministic;
+    * ``departure(t_leave)``   — agent ``k`` leaves at round
+      ``t_leave[k]`` (active iff ``t < t_leave[k]``), deterministic.
+
+    An INACTIVE agent neither runs local SGD nor sends or receives
+    wires that round: its params and codec residuals freeze, its round
+    clock stops, and (under the async engine's staleness rule) its
+    neighbours keep mixing its frozen last-published state at decayed
+    weight until the wire age passes the engine's hard bound τ.
+    """
+
+    kind: str = "always_on"   # always_on | bernoulli | straggler
+                              # | arrival | departure
+    p_active: float = 1.0
+    seed: int = 0
+    rates: Optional[np.ndarray] = None     # (K,) sleep probs, straggler
+    t_join: Optional[np.ndarray] = None    # (K,) int rounds, arrival
+    t_leave: Optional[np.ndarray] = None   # (K,) int rounds, departure
+
+    def __post_init__(self):
+        kinds = ("always_on", "bernoulli", "straggler", "arrival",
+                 "departure")
+        if self.kind not in kinds:
+            raise ValueError(
+                f"unknown agent process {self.kind!r}; choose from "
+                f"{kinds} (see AgentProcess's constructors)")
+        if self.kind == "bernoulli" and not 0 <= self.p_active <= 1:
+            raise ValueError(
+                f"bernoulli duty cycle p_active must be in [0, 1], got "
+                f"{self.p_active}")
+        if self.kind == "straggler":
+            r = np.asarray(self.rates, np.float64)
+            if r.ndim != 1 or not r.size:
+                raise ValueError(
+                    f"straggler rates must be a non-empty (K,) vector "
+                    f"of per-agent sleep probabilities, got shape "
+                    f"{r.shape}")
+            if not ((r >= 0) & (r <= 1)).all():
+                raise ValueError(
+                    "straggler rates must all lie in [0, 1], got "
+                    f"min={r.min()} max={r.max()}")
+            object.__setattr__(self, "rates", r)
+        for name in ("t_join", "t_leave"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            v = np.asarray(v, np.int64)
+            if v.ndim != 1 or not v.size:
+                raise ValueError(
+                    f"{name} must be a non-empty (K,) vector of round "
+                    f"indices, got shape {v.shape}")
+            object.__setattr__(self, name, v)
+
+    @property
+    def K(self) -> Optional[int]:
+        """Population size the process pins, or None if size-free."""
+        for v in (self.rates, self.t_join, self.t_leave):
+            if v is not None:
+                return int(v.shape[0])
+        return None
+
+    @staticmethod
+    def always_on() -> "AgentProcess":
+        return AgentProcess("always_on")
+
+    @staticmethod
+    def bernoulli(p_active: float, seed: int = 0) -> "AgentProcess":
+        return AgentProcess("bernoulli", p_active=float(p_active),
+                            seed=int(seed))
+
+    @staticmethod
+    def straggler(K: int, *, tail: float = 1.1, scale: float = 0.05,
+                  cap: float = 0.9, seed: int = 0,
+                  rates=None) -> "AgentProcess":
+        """Heavy-tail straggler fleet: per-agent sleep probability
+        ``min(cap, scale · Pareto(tail))`` drawn host-side from
+        ``seed`` (pass explicit ``rates=`` to pin them instead)."""
+        if rates is None:
+            rng = np.random.default_rng(seed)
+            rates = np.minimum(float(cap),
+                               float(scale) * rng.pareto(float(tail),
+                                                         size=int(K)))
+        return AgentProcess("straggler", seed=int(seed), rates=rates)
+
+    @staticmethod
+    def arrival(t_join) -> "AgentProcess":
+        return AgentProcess("arrival", t_join=t_join)
+
+    @staticmethod
+    def departure(t_leave) -> "AgentProcess":
+        return AgentProcess("departure", t_leave=t_leave)
+
+    def __repr__(self):
+        if self.kind == "bernoulli":
+            return (f"AgentProcess.bernoulli(p_active={self.p_active}, "
+                    f"seed={self.seed})")
+        if self.kind == "straggler":
+            return (f"AgentProcess.straggler(K={self.K}, "
+                    f"seed={self.seed})")
+        if self.kind == "arrival":
+            return f"AgentProcess.arrival(K={self.K})"
+        if self.kind == "departure":
+            return f"AgentProcess.departure(K={self.K})"
+        return "AgentProcess.always_on()"
+
+
+def agent_availability(process: Optional[AgentProcess], K: int, t):
+    """(K,) activity bools of round ``t`` under ``process`` (None means
+    always on). ``t`` may be traced OR concrete — the single dispatch
+    the in-scan drivers and the host replay
+    (:func:`availability_stream`) both go through, which is what makes
+    the two streams bit-identical."""
+    if process is None or process.kind == "always_on":
+        return jnp.ones(int(K), bool)
+    if process.kind == "bernoulli":
+        return availability_mask(K, 1.0 - process.p_active,
+                                 availability_key(process.seed), t)
+    if process.kind == "straggler":
+        return availability_mask(K, process.rates.astype(np.float32),
+                                 availability_key(process.seed), t)
+    t = jnp.asarray(t, jnp.int32)
+    if process.kind == "arrival":
+        return t >= jnp.asarray(process.t_join, jnp.int32)
+    return t < jnp.asarray(process.t_leave, jnp.int32)
+
+
+def availability_stream(process: Optional[AgentProcess], K: int,
+                        rounds: int) -> np.ndarray:
+    """(rounds, K) bool host replay of ``process`` — concretely
+    evaluates the SAME draws the scanned drivers generate in-scan
+    (bit-parity, like :func:`dropout` for links), which is how post-hoc
+    Eq.-(11) billing prices exactly the wires active agents sent."""
+    return np.stack([np.asarray(agent_availability(process, K, t))
+                     for t in range(int(rounds))])
+
+
 # -- uniform constructor for sweeps -----------------------------------------
 
 

@@ -30,7 +30,8 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.core import energy
 from repro.core import topology as topo_lib
-from repro.core.engine import PLAN_KINDS, ConsensusEngine
+from repro.core.engine import (PLAN_KINDS, AsyncState, ConsensusEngine,
+                               where_active)
 from repro.data import TaskTokenDistribution
 from repro.launch import steps as steps_lib
 from repro.models import frontend
@@ -80,8 +81,9 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
                     energy_params=None, consensus_dtype=None,
                     consensus_plan: str = "auto", codec=None, mesh=None,
                     chunk: int = 1, dropout_p: float = 0.0,
-                    dropout_seed: int = 0, telemetry=None,
-                    metrics_path=None):
+                    dropout_seed: int = 0, availability=None,
+                    tau=None, staleness_decay: float = 1.0,
+                    telemetry=None, metrics_path=None):
     """Clustered federated LM training (the paper's stage-2 at LM scale).
 
     ``agents`` agents form ``tasks`` clusters (agents/tasks per cluster);
@@ -133,9 +135,20 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         consensus_dtype = None        # the codec defines the wire format
     graph = (topo_lib.GraphProcess.dropout(dropout_p, seed=dropout_seed)
              if dropout_p > 0 else None)
+    # ``availability`` (repro.core.topology.AgentProcess) makes the run
+    # ASYNCHRONOUS: every round each agent independently wakes or
+    # sleeps, sleeping agents skip local SGD and mixing (their params /
+    # EF residuals freeze bitwise), awake receivers mix a neighbour's
+    # last-published params staleness-weighted (decay^age, dropped past
+    # ``tau`` rounds), and the telemetry ledger bills only wires
+    # actually DELIVERED. always_on/tau=None reduces to the lockstep
+    # run bit-identically.
     engine = ConsensusEngine(topo, codec=codec, mesh=mesh,
-                             plan=consensus_plan, graph=graph)
+                             plan=consensus_plan, graph=graph,
+                             agents=availability, tau=tau,
+                             staleness_decay=staleness_decay)
     codec = engine.codec
+    is_async = engine.agents is not None
 
     model = get_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -159,7 +172,8 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
         p, _ = jax.lax.scan(one, p, b)
         return p
 
-    def fl_round(stacked, codec_state, key, t, survival=None):
+    def fl_round(stacked, codec_state, key, t, survival=None,
+                 active=None):
         # same split as the pre-codec trainer — codec=None runs keep
         # their exact RNG stream (reproducible loss curves); the codec
         # rounding key is folded out of band
@@ -173,13 +187,22 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
 
         batches = jax.vmap(agent_batches)(ks, task_of_agent)
         new = jax.vmap(local)(stacked, batches)
+        if active is not None:
+            # sleeping agents skip local SGD (bitwise hold)
+            new = where_active(active, new, stacked)
+        pre = new
         # survival= (telemetry shares one plan-shaped draw with its
         # metrics row) takes precedence over t= inside step — identical
         # ops either way
         if codec is not None:
+            old_state = (codec_state if codec_state is not None
+                         else engine.init_state(pre))
             new, codec_state = engine.step(
                 new, codec_state, jax.random.fold_in(key, agents + 1),
                 t=t, survival=survival)
+            if active is not None and codec_state is not None:
+                # sleeping agents' EF residuals hold too
+                codec_state = where_active(active, codec_state, old_state)
         elif consensus_dtype is not None:
             cast = jax.tree.map(
                 lambda x: x.astype(consensus_dtype), new)
@@ -187,6 +210,9 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
             new = jax.tree.map(lambda m, n: m.astype(n.dtype), mixed, new)
         else:
             new, _ = engine.step(new, t=t, survival=survival)
+        if active is not None:
+            # sleeping receivers don't mix
+            new = where_active(active, new, pre)
         # mean loss of agent 0's task for logging
         l = loss_fn(jax.tree.map(lambda x: x[0], new),
                     jax.tree.map(lambda x: x[0][0], batches))
@@ -198,21 +224,39 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     from repro.core import scanloop
 
     def fl_body(carry, t):
-        stacked, codec_state, key = carry
+        stacked, codec_state, key, astate = carry
         key, sk = jax.random.split(key)
-        sv = engine.round_survival(t) if tel is not None else None
+        if is_async:
+            # one availability draw per round, shared between the
+            # staleness weights, the per-agent freeze, and the
+            # telemetry row (billing only DELIVERED wires)
+            ar = engine.async_round(t, astate.age)
+            sv, act, sv_row = ar.weights, ar.act, ar.delivered
+        else:
+            ar, act = None, None
+            sv = engine.round_survival(t) if tel is not None else None
+            sv_row = sv
         stacked, codec_state, l = fl_round(stacked, codec_state, sk, t,
-                                           sv)
+                                           sv, act)
+        if is_async:
+            astate = AsyncState(
+                astate.clock + ar.act.astype(astate.clock.dtype),
+                ar.age)
         if tel is None:
-            return (stacked, codec_state, key), l
-        row = rec.row(stacked, sv, metric=l,
-                      reached=jnp.asarray(False), live=jnp.asarray(True))
+            return (stacked, codec_state, key, astate), l
+        row = rec.row(stacked, sv_row, metric=l,
+                      reached=jnp.asarray(False), live=jnp.asarray(True),
+                      active=act, age=(ar.age if is_async else None))
         if stream_cb is not None:
             jax.debug.callback(stream_cb, t, row, ordered=True)
-        return (stacked, codec_state, key), (l, row)
+        return (stacked, codec_state, key, astate), (l, row)
 
+    # astate is None on lockstep runs (an empty pytree through the scan
+    # carry) and the engine's AsyncState on async runs — clocks/ages
+    # persist ACROSS chunks like the params
     fl_chunk = scanloop.donating_jit(
-        lambda s, cs, k, ts: jax.lax.scan(fl_body, (s, cs, k), ts),
+        lambda s, cs, k, ast, ts: jax.lax.scan(
+            fl_body, (s, cs, k, ast), ts),
         donate_argnums=(0, 1))
 
     n_params = sum(x.size for x in jax.tree.leaves(params))
@@ -250,13 +294,14 @@ def train_federated(cfg, *, rounds: int, agents: int, tasks: int,
     # own(): fl_chunk donates the stacked/EF carries on donating backends
     stacked = scanloop.own(stacked)
     codec_state = scanloop.own(codec_state)
+    astate = engine.init_async_state() if is_async else None
     hist = []
     chunk = max(int(chunk), 1)
     for start in range(0, rounds, chunk):
         n = min(chunk, rounds - start)
         ts = jnp.arange(start, start + n, dtype=jnp.int32)
-        (stacked, codec_state, key), ls = fl_chunk(stacked, codec_state,
-                                                   key, ts)
+        (stacked, codec_state, key, astate), ls = fl_chunk(
+            stacked, codec_state, key, astate, ts)
         if tel is not None:
             ls, rows = ls
             tel.record_rounds(rec, rows, start, driver="fl")
@@ -312,6 +357,19 @@ def main():
                          "links, masks generated in-scan "
                          "(repro.core.topology.GraphProcess)")
     ap.add_argument("--dropout-seed", type=int, default=0)
+    ap.add_argument("--availability-p", type=float, default=None,
+                    help="per-round agent wake probability: attaches a "
+                         "Bernoulli AgentProcess — sleeping agents skip "
+                         "local SGD and mixing, receivers mix stale "
+                         "neighbour params (repro.core.topology)")
+    ap.add_argument("--availability-seed", type=int, default=0)
+    ap.add_argument("--tau", type=float, default=None,
+                    help="hard staleness bound: wires older than tau "
+                         "rounds stop mixing (sigma renormalizes); "
+                         "default None = unbounded")
+    ap.add_argument("--staleness-decay", type=float, default=1.0,
+                    help="per-round age decay of stale-wire mixing "
+                         "weight (lambda**age; 1.0 keeps full weight)")
     ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
                     help="write a per-round telemetry event log (JSONL; "
                          "Eq.-11 joules by link class, wire bits, "
@@ -332,7 +390,12 @@ def main():
             consensus_dtype=jnp.bfloat16 if args.bf16_consensus else None,
             consensus_plan=args.consensus_plan, codec=args.codec,
             chunk=args.chunk, dropout_p=args.dropout_p,
-            dropout_seed=args.dropout_seed, metrics_path=args.metrics)
+            dropout_seed=args.dropout_seed,
+            availability=(topo_lib.AgentProcess.bernoulli(
+                args.availability_p, seed=args.availability_seed)
+                if args.availability_p is not None else None),
+            tau=args.tau, staleness_decay=args.staleness_decay,
+            metrics_path=args.metrics)
 
 
 if __name__ == "__main__":

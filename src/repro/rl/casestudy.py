@@ -23,7 +23,7 @@ on CPU — O(rounds/chunk) dispatches and syncs instead of O(rounds).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Optional
 
 import jax
@@ -34,7 +34,7 @@ from repro.configs import get_arch
 from repro import comms
 from repro.core import energy, maml, scanloop
 from repro.core import topology as topo_lib
-from repro.core.engine import ConsensusEngine
+from repro.core.engine import AsyncState, ConsensusEngine, where_active
 from repro.core.multitask import ClusterNetwork
 from repro.core.protocol import ProtocolResult
 from repro.models import dqn as qmodel
@@ -130,6 +130,21 @@ class CaseStudy:
     #: the bit-identical host :func:`repro.core.topology.dropout` stream)
     dropout_p: float = 0.0
     dropout_seed: int = 0
+    #: optional :class:`repro.core.topology.AgentProcess` — per-round
+    #: per-AGENT availability (duty cycles, heavy-tail stragglers,
+    #: arrivals/departures). Each task's cluster engine runs ASYNC with
+    #: the process reseeded at ``seed + task_id`` (same fleet
+    #: heterogeneity, independent sleep realizations per task):
+    #: sleeping robots freeze (no local steps, no wires, codec
+    #: residuals hold), neighbours mix their frozen last-published
+    #: params at ``staleness_decay ** age`` until ``age > tau``, and
+    #: ``last_adapt_comm_joules`` bills only DELIVERED wires by
+    #: replaying the bit-identical host availability stream.
+    availability: object = None
+    #: hard staleness bound τ in rounds (async only; None = ∞)
+    tau: object = None
+    #: λ ∈ (0, 1]: stale lanes mix at λ^age (1.0 = lockstep-exact)
+    staleness_decay: float = 1.0
     #: consensus execution plan for the per-cluster Eq.-(6) engine:
     #: "auto" rides the engine's normal selection (the 2-robot clusters
     #: sit far below the sparse-gather floor, so auto keeps them on
@@ -242,7 +257,9 @@ class CaseStudy:
                 self.cluster_topology, codec=self.codec, plan=self.plan,
                 graph=(topo_lib.GraphProcess.dropout(
                     self.dropout_p, seed=self.dropout_seed + tid)
-                    if self.dropout_p > 0 else None))
+                    if self.dropout_p > 0 else None),
+                agents=self._agent_process(tid), tau=self.tau,
+                staleness_decay=self.staleness_decay)
             for tid in range(gw.NUM_TASKS)}
         self.engine = self._engines[0]
 
@@ -262,7 +279,7 @@ class CaseStudy:
                 self._meta_stream_cb = tel.maml_stream_cb()
 
         def fl_round(task_id, stacked_params, codec_state, key, t,
-                     survival=None):
+                     survival=None, active=None):
             # split C+1 exactly as pre-codec (codec=None rounds keep
             # their RNG stream); the rounding key is folded out of band
             ks = jax.random.split(key, C + 1)
@@ -278,14 +295,25 @@ class CaseStudy:
                 return _clipped_sgd_steps(loss_fn, p, b, self.fl_lr)
 
             new = jax.vmap(local)(stacked_params, jnp.stack(ks[:C]))
+            if active is not None:
+                # sleeping robots skip local SGD (bitwise hold)
+                new = where_active(active, new, stacked_params)
             # survival= (telemetry shares one plan-shaped draw with the
             # metrics row) takes precedence over t= inside step;
             # identical ops either way
-            new, codec_state = self._engines[task_id].step(
+            mixed, new_state = self._engines[task_id].step(
                 new, codec_state,
                 None if self.codec is None
                 else jax.random.fold_in(key, C + 1),
                 t=t, survival=survival)
+            if active is not None:
+                # sleeping receivers don't mix; residuals hold too
+                mixed = where_active(active, mixed, new)
+                if new_state is not None:
+                    old = (codec_state if codec_state is not None
+                           else self._engines[task_id].init_state(new))
+                    new_state = where_active(active, new_state, old)
+            new, codec_state = mixed, new_state
             p0 = jax.tree.map(lambda x: x[0], new)
             R = dqnrl.evaluate(ks[C], p0, self.cfg, task_id, episodes=4)
             return new, codec_state, R
@@ -301,24 +329,40 @@ class CaseStudy:
         # reward hits the target, and the per-round reached flags sync
         # to the host once per CHUNK — the exact t_i comes back out of
         # the reached mask, bit-identical to the per-round host loop.
+        is_async = self.availability is not None
+
         def fl_body(task_id, limit, carry, t):
             def live(c):
-                st, cs, k, _ = c
+                st, cs, k, _, ast = c
                 k, sk = jax.random.split(k)
-                sv = (self._engines[task_id].round_survival(t)
-                      if tel is not None else None)
-                st, cs, R = fl_round(task_id, st, cs, sk, t, sv)
+                if is_async:
+                    # one availability draw per round, shared between
+                    # the staleness weights, the per-robot freeze, and
+                    # the telemetry row (billing only DELIVERED wires)
+                    ar = self._engines[task_id].async_round(t, ast.age)
+                    sv, act, sv_row = ar.weights, ar.act, ar.delivered
+                else:
+                    ar, act = None, None
+                    sv = (self._engines[task_id].round_survival(t)
+                          if tel is not None else None)
+                    sv_row = sv
+                st, cs, R = fl_round(task_id, st, cs, sk, t, sv, act)
+                if is_async:
+                    ast = AsyncState(
+                        ast.clock + ar.act.astype(ast.clock.dtype),
+                        ar.age)
                 hit = R >= self.r_target
                 ys = (hit, jnp.asarray(True), R)
                 if tel is not None:
                     row = self._recorders[task_id].row(
-                        st, sv, metric=R, reached=hit,
-                        live=jnp.asarray(True))
+                        st, sv_row, metric=R, reached=hit,
+                        live=jnp.asarray(True), active=act,
+                        age=(ar.age if is_async else None))
                     if tel.streaming:
                         jax.debug.callback(self._stream_cbs[task_id], t,
                                            row, ordered=True)
                     ys = ys + (row,)
-                return (st, cs, k, hit), ys
+                return (st, cs, k, hit, ast), ys
 
             def frozen(c):
                 ys = (c[3], jnp.asarray(False), jnp.float32(0))
@@ -334,9 +378,13 @@ class CaseStudy:
             return jax.lax.cond(pred, live, frozen, carry)
 
         def fl_chunk(task_id, stacked, codec_state, k, reached, ts,
-                     limit):
+                     limit, ast):
+            # ast is None on lockstep runs (an empty pytree through the
+            # scan carry) and the task's AsyncState on async runs —
+            # clocks/ages persist ACROSS chunks like the params
             return jax.lax.scan(functools.partial(fl_body, task_id, limit),
-                                (stacked, codec_state, k, reached), ts)
+                                (stacked, codec_state, k, reached, ast),
+                                ts)
 
         self._fl_chunks = {
             tid: scanloop.donating_jit(functools.partial(fl_chunk, tid),
@@ -344,6 +392,16 @@ class CaseStudy:
             for tid in range(gw.NUM_TASKS)}
 
     # -- API ------------------------------------------------------------
+    def _agent_process(self, task_id):
+        """Per-task availability process: same kind/knobs as
+        ``self.availability`` but reseeded at ``seed + task_id``, so each
+        task cluster draws an independent (and host-replayable) churn
+        stream — mirroring how dropout_seed shifts per task."""
+        if self.availability is None:
+            return None
+        return replace(self.availability,
+                       seed=self.availability.seed + task_id)
+
     def init_params(self, key):
         return qmodel.init(key, self.cfg)
 
@@ -396,10 +454,13 @@ class CaseStudy:
         reached = jnp.asarray(False)
         step = self._fl_chunks[task_id]
         limit = jnp.int32(max_rounds)
+        eng = self._engines[task_id]
+        astate = (eng.init_async_state() if eng.agents is not None
+                  else None)
         for start in range(0, max_rounds, self.chunk):
             ts = jnp.arange(start, start + self.chunk, dtype=jnp.int32)
-            (stacked, codec_state, key, reached), ys = step(
-                stacked, codec_state, key, reached, ts, limit)
+            (stacked, codec_state, key, reached, astate), ys = step(
+                stacked, codec_state, key, reached, ts, limit, astate)
             hits, live_mask, Rs = (np.asarray(y) for y in ys[:3])  # ONE sync
             if self.telemetry is not None:
                 self.telemetry.record_rounds(
@@ -411,16 +472,32 @@ class CaseStudy:
                 rounds = start + h + 1
                 break
         # Eq.-(11) bill over EXACTLY the rounds_used executed rounds:
-        # static graphs price rounds × the full graph; dropout runs
-        # replay the host stream (bit-identical to the in-scan masks by
-        # the shared fold-in convention) and price each round's
-        # surviving links only
-        if self.dropout_p > 0:
-            self.last_adapt_comm_joules = float(sum(
-                t.round_comm_joules(self.energy_params, codec=self.codec)
-                for t in topo_lib.dropout(
-                    self.cluster_topology, self.dropout_p,
-                    seed=self.dropout_seed + task_id, rounds=rounds)))
+        # static lockstep runs price rounds × the full graph; dropout
+        # and/or availability runs replay the host streams
+        # (bit-identical to the in-scan masks by the shared fold-in
+        # convention) and price each round's DELIVERED wires only — a
+        # wire bills iff its link survived AND both endpoints were
+        # awake, matching ``AsyncRound.delivered`` and the telemetry
+        # stream exactly (left-to-right float64 sum, same expression)
+        proc = self._agent_process(task_id)
+        if self.dropout_p > 0 or proc is not None:
+            base = self.cluster_topology
+            drops = (topo_lib.dropout(
+                base, self.dropout_p,
+                seed=self.dropout_seed + task_id, rounds=rounds)
+                if self.dropout_p > 0 else [base] * rounds)
+            acts = topo_lib.availability_stream(proc, base.K, rounds)
+            total = 0.0
+            for t_r, a in zip(drops, acts):
+                m = (np.asarray(t_r.adjacency)
+                     & np.asarray(a)[:, None] & np.asarray(a)[None, :])
+                billed = topo_lib.Topology(
+                    f"{base.name}~billed", m,
+                    np.where(m, np.asarray(base.link_class),
+                             topo_lib.NONE))
+                total += billed.round_comm_joules(
+                    self.energy_params, codec=self.codec)
+            self.last_adapt_comm_joules = float(total)
         else:
             self.last_adapt_comm_joules = rounds * float(
                 self.cluster_topology.round_comm_joules(

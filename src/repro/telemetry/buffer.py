@@ -41,8 +41,11 @@ from repro.core import energy, topology as topo_lib
 #: traced per-round row fields, in emission order. ``live`` marks real
 #: rounds (False = the frozen lax.cond branch after the target was hit
 #: or past max_rounds — zero links, excluded from ledgers and sinks).
+#: ``n_active``/``max_age`` are the async (agent-availability) health
+#: observables: how many agents participated, and the oldest wire any
+#: receiver is still mixing — K and 0 on lockstep rounds.
 ROW_FIELDS = ("live", "reached", "metric", "disagreement",
-              "n_sl", "n_ul", "n_dl")
+              "n_sl", "n_ul", "n_dl", "n_active", "max_age")
 
 
 def consensus_disagreement(stacked):
@@ -110,6 +113,10 @@ class RoundRecorder:
             "UL": table == topo_lib.UL,
             "DL": table == topo_lib.DL,
         }
+        # real lanes in the plan shape — max_age reads only these (the
+        # sparse plans' padding lanes and the distributed completion
+        # slots never deliver, so their ages grow without meaning)
+        self._real_mask = table != topo_lib.NONE
         self._static_counts = {
             "SL": int((link_class == topo_lib.SL).sum()),
             "UL": int((link_class == topo_lib.UL).sum()),
@@ -123,14 +130,22 @@ class RoundRecorder:
 
     # -- traced (inside the scan body) ----------------------------------
 
-    def row(self, stacked, survival, *, metric, reached, live):
+    def row(self, stacked, survival, *, metric, reached, live,
+            active=None, age=None):
         """One live round's row. ``survival`` is the PLAN-SHAPED
         surviving-edge operand the round's mixing ACTUALLY used — from
         ``engine.round_survival(t)``: (K, K) on dense-xla, (K, H) lanes
         on sparse-pallas/sharded, (M, K) slots on distributed (``None``
         on static graphs, where the counts are numpy constants folded
         into the program). Counts stay exact int32 in every shape, so
-        the priced stream reconciles with the post-hoc replay."""
+        the priced stream reconciles with the post-hoc replay.
+
+        Async rounds pass ``survival=round.delivered`` (wires ACTUALLY
+        shipped — Eq.-(11) bills nothing a sleeping agent didn't send),
+        plus ``active=`` (K,) activity bools and ``age=`` the
+        plan-shaped wire ages; lockstep rounds leave both None and the
+        row reports full participation (``n_active = K, max_age = 0``).
+        """
         if survival is None:
             counts = {k: jnp.int32(self._static_counts[k])
                       for k in ("SL", "UL", "DL")}
@@ -139,6 +154,12 @@ class RoundRecorder:
                                  & jnp.asarray(self._class_masks[k]),
                                  dtype=jnp.int32)
                       for k in ("SL", "UL", "DL")}
+        n_active = (jnp.int32(self.topology.K) if active is None
+                    else jnp.sum(jnp.asarray(active), dtype=jnp.int32))
+        max_age = (jnp.int32(0) if age is None
+                   else jnp.max(jnp.where(jnp.asarray(self._real_mask),
+                                          jnp.asarray(age, jnp.int32),
+                                          jnp.int32(0))))
         return {
             "live": jnp.asarray(live, bool),
             "reached": jnp.asarray(reached, bool),
@@ -146,6 +167,7 @@ class RoundRecorder:
             "disagreement": consensus_disagreement(stacked),
             "n_sl": counts["SL"], "n_ul": counts["UL"],
             "n_dl": counts["DL"],
+            "n_active": n_active, "max_age": max_age,
         }
 
     def frozen_row(self):
@@ -156,7 +178,8 @@ class RoundRecorder:
         return {"live": jnp.asarray(False), "reached": jnp.asarray(False),
                 "metric": jnp.float32(0.0),
                 "disagreement": jnp.float32(0.0),
-                "n_sl": z32, "n_ul": z32, "n_dl": z32}
+                "n_sl": z32, "n_ul": z32, "n_dl": z32,
+                "n_active": z32, "max_age": z32}
 
     # -- host (once per chunk, after the sync) --------------------------
 
@@ -201,7 +224,9 @@ class RoundRecorder:
             n_ul = int(host["n_ul"][i])
             n_dl = int(host["n_dl"][i])
             e.update(n_sl=n_sl, n_ul=n_ul, n_dl=n_dl,
-                     edges=n_sl + n_ul + n_dl)
+                     edges=n_sl + n_ul + n_dl,
+                     n_active=int(host["n_active"][i]),
+                     max_age=int(host["max_age"][i]))
             e.update(self.price(n_sl, n_ul, n_dl))
             events.append(e)
         return events

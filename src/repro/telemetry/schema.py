@@ -30,6 +30,8 @@ LEDGER_FIELDS = {
     "joules_sl": float, "joules_ul": float, "joules_dl": float,
     "joules": float,
     "plan": str, "topology": str, "K": int,
+    # async availability observables (K and 0 on lockstep rounds)
+    "n_active": int, "max_age": int,
 }
 
 #: meta-training events carry losses instead of a link ledger.

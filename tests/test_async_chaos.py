@@ -1,0 +1,129 @@
+"""Chaos harness: availability fault injection swept over (mode x seed
+x plan). Every configuration drives engine.scan_rounds with buffered
+telemetry under agent churn (plus per-link dropout), then asserts the
+graceful-degradation contract:
+
+* no NaN/Inf anywhere in the mixed params, no shape divergence;
+* activity observability: each round's ``n_active`` equals the host
+  availability replay's count, bit for bit;
+* the summed Eq.-(11) telemetry stream reconciles EXACTLY (``==``, not
+  approx) with a host-side replay that bills only wires whose link
+  survived AND whose both endpoints were awake.
+
+The seed matrix widens via ``REPRO_CHAOS_SEEDS`` (comma-separated ints;
+CI sets it explicitly, default "0,1")."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry as telemetry_lib
+from repro.core import energy
+from repro.core import topology as topo_lib
+from repro.core.engine import ConsensusEngine
+
+K, ROUNDS, DROP_P, DROP_SEED = 8, 10, 0.2, 3
+
+SEEDS = [int(s) for s in
+         os.environ.get("REPRO_CHAOS_SEEDS", "0,1").split(",")]
+
+PLANS = [("dense-xla", {}),
+         ("sparse-pallas", {}),
+         ("sharded", {"num_blocks": 4}),
+         ("distributed", {})]
+
+MODES = {
+    "bernoulli": lambda seed: topo_lib.AgentProcess.bernoulli(
+        0.6, seed=seed),
+    "straggler": lambda seed: topo_lib.AgentProcess.straggler(
+        K, tail=1.1, scale=0.3, cap=0.9, seed=seed),
+    "arrival": lambda seed: topo_lib.AgentProcess.arrival(
+        np.arange(K, dtype=np.int64) * (1 + seed % 2)),
+    "departure": lambda seed: topo_lib.AgentProcess.departure(
+        ROUNDS - np.arange(K, dtype=np.int64)),
+}
+
+
+def _topo():
+    return topo_lib.ring(K)
+
+
+def _stacked(seed):
+    k = jax.random.PRNGKey(100 + seed)
+    return {"w": jax.random.normal(k, (K, 6)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (K, 3))}
+
+
+def _host_replay_joules(topo, proc, codec, rounds):
+    """The post-hoc bill: per round, a wire is priced iff its link
+    survived the fade AND both endpoints were awake — summed
+    left-to-right in float64 exactly like the stream."""
+    ep = energy.paper_calibrated("fig3")
+    drops = topo_lib.dropout(topo, DROP_P, seed=DROP_SEED, rounds=rounds)
+    acts = topo_lib.availability_stream(proc, topo.K, rounds)
+    total = 0.0
+    for t_r, a in zip(drops, acts):
+        m = (np.asarray(t_r.adjacency)
+             & a[:, None] & a[None, :])
+        billed = topo_lib.Topology(
+            f"{topo.name}~billed", m,
+            np.where(m, np.asarray(topo.link_class), topo_lib.NONE))
+        total += billed.round_comm_joules(ep, codec=codec)
+    return total
+
+
+@pytest.mark.parametrize("plan,kw", PLANS, ids=[p for p, _ in PLANS])
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_chaos_sweep_no_divergence_and_exact_ledger(mode, plan, kw):
+    topo = _topo()
+    for seed in SEEDS:
+        proc = MODES[mode](seed)
+        eng = ConsensusEngine(
+            topo, codec="int8", plan=plan,
+            graph=topo_lib.GraphProcess.dropout(DROP_P, seed=DROP_SEED),
+            agents=proc, tau=3, staleness_decay=0.9, **kw)
+        tel = telemetry_lib.Telemetry()
+        s = _stacked(seed)
+        p, st = eng.scan_rounds(s, rounds=ROUNDS, telemetry=tel,
+                                keys=jax.random.split(
+                                    jax.random.PRNGKey(seed), ROUNDS))
+        # no NaN/Inf, no shape divergence
+        for ref, out in zip(jax.tree.leaves(s), jax.tree.leaves(p)):
+            out = np.asarray(out)
+            assert out.shape == ref.shape, f"{mode}/{plan}/seed={seed}"
+            assert np.isfinite(out).all(), f"{mode}/{plan}/seed={seed}"
+        events = tel.events(driver="consensus")
+        assert len(events) == ROUNDS
+        # activity observability: n_active replays bit for bit
+        acts = topo_lib.availability_stream(proc, K, ROUNDS)
+        for t, e in enumerate(events):
+            assert e["n_active"] == int(acts[t].sum()), \
+                f"{mode}/{plan}/seed={seed} t={t}"
+            assert e["max_age"] >= 0
+        # exact Eq.-(11) reconciliation: stream == host replay
+        stream = 0.0
+        for e in events:
+            stream += e["joules"]
+        replay = _host_replay_joules(topo, proc, eng.codec, ROUNDS)
+        assert stream == replay, \
+            f"{mode}/{plan}/seed={seed}: {stream!r} != {replay!r}"
+
+
+def test_departure_of_everyone_goes_quiet_not_nan():
+    """Total population death mid-run: once every agent has left, all
+    remaining rounds bill zero and params freeze — no NaNs from the
+    empty-neighbourhood σ renormalization."""
+    proc = topo_lib.AgentProcess.departure(np.full(K, 3))
+    eng = ConsensusEngine(_topo(), agents=proc, tau=2)
+    tel = telemetry_lib.Telemetry()
+    s = _stacked(0)
+    p, _ = eng.scan_rounds(s, rounds=ROUNDS, telemetry=tel)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(p))
+    events = tel.events(driver="consensus")
+    for e in events[3:]:
+        assert e["n_active"] == 0
+        assert e["joules"] == 0.0
+        assert e["edges"] == 0

@@ -1,0 +1,363 @@
+"""Staleness-tolerant asynchronous consensus: the AgentProcess
+availability contract (host/in-scan fold-in bit parity), the
+lockstep-reduction invariant (always-on agents + tau=None reproduces the
+synchronous engine bit for bit on all four plans and every chunking),
+graceful degradation at the degenerate corners (fully-dead rounds are
+exact no-ops, never-activating agents bill zero joules), and the async
+error surface (every refusal names the offending input and the nearest
+valid alternative)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, federated
+from repro.core import topology as topo_lib
+from repro.core.engine import (AsyncState, ConsensusEngine, where_active)
+
+K = 8
+
+PLANS = [("dense-xla", {}),
+         ("sparse-pallas", {}),
+         ("sharded", {"num_blocks": 4}),
+         ("distributed", {})]
+
+
+def _topo():
+    return topo_lib.ring(K)
+
+
+def _stacked(key):
+    return {"w": jax.random.normal(key, (K, 6)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (K, 3))}
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# the agent half of the fold-in convention
+# ---------------------------------------------------------------------------
+
+
+def test_availability_mask_bit_matches_host_stream():
+    """jitted agent_availability(t) — as the scan bodies draw it —
+    equals round t of the host availability_stream bit for bit, for
+    every mode that draws randomness."""
+    for proc in (topo_lib.AgentProcess.bernoulli(0.6, seed=3),
+                 topo_lib.AgentProcess.straggler(K, seed=7)):
+        traced = jax.jit(
+            lambda t, p=proc: topo_lib.agent_availability(p, K, t))
+        host = topo_lib.availability_stream(proc, K, 12)
+        for t in range(12):
+            np.testing.assert_array_equal(
+                np.asarray(traced(jnp.int32(t))), host[t],
+                err_msg=f"{proc.kind} t={t}")
+
+
+def test_agent_availability_deterministic_kinds():
+    """always_on (and None) is all-ones; arrival activates at exactly
+    t_join; departure deactivates at exactly t_leave."""
+    ones = np.ones(K, bool)
+    np.testing.assert_array_equal(
+        np.asarray(topo_lib.agent_availability(None, K, 5)), ones)
+    np.testing.assert_array_equal(
+        np.asarray(topo_lib.agent_availability(
+            topo_lib.AgentProcess.always_on(), K, 5)), ones)
+    t_join = np.arange(K, dtype=np.int64)
+    arr = topo_lib.AgentProcess.arrival(t_join)
+    dep = topo_lib.AgentProcess.departure(t_join)
+    for t in range(K + 1):
+        np.testing.assert_array_equal(
+            np.asarray(topo_lib.agent_availability(arr, K, t)),
+            t >= t_join, err_msg=f"arrival t={t}")
+        np.testing.assert_array_equal(
+            np.asarray(topo_lib.agent_availability(dep, K, t)),
+            t < t_join, err_msg=f"departure t={t}")
+
+
+def test_availability_edge_duty_cycles():
+    """p_active=1 never sleeps, p_active=0 never wakes — the Bernoulli
+    ends collapse to the deterministic processes."""
+    on = topo_lib.AgentProcess.bernoulli(1.0, seed=0)
+    off = topo_lib.AgentProcess.bernoulli(0.0, seed=0)
+    assert topo_lib.availability_stream(on, K, 8).all()
+    assert not topo_lib.availability_stream(off, K, 8).any()
+
+
+# ---------------------------------------------------------------------------
+# lockstep reduction: always-on + tau=None == the synchronous protocol
+# ---------------------------------------------------------------------------
+
+
+def _fl_loss(p, b):
+    return jnp.mean((p["w"] - b["tgt"]) ** 2)
+
+
+def _fl_sampler(key, t):
+    return {"tgt": jax.random.normal(key, (K, 3, 1, 6)) * 0.1}
+
+
+def _fl_target(sp):
+    m = jnp.mean(jnp.square(sp["w"]))
+    return m < -1.0, m                          # unreachable
+
+
+@pytest.mark.parametrize("plan,kw", PLANS, ids=[p for p, _ in PLANS])
+def test_always_on_reduces_to_lockstep_bitwise(plan, kw):
+    """An async engine with always-on agents and tau=None runs the FULL
+    staleness machinery (float σ weights, delivered masks, age clocks,
+    per-agent freezes) yet reproduces the synchronous engine bit for
+    bit — params, t_i, history, AND the EF codec state — on every plan,
+    with per-link dropout active, across chunk sizes 1/7/32."""
+    topo = _topo()
+    graph = topo_lib.GraphProcess.dropout(0.3, seed=5)
+    sync = ConsensusEngine(topo, codec="int8", graph=graph, plan=plan,
+                           **kw)
+    asyn = ConsensusEngine(topo, codec="int8", graph=graph, plan=plan,
+                           agents=topo_lib.AgentProcess.always_on(),
+                           tau=None, **kw)
+    s = _stacked(jax.random.PRNGKey(1))
+    runkw = dict(target_fn=_fl_target, max_rounds=9,
+                 key=jax.random.PRNGKey(7), return_state=True)
+    p_ref, t_ref, h_ref, st_ref = federated.run_fl_until_scan(
+        _fl_loss, s, _fl_sampler, sync, 0.3, chunk=9, **runkw)
+    for chunk in (1, 7, 32):
+        p_a, t_a, h_a, st_a = federated.run_fl_until_scan(
+            _fl_loss, s, _fl_sampler, asyn, 0.3, chunk=chunk, **runkw)
+        assert (t_a, h_a) == (t_ref, h_ref), f"chunk={chunk}"
+        assert _tree_equal(p_a, p_ref), f"chunk={chunk}"
+        assert _tree_equal(st_a, st_ref), f"chunk={chunk}"
+
+
+@pytest.mark.parametrize("plan,kw", PLANS, ids=[p for p, _ in PLANS])
+def test_scan_rounds_lockstep_reduction(plan, kw):
+    """Same reduction, directly on engine.scan_rounds (the benchmark /
+    analysis surface): τ=∞ + always-on == the sync engine bitwise."""
+    topo = _topo()
+    sync = ConsensusEngine(topo, plan=plan, **kw)
+    asyn = ConsensusEngine(topo, plan=plan,
+                           agents=topo_lib.AgentProcess.always_on(),
+                           staleness_decay=1.0, **kw)
+    s = _stacked(jax.random.PRNGKey(2))
+    p_ref, _ = sync.scan_rounds(s, rounds=5)
+    p_a, _ = asyn.scan_rounds(s, rounds=5)
+    assert _tree_equal(p_a, p_ref)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation at the degenerate corners
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plan,kw", PLANS, ids=[p for p, _ in PLANS])
+def test_fully_dead_round_is_a_bitwise_noop(plan, kw):
+    """Rounds where NO agent is awake (arrival far in the future) leave
+    params, EF residuals, and activity clocks untouched bitwise — on
+    every plan — while wire ages keep counting up."""
+    eng = ConsensusEngine(
+        _topo(), codec="int8", plan=plan,
+        agents=topo_lib.AgentProcess.arrival(np.full(K, 10**6)), **kw)
+    s = _stacked(jax.random.PRNGKey(3))
+    p, st = s, eng.init_state(s)
+    ast = eng.init_async_state()
+    for t in range(3):
+        p, st, ast, ar = eng.async_step(p, st,
+                                        jax.random.PRNGKey(10 + t),
+                                        t=jnp.int32(t), state=ast)
+        assert not np.asarray(ar.act).any(), f"t={t}"
+        assert not np.asarray(ar.delivered).any(), f"t={t}"
+    assert _tree_equal(p, s)
+    assert _tree_equal(st, eng.init_state(s))
+    np.testing.assert_array_equal(np.asarray(ast.clock), np.zeros(K))
+    assert (np.asarray(ast.age) >= 3).all()     # staleness kept counting
+
+
+def test_never_activating_agent_bills_zero_joules():
+    """An agent that never joins ships nothing: every telemetry row
+    reports K-1 active agents, and the summed Eq.-(11) stream equals
+    rounds x the bill of the subgraph among the LIVE agents — exactly
+    (==), the dead agent's wires priced at zero."""
+    from repro import telemetry as telemetry_lib
+    topo = topo_lib.clusters(1, 4)
+    t_join = np.array([0, 0, 0, 10**6])
+    eng = ConsensusEngine(topo, codec="int8",
+                          agents=topo_lib.AgentProcess.arrival(t_join))
+    tel = telemetry_lib.Telemetry()
+    s = {"w": jax.random.normal(jax.random.PRNGKey(4), (4, 6))}
+    rounds = 6
+    eng.scan_rounds(s, rounds=rounds, telemetry=tel)
+    events = tel.events(driver="consensus")
+    assert len(events) == rounds
+    assert all(e["n_active"] == 3 for e in events)
+    a = np.asarray(topo_lib.agent_availability(eng.agents, 4, 0))
+    m = np.asarray(topo.adjacency) & a[:, None] & a[None, :]
+    live = topo_lib.Topology(
+        "live", m, np.where(m, np.asarray(topo.link_class),
+                            topo_lib.NONE))
+    per_round = live.round_comm_joules(
+        energy.paper_calibrated("fig3"), codec=eng.codec)
+    stream = 0.0
+    for e in events:
+        stream += e["joules"]
+    replay = 0.0
+    for _ in range(rounds):
+        replay += per_round
+    assert stream == replay                     # EXACT, not approx
+    # and strictly less than the full-graph bill (the dead agent's
+    # wires are the difference)
+    assert stream < rounds * topo.round_comm_joules(
+        energy.paper_calibrated("fig3"), codec=eng.codec)
+
+
+def test_stale_wires_drop_past_tau_and_sigma_renormalizes():
+    """With one agent asleep forever and tau=1, its neighbours mix its
+    frozen params only while age <= tau; past the bound the lane drops
+    and σ renormalizes over the survivors — params stay finite and the
+    awake agents keep consensus among themselves."""
+    t_join = np.array([0, 0, 0, 0, 0, 0, 0, 10**6])
+    eng = ConsensusEngine(
+        _topo(), agents=topo_lib.AgentProcess.arrival(t_join), tau=1)
+    s = _stacked(jax.random.PRNGKey(5))
+    p, st = s, None
+    ast = eng.init_async_state()
+    for t in range(6):
+        p, st, ast, ar = eng.async_step(p, st, t=jnp.int32(t),
+                                        state=ast)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(p)]
+    assert all(np.isfinite(x).all() for x in leaves)
+    # the sleeper's params froze at their initial values
+    assert np.array_equal(np.asarray(p["w"])[7], np.asarray(s["w"])[7])
+    # the awake ring contracted towards consensus
+    w0 = np.asarray(s["w"])[:7]
+    wt = np.asarray(p["w"])[:7]
+    assert np.std(wt, axis=0).sum() < np.std(w0, axis=0).sum()
+
+
+def test_staleness_decay_downweights_stale_wires():
+    """lambda < 1 shrinks a stale lane's σ mass: the sleeper's
+    neighbours move strictly closer to the AWAKE average than under
+    lambda = 1 (full stale weight)."""
+    t_join = np.array([0, 0, 0, 0, 0, 0, 0, 10**6])
+    proc = topo_lib.AgentProcess.arrival(t_join)
+    s = _stacked(jax.random.PRNGKey(6))
+
+    def run(decay):
+        eng = ConsensusEngine(_topo(), agents=proc,
+                              staleness_decay=decay)
+        p, st = s, None
+        ast = eng.init_async_state()
+        for t in range(4):
+            p, st, ast, _ = eng.async_step(p, st, t=jnp.int32(t),
+                                           state=ast)
+        return np.asarray(p["w"])
+
+    awake_mean = np.mean(np.asarray(s["w"])[:7], axis=0)
+    dist_full = np.abs(run(1.0)[:7] - awake_mean).sum()
+    dist_decay = np.abs(run(0.5)[:7] - awake_mean).sum()
+    assert dist_decay < dist_full
+
+
+# ---------------------------------------------------------------------------
+# the async error surface: refusals name the input and the alternative
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_plan_names_nearest_alternative():
+    with pytest.raises(ValueError, match="dense-xla"):
+        ConsensusEngine(_topo(), plan="dense_xla")
+
+
+def test_unknown_mix_kind_refused_at_construction():
+    with pytest.raises(ValueError, match="metropolis"):
+        ConsensusEngine(_topo(), mix_kind="metropolois")
+
+
+def test_tau_without_agents_refused():
+    with pytest.raises(ValueError,
+                       match="only applies to async engines"):
+        ConsensusEngine(_topo(), tau=3)
+
+
+@pytest.mark.parametrize("bad", [float("nan"), -1.0])
+def test_bad_tau_names_valid_choices(bad):
+    with pytest.raises(ValueError, match="not a staleness bound"):
+        ConsensusEngine(_topo(),
+                        agents=topo_lib.AgentProcess.always_on(),
+                        tau=bad)
+
+
+def test_tau_inf_is_unbounded():
+    eng = ConsensusEngine(_topo(),
+                          agents=topo_lib.AgentProcess.always_on(),
+                          tau=float("inf"))
+    assert eng.tau is None
+
+
+@pytest.mark.parametrize("bad", [0.0, 1.5, -0.2])
+def test_bad_staleness_decay_refused(bad):
+    with pytest.raises(ValueError, match=r"must lie in"):
+        ConsensusEngine(_topo(),
+                        agents=topo_lib.AgentProcess.always_on(),
+                        staleness_decay=bad)
+
+
+def test_agents_wrong_type_names_constructors():
+    with pytest.raises(TypeError, match="AgentProcess"):
+        ConsensusEngine(_topo(), agents=0.5)
+
+
+def test_agents_population_mismatch_names_both_sizes():
+    proc = topo_lib.AgentProcess.straggler(6, seed=0)
+    with pytest.raises(ValueError, match=r"rebuild the process at K=8"):
+        ConsensusEngine(_topo(), agents=proc)
+
+
+def test_agents_on_raw_mix_refused():
+    mix = np.asarray(_topo().mixing(), np.float32)
+    with pytest.raises(ValueError, match="built from a Topology"):
+        ConsensusEngine(mix,
+                        agents=topo_lib.AgentProcess.always_on())
+
+
+def test_async_step_without_survival_points_at_async_round():
+    eng = ConsensusEngine(_topo(),
+                          agents=topo_lib.AgentProcess.bernoulli(0.5))
+    s = _stacked(jax.random.PRNGKey(8))
+    with pytest.raises(ValueError, match="async_round"):
+        eng.step(s, t=jnp.int32(0))
+
+
+def test_async_step_needs_state_carry():
+    eng = ConsensusEngine(_topo(),
+                          agents=topo_lib.AgentProcess.bernoulli(0.5))
+    s = _stacked(jax.random.PRNGKey(8))
+    with pytest.raises(ValueError, match="init_async_state"):
+        eng.async_step(s, t=jnp.int32(0))
+
+
+def test_async_distributed_over_schedule_bound_names_the_bound():
+    from repro.core.engine import DISTRIBUTED_SCHEDULE_BOUND
+    with pytest.raises(ValueError) as ei:
+        ConsensusEngine(topo_lib.full(DISTRIBUTED_SCHEDULE_BOUND + 6),
+                        plan="distributed",
+                        agents=topo_lib.AgentProcess.always_on())
+    assert str(DISTRIBUTED_SCHEDULE_BOUND) in str(ei.value)
+    assert "sparser" in str(ei.value)
+
+
+def test_agent_process_bad_inputs_named():
+    with pytest.raises(ValueError, match="unknown agent process"):
+        topo_lib.AgentProcess(kind="bernouli")
+    with pytest.raises(ValueError, match=r"p_active must be in \[0, 1\]"):
+        topo_lib.AgentProcess.bernoulli(1.5)
+    with pytest.raises(ValueError, match=r"lie in \[0, 1\]"):
+        topo_lib.AgentProcess(kind="straggler", rates=[0.2, 1.7])
+    with pytest.raises(ValueError, match="non-empty"):
+        topo_lib.AgentProcess(kind="arrival", t_join=np.zeros((2, 2)))
