@@ -7,7 +7,7 @@ program (so that program must be PURE), int wires stay integer lanes
 through the Eq.-(6) combine, donated buffers are actually donated, and
 Eq.-(11) joules bill exactly the bytes the compiled module ships. This
 package turns those from ROADMAP prose into checked properties, in
-three layers:
+four layers:
 
 * **Layer 1 — jaxpr** (:mod:`.jaxpr_audit`): walks the jaxprs/compiled
   executables of the programs in ``scanloop.registered_programs()`` and
@@ -16,18 +16,32 @@ three layers:
   decode-then-combine on sparse/sharded wires), JX3 (donation honored
   in the executable's ``input_output_alias``), JX4 (no streaming
   telemetry ``debug_callback`` in cached programs — streaming
-  drivers build per call, uncached).
+  drivers build per call, uncached), JX5 (the ``AsyncState`` carry is
+  donated through chunk programs — an undonated staleness carry doubles
+  the resident model memory every chunk).
 * **Layer 2 — HLO** (:mod:`.hlo_audit`): parses optimized modules with
   the ``launch/hlo_analysis`` collective/shape parser.
   Rules: H1 (no (K, K) buffer at K >= 4096 on the sharded plan), H2
   (collective bytes match ``codec.model_bits`` pricing within
-  tolerance).
+  tolerance), H3 (the async staleness-σ path still gathers the int8
+  wire lanes in the OPTIMIZED module — no decode-before-combine upcast
+  sneaks in after XLA's fusion passes).
 * **Layer 3 — AST lint** (:mod:`.lint`): repo-specific rules over
   ``src/`` and ``benchmarks/``.
   Rules: R1 (survival draws via ``topology.survival_mask`` only), R2
   (no naked ``jax.jit`` in ``core/``/``rl/``), R3 (median-of-N timing
   asserts), R4 (no unpriced transmissions), R5 (``own()`` donated
-  carries).
+  carries), R6 (every ``raise`` in ``core/``/``rl/``/``launch/`` names
+  the offending input and a nearest alternative).
+* **Layer 4 — cost model** (:mod:`.costmodel`): the STATIC ENERGY
+  LEDGER — prices every collective in the compiled modules and
+  reconciles Eq.-(11) predictions against a telemetry-buffered run.
+  Rules: C1 (static wire bytes/joules reconcile with the codec pricing
+  AND with measured telemetry rows, exactly, per plan x codec, async
+  included), C2 (static round FLOPs match a counted reference on the
+  case-study shape), C3 (no collective outside the ledger: every
+  collective in a compiled module is either the priced wire, control
+  plane, or a finding).
 
 Usage::
 
@@ -37,19 +51,27 @@ Usage::
                                                        # in the allowlist
     PYTHONPATH=src python -m repro.analysis --layer lint   # fast subset
     PYTHONPATH=src python -m repro.analysis --h1-k 512     # cheap H1
+    PYTHONPATH=src python -m repro.analysis --format json  # artifact
+    PYTHONPATH=src python -m repro.analysis --strict \\
+        --baseline src/repro/analysis/baseline.json    # fail on NEW
+                                                       # findings only
 
 Findings carry a rule ID and ``file:line``; intentional exceptions live
-in ``src/repro/analysis/allowlist.toml`` with a justification each —
-tracked debt, not silence. The CLI forces
+in ``src/repro/analysis/allowlist.toml`` with a justification and an
+``added_in`` PR each — tracked debt, not silence, and ``--strict``
+warns once an entry is 4+ PRs old. The baseline-diff CI workflow
+(``--format json`` artifacts, ``--baseline``) is documented in
+:mod:`repro.analysis.__main__`. The CLI forces
 ``--xla_force_host_platform_device_count=8`` into ``XLA_FLAGS`` before
-jax initializes so the H2 mesh sweep runs on CPU CI. See ROADMAP.md
+jax initializes so the H2/C1 mesh sweeps run on CPU CI. See ROADMAP.md
 "Invariants & how they're enforced" for the invariant -> rule map.
 
 Importing this package (and running the lint layer) does NOT import
-jax; the jaxpr/HLO layers import it lazily.
+jax; the jaxpr/HLO/cost layers import it lazily.
 """
 from repro.analysis.findings import (Finding, apply_allowlist,
-                                     load_allowlist, render_report)
+                                     dedup_findings, load_allowlist,
+                                     render_report, stale_entries)
 
-__all__ = ["Finding", "apply_allowlist", "load_allowlist",
-           "render_report"]
+__all__ = ["Finding", "apply_allowlist", "dedup_findings",
+           "load_allowlist", "render_report", "stale_entries"]

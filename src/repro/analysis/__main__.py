@@ -1,13 +1,46 @@
-"""CLI: ``python -m repro.analysis [--strict] [--layer ...]``."""
+"""CLI: ``python -m repro.analysis [--strict] [--layer ...]``.
+
+Output formats and the CI baseline-diff workflow
+------------------------------------------------
+
+``--format text`` (default) prints the human report.  ``--format json``
+prints the findings as a stable JSON array — the ARTIFACT format — and
+``--format sarif`` prints a SARIF 2.1.0 log for code-scanning UIs.
+``--json-out PATH`` additionally writes the JSON artifact to ``PATH``
+regardless of the stdout format, so CI can upload it while humans read
+the text report.
+
+The committed JSON artifact doubles as a BASELINE.  CI runs::
+
+    python -m repro.analysis --strict \\
+        --baseline src/repro/analysis/baseline.json \\
+        --json-out analysis_findings.json
+
+With ``--baseline``, strict mode fails only on findings whose
+``(rule, file, message)`` key is NOT in the baseline — a PR is gated on
+the findings it INTRODUCES, not on pre-existing tracked debt.  The
+produced ``analysis_findings.json`` is uploaded as a CI artifact;
+refreshing the committed baseline is a deliberate act: download the
+artifact (or run ``--format json`` locally) and commit it as
+``baseline.json`` together with the justification for any newly
+baselined finding.  An unreadable or malformed baseline is a hard
+error, never an empty set — see :mod:`repro.analysis.baseline`.
+
+Under ``--strict`` the CLI also prints per-layer wall-clock timings
+(the audit budget is part of CI latency) and warns on stale allowlist
+entries (``added_in`` older than
+:data:`repro.analysis.findings.STALE_AFTER_PRS` PRs, or missing).
+"""
 from __future__ import annotations
 
 import argparse
 import os
 import sys
+import time
 
 
 def _force_multi_device():
-    """The H2 sweep needs >= 2 devices; must run BEFORE jax imports."""
+    """The H2/C1 sweeps need >= 2 devices; must run BEFORE jax imports."""
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
@@ -20,8 +53,10 @@ def main(argv=None) -> int:
         description="audit the engine's compiled-program invariants "
                     "(see repro.analysis module docs for the rules)")
     ap.add_argument("--strict", action="store_true",
-                    help="exit 1 on any non-allowlisted finding (CI)")
-    ap.add_argument("--layer", choices=("all", "lint", "jaxpr", "hlo"),
+                    help="exit 1 on any non-allowlisted finding (CI); "
+                         "with --baseline, only on NEW ones")
+    ap.add_argument("--layer",
+                    choices=("all", "lint", "jaxpr", "hlo", "cost"),
                     default="all")
     ap.add_argument("--root", default=None,
                     help="repo root for the lint layer (default: "
@@ -32,9 +67,20 @@ def main(argv=None) -> int:
     ap.add_argument("--h1-k", type=int, default=4096,
                     help="population size for the H1 square-buffer "
                          "audit (compile cost grows with it)")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default="text", dest="fmt",
+                    help="stdout format: human report, the JSON "
+                         "artifact, or SARIF 2.1.0")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed --format json artifact; --strict "
+                         "then fails only on findings NOT in it "
+                         "(keyed on rule/file/message)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the JSON artifact here, whatever "
+                         "--format prints to stdout")
     args = ap.parse_args(argv)
 
-    if args.layer in ("all", "jaxpr", "hlo"):
+    if args.layer in ("all", "jaxpr", "hlo", "cost"):
         _force_multi_device()
 
     pkg_dir = os.path.dirname(os.path.abspath(__file__))
@@ -44,24 +90,72 @@ def main(argv=None) -> int:
 
     from repro.analysis import (apply_allowlist, load_allowlist,
                                 render_report)
+    from repro.analysis.baseline import (findings_to_json,
+                                         findings_to_sarif,
+                                         load_baseline, new_findings)
+    from repro.analysis.findings import dedup_findings, stale_entries
+
+    # fail fast on a malformed baseline BEFORE paying for the audits
+    baseline = (load_baseline(args.baseline)
+                if args.baseline is not None else None)
 
     findings = []
+    timings = []
     if args.layer in ("all", "lint"):
         from repro.analysis.lint import run_lint
+        t0 = time.monotonic()
         findings += run_lint(root)
+        timings.append(("lint", time.monotonic() - t0))
     if args.layer in ("all", "jaxpr"):
         from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        t0 = time.monotonic()
         findings += run_jaxpr_audit()
+        timings.append(("jaxpr", time.monotonic() - t0))
     if args.layer in ("all", "hlo"):
         from repro.analysis.hlo_audit import run_hlo_audit
+        t0 = time.monotonic()
         findings += run_hlo_audit(h1_k=args.h1_k)
+        timings.append(("hlo", time.monotonic() - t0))
+    if args.layer in ("all", "cost"):
+        from repro.analysis.costmodel import run_cost_audit
+        t0 = time.monotonic()
+        findings += run_cost_audit()
+        timings.append(("cost", time.monotonic() - t0))
 
-    findings = apply_allowlist(findings, load_allowlist(allow_path))
-    print(render_report(findings))
-    n_open = sum(1 for f in findings if not f.allowlisted)
-    n_known = len(findings) - n_open
-    print(f"\n{n_open} open finding(s), {n_known} allowlisted")
-    if args.strict and n_open:
+    entries = load_allowlist(allow_path)
+    findings = apply_allowlist(dedup_findings(findings), entries)
+
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            fh.write(findings_to_json(findings))
+
+    if args.fmt == "json":
+        sys.stdout.write(findings_to_json(findings))
+    elif args.fmt == "sarif":
+        sys.stdout.write(findings_to_sarif(findings))
+    else:
+        print(render_report(findings))
+        n_open = sum(1 for f in findings if not f.allowlisted)
+        n_known = len(findings) - n_open
+        print(f"\n{n_open} open finding(s), {n_known} allowlisted")
+
+    if args.strict:
+        for name, dt in timings:
+            print(f"[timing] {name:5s} {dt:7.2f}s", file=sys.stderr)
+        for _e, warning in stale_entries(entries):
+            print(f"[stale] {warning}", file=sys.stderr)
+
+    open_f = [f for f in findings if not f.allowlisted]
+    if baseline is not None:
+        fresh = new_findings(findings, baseline)
+        if fresh and args.strict:
+            print(f"[baseline] {len(fresh)} NEW finding(s) not in "
+                  f"{args.baseline}:", file=sys.stderr)
+            for f in fresh:
+                print("  " + f.format(), file=sys.stderr)
+            return 1
+        return 0
+    if args.strict and open_f:
         return 1
     return 0
 

@@ -1,0 +1,102 @@
+"""Finding serialization + the CI baseline diff.
+
+``python -m repro.analysis --format json`` emits findings as a stable
+JSON array; ``--format sarif`` emits a minimal SARIF 2.1.0 log (one
+run, one rule per distinct rule ID) for code-scanning UIs. A committed
+``--format json`` artifact doubles as the BASELINE: with
+``--baseline findings.json``, strict mode fails only on findings whose
+``(rule, file, message)`` key is NOT in the baseline — line numbers
+drift with unrelated edits, so they are deliberately not part of the
+identity.
+
+No jax imports here: the baseline diff must run (and fail fast on a
+malformed baseline file) before any backend initialization.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+#: what identifies a finding across runs — everything except the line
+#: number (drifts) and the allowlist marking (derived, not observed).
+Key = Tuple[str, str, str]
+
+
+def finding_key(f: Finding) -> Key:
+    return (f.rule, f.file, f.message)
+
+
+def findings_to_json(findings: Iterable[Finding]) -> str:
+    """Stable JSON array of finding dicts (the artifact format)."""
+    return json.dumps(
+        [{"rule": f.rule, "file": f.file, "line": f.line,
+          "message": f.message, "allowlisted": f.allowlisted,
+          "note": f.note} for f in findings],
+        indent=2, sort_keys=True) + "\n"
+
+
+def findings_to_sarif(findings: Iterable[Finding]) -> str:
+    """Minimal SARIF 2.1.0: one run, one driver, allowlisted findings
+    carry level "note", open ones "error"."""
+    findings = list(findings)
+    rules = sorted({f.rule for f in findings})
+    results = []
+    for f in findings:
+        results.append({
+            "ruleId": f.rule,
+            "level": "note" if f.allowlisted else "error",
+            "message": {"text": f.message
+                        + (f" [allowlisted: {f.note}]" if f.allowlisted
+                           else "")},
+            "locations": [{"physicalLocation": {
+                "artifactLocation": {"uri": f.file},
+                "region": {"startLine": max(f.line, 1)},
+            }}],
+        })
+    log = {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
+                    "sarif-spec/master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "rules": [{"id": r} for r in rules],
+            }},
+            "results": results,
+        }],
+    }
+    return json.dumps(log, indent=2, sort_keys=True) + "\n"
+
+
+def load_baseline(path: str) -> Set[Key]:
+    """The ``(rule, file, message)`` key set of a committed
+    ``--format json`` artifact. Raises on unreadable/malformed input —
+    a silently-empty baseline would re-fail CI on every known
+    finding."""
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, list):
+        raise ValueError(
+            f"baseline {path!r} holds a {type(data).__name__}, not the "
+            "JSON array `--format json` writes — regenerate it with "
+            "`python -m repro.analysis --format json`")
+    keys: Set[Key] = set()
+    for i, d in enumerate(data):
+        try:
+            keys.add((str(d["rule"]), str(d["file"]), str(d["message"])))
+        except (TypeError, KeyError) as exc:
+            raise ValueError(
+                f"baseline {path!r} entry {i} is missing {exc} — every "
+                "entry needs rule/file/message; regenerate the file "
+                "with `python -m repro.analysis --format json`")
+    return keys
+
+
+def new_findings(findings: Iterable[Finding],
+                 baseline: Set[Key]) -> List[Finding]:
+    """Open findings NOT present in the baseline — what a baselined
+    strict run fails on."""
+    return [f for f in findings
+            if not f.allowlisted and finding_key(f) not in baseline]

@@ -9,10 +9,18 @@ justification, never silenced), prints the report, and — under
 The allowlist is an array of ``[[allow]]`` tables::
 
     [[allow]]
-    rule  = "R4"                          # required: the rule ID
-    file  = "src/repro/core/consensus.py" # required: path suffix/glob
-    match = "ppermute"                    # optional: message substring
-    note  = "why this is intentional"     # required by convention
+    rule     = "R4"                          # required: the rule ID
+    file     = "src/repro/core/consensus.py" # required: path suffix/glob
+    match    = "ppermute"                    # optional: message substring
+    note     = "why this is intentional"     # required by convention
+    added_in = 6                             # required: the PR that
+                                             # admitted this debt
+
+Allowlist entries EXPIRE: debt older than
+:data:`STALE_AFTER_PRS` PRs (relative to :data:`CURRENT_PR`) is
+reported as a warning by ``--strict`` — tracked debt that nobody
+revisits is just silence with paperwork. :func:`stale_entries` computes
+the list; the CLI prints it.
 
 This module intentionally imports no jax — the lint layer (and the CLI
 argument parsing) must run before any backend initialization.
@@ -22,7 +30,14 @@ from __future__ import annotations
 import dataclasses
 import fnmatch
 import re
-from typing import Iterable, List, Optional
+from typing import Iterable, List, Optional, Tuple
+
+#: the PR this tree is at — bump when a PR lands new allowlist entries.
+CURRENT_PR = 10
+
+#: an allowlist entry older than this many PRs is stale: ``--strict``
+#: warns (the debt stays allowlisted — expiry nags, it does not break).
+STALE_AFTER_PRS = 4
 
 
 @dataclasses.dataclass
@@ -53,14 +68,23 @@ _STRING_RE = re.compile(r'"((?:[^"\\]|\\.)*)"')
 _ESCAPES = {"\\\\": "\\", '\\"': '"', "\\n": "\n", "\\t": "\t"}
 
 
-def _parse_scalar(v: str):
+def _parse_scalar(v: str, lineno: int):
     m = _STRING_RE.match(v)
     if m:
+        trailing = v[m.end():].split("#", 1)[0].strip()
+        if trailing:
+            raise ValueError(
+                f"allowlist line {lineno}: trailing garbage {trailing!r} "
+                f"after the string value — one scalar per key")
         s = m.group(1)
         # hand-rolled escapes: unicode_escape would mangle non-ASCII text
         for esc, ch in _ESCAPES.items():
             s = s.replace(esc, ch)
         return s
+    if v.startswith('"'):
+        raise ValueError(
+            f"allowlist line {lineno}: unterminated string {v!r} — "
+            f"close the quote")
     v = v.split("#", 1)[0].strip()
     if v in ("true", "false"):
         return v == "true"
@@ -70,14 +94,28 @@ def _parse_scalar(v: str):
         try:
             return float(v)
         except ValueError:
-            return v
+            raise ValueError(
+                f"allowlist line {lineno}: {v!r} is not a supported "
+                f"scalar — quote strings, or use an int/float/bool")
+
+
+#: sentinel: inside a table that is not ours — keys skipped, not errors
+_OTHER_TABLE = object()
+
+_HEADER_RE = re.compile(r"^\[\[?[A-Za-z0-9_.\-]+\]\]?$")
 
 
 def parse_toml_min(text: str) -> dict:
-    """Parse the ``[[allow]]``-tables-of-scalars TOML subset."""
+    """Parse the ``[[allow]]``-tables-of-scalars TOML subset.
+
+    Malformed input RAISES ``ValueError`` with the line number — a
+    typo'd allowlist entry that silently parsed to nothing would
+    un-track debt without anyone noticing (the failure mode this
+    replaced). Tables other than ``[[allow]]`` are still skipped
+    whole: the file may carry unrelated sections."""
     entries: List[dict] = []
-    cur: Optional[dict] = None
-    for raw in text.splitlines():
+    cur = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
         line = raw.strip()
         if not line or line.startswith("#"):
             continue
@@ -86,11 +124,25 @@ def parse_toml_min(text: str) -> dict:
             entries.append(cur)
             continue
         if line.startswith("["):
-            cur = None           # some other table: not ours, skip
+            if not _HEADER_RE.match(line):
+                raise ValueError(
+                    f"allowlist line {lineno}: malformed table header "
+                    f"{line!r} — expected [[allow]] or a [name] table")
+            cur = _OTHER_TABLE   # some other table: not ours, skip
             continue
-        if "=" in line and cur is not None:
-            k, _, v = line.partition("=")
-            cur[k.strip()] = _parse_scalar(v.strip())
+        if cur is _OTHER_TABLE:
+            continue
+        if cur is None:
+            raise ValueError(
+                f"allowlist line {lineno}: {line!r} outside any table — "
+                f"every key belongs under an [[allow]] header")
+        k, eq, v = line.partition("=")
+        k = k.strip()
+        if not eq or not k:
+            raise ValueError(
+                f"allowlist line {lineno}: {line!r} is not a `key = "
+                f"value` pair inside [[allow]]")
+        cur[k] = _parse_scalar(v.strip(), lineno)
     return {"allow": entries}
 
 
@@ -106,6 +158,44 @@ def load_allowlist(path: str) -> List[dict]:
         return list(tomllib.loads(raw.decode("utf-8")).get("allow", []))
     except ImportError:
         return list(parse_toml_min(raw.decode("utf-8"))["allow"])
+
+
+def stale_entries(entries: Iterable[dict],
+                  current_pr: int = CURRENT_PR,
+                  stale_after: int = STALE_AFTER_PRS
+                  ) -> List[Tuple[dict, str]]:
+    """(entry, warning) pairs for allowlist debt due a revisit: entries
+    whose ``added_in`` is ``stale_after``+ PRs old, or missing (undated
+    debt can never expire, which defeats the point)."""
+    out: List[Tuple[dict, str]] = []
+    for e in entries:
+        added = e.get("added_in")
+        label = f"{e.get('rule', '?')} @ {e.get('file', '*')}"
+        if added is None:
+            out.append((e, f"allowlist entry {label} has no added_in= "
+                           "PR — undated debt never expires; date it"))
+        elif current_pr - int(added) >= stale_after:
+            out.append((e, f"allowlist entry {label} is "
+                           f"{current_pr - int(added)} PRs old "
+                           f"(added_in={added}, now PR {current_pr}) — "
+                           "revisit: fix the finding or re-justify the "
+                           "debt"))
+    return out
+
+
+def dedup_findings(findings: Iterable[Finding]) -> List[Finding]:
+    """Drop exact duplicates (same rule/file/line/message), keeping
+    first occurrence order — layers legitimately overlap (e.g. a
+    registry program audited under two cache keys) and a doubled
+    finding reads as two bugs."""
+    seen = set()
+    out: List[Finding] = []
+    for f in findings:
+        key = (f.rule, f.file, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
 
 
 def _file_matches(finding_file: str, pattern: str) -> bool:

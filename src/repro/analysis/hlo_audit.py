@@ -12,7 +12,16 @@ H2  Eq.-(11) truthfulness of the compiled artifact: on a real mesh, the
     executable is exactly the "optimistic estimate" failure mode the
     reproduction's energy claims rule out.
 
-Both audits reuse the ``launch/hlo_analysis`` parser
+H3  int wires stay int through the ASYNC combine: the staleness-σ path
+    (availability masking + λ^age weights + the τ drop) rebuilds the
+    mixing weights per round, and the tempting implementation decodes
+    the int8 lanes to float FIRST so one dense f32 gather serves both
+    halves — which ships/spills 4x the wire. The OPTIMIZED module of an
+    async masked ``async_step`` must still gather s8 lanes (JX2 proves
+    this at jaxpr level for the lockstep path; H3 proves the async
+    artifact, after XLA's fusion passes, kept it).
+
+The audits reuse the ``launch/hlo_analysis`` parser
 (:func:`collective_bytes`, :func:`square_buffers`). The H2 sweep needs
 a multi-device mesh — the CLI forces
 ``--xla_force_host_platform_device_count=8`` before jax initializes;
@@ -21,6 +30,7 @@ never silently).
 """
 from __future__ import annotations
 
+import re
 from typing import List, Optional
 
 from repro.analysis.findings import Finding
@@ -179,6 +189,70 @@ def audit_collective_pricing(k: int = 8, n: int = 256) -> List[Finding]:
     return findings
 
 
+_GATHER_RE = re.compile(r"=\s*(pred|[suc]\d+|bf16|f16|f32|f64)"
+                        r"\[[\d,]*\]\S*\s+gather\(")
+
+
+def check_wire_lane_dtype(hlo_text: str, label: str,
+                          qbits: int = 8) -> List[Finding]:
+    """H3 core (pure text, so tests can seed an upcast module): the
+    optimized module must contain at least one gather whose RESULT is
+    the s{qbits} wire dtype — the lane gather consuming the int wire
+    directly. All-float gathers mean the decode ran first and the
+    combine consumed a densified f32 tensor the wire never shipped."""
+    wire_dt = f"s{qbits}"
+    dtypes = _GATHER_RE.findall(hlo_text)
+    if not dtypes:
+        return [Finding(
+            "H3", label, 0,
+            f"no gather in the optimized module at all — the async "
+            f"combine should gather {wire_dt} wire lanes; the lane "
+            "path vanished (wrong plan wiring?)")]
+    if wire_dt not in dtypes:
+        return [Finding(
+            "H3", label, 0,
+            f"every gather in the optimized module is "
+            f"{sorted(set(dtypes))} — none consumes the {wire_dt} wire "
+            "directly, so the staleness-σ path upcast the int lanes to "
+            "float BEFORE the combine (4x the shipped/spilled bytes)")]
+    return []
+
+
+def audit_async_wire_lanes(k: int = 8) -> List[Finding]:
+    """H3: compile one ASYNC masked ``async_step`` per int-lane plan
+    (churn + dropout + τ — the maximal staleness-σ branch) and prove
+    the optimized artifact still gathers s8 lanes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import topology as topo_lib
+    from repro.core.engine import ConsensusEngine
+
+    findings: List[Finding] = []
+    topo = topo_lib.ring(k)
+    params = {"w": jnp.zeros((k, 16), jnp.float32)}
+    for plan in ("sparse-pallas", "sharded"):
+        kw = {"num_blocks": 2} if plan == "sharded" else {}
+        eng = ConsensusEngine(
+            topo, codec="int8", plan=plan,
+            graph=topo_lib.GraphProcess.dropout(0.3, seed=0),
+            agents=topo_lib.AgentProcess.bernoulli(0.6, seed=0),
+            tau=2, **kw)
+        meta = eng.audit_meta()
+        if not meta["int_lane_gather"]:
+            continue
+        state = eng.init_state(params)
+        txt = jax.jit(
+            lambda p, st, kk, tt, ast: eng.async_step(
+                p, st, kk, t=tt, state=ast)).lower(
+            params, state, jax.random.PRNGKey(0), jnp.int32(0),
+            eng.init_async_state()).compile().as_text()
+        findings += check_wire_lane_dtype(
+            txt, f"engine:{plan}/int8/p=0.3/async",
+            qbits=meta["qbits"])
+    return findings
+
+
 def run_hlo_audit(*, h1_k: int = 4096) -> List[Finding]:
     """The full Layer-2 pass."""
-    return audit_square_buffers(h1_k) + audit_collective_pricing()
+    return (audit_square_buffers(h1_k) + audit_collective_pricing()
+            + audit_async_wire_lanes())

@@ -26,6 +26,13 @@ JX4  no streaming telemetry inside a CACHED program: a
      programs per call and never admit them to the cache — a cached
      one would replay a dead run's sinks against every later hit.
      (Buffered telemetry rows are pure scan outputs and cache fine.)
+JX5  async carry donated: any registered program whose recorded
+     abstract args hold an ``AsyncState`` (the per-agent clocks and
+     per-lane wire ages the async protocol threads chunk to chunk)
+     must list that argument in ``donate_argnums`` — it is a carry
+     exactly like the params, and a dropped alias keeps two
+     generations of the availability bookkeeping alive through every
+     dispatch.
 
 ``run_jaxpr_audit()`` drives tiny FL/MAML configurations through the
 real chunked drivers — telemetry off, buffered, and streaming — to
@@ -56,12 +63,17 @@ _PASSTHROUGH = {"reshape", "transpose", "broadcast_in_dim", "squeeze",
 # ---------------------------------------------------------------------------
 
 def _source_of(eqn):
-    """(file, line) of the user frame that emitted ``eqn`` (best effort)."""
+    """(file, line) of the user frame that emitted ``eqn`` (best effort).
+    Paths are cut down to repo-relative (``src/...``) so findings — and
+    the committed baseline keyed on them — match across checkouts."""
     try:
         from jax._src import source_info_util
         fr = source_info_util.user_frame(eqn.source_info)
         if fr is not None:
-            return fr.file_name, int(fr.start_line)
+            f = fr.file_name.replace("\\", "/")
+            if "/src/repro/" in f:
+                f = "src/repro/" + f.rsplit("/src/repro/", 1)[1]
+            return f, int(fr.start_line)
     except Exception:
         pass
     return "<jaxpr>", 0
@@ -247,12 +259,51 @@ def check_donation(fn, donate_argnums, abstract_args, *,
     return findings
 
 
+def _holds_async_state(tree) -> bool:
+    """True iff ``tree`` contains an :class:`AsyncState` anywhere —
+    ``scanloop._abstractify`` maps leaves but PRESERVES container
+    structure (NamedTuples included), so the recorded abstract args
+    still carry the carry's type."""
+    from repro.core.engine import AsyncState
+    if isinstance(tree, AsyncState):
+        return True
+    if isinstance(tree, dict):
+        return any(_holds_async_state(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return any(_holds_async_state(v) for v in tree)
+    return False
+
+
+def check_async_state_donated(rec) -> List[Finding]:
+    """JX5 for one program record: every argument that carries an
+    ``AsyncState`` (the async protocol's per-agent clocks + per-lane
+    wire ages) must be in ``donate_argnums``. The state is a carry
+    exactly like the params — threaded chunk to chunk — so a dropped
+    donation keeps BOTH generations of (clock, age) buffers alive
+    through every dispatch, silently doubling the async bookkeeping's
+    footprint at fleet scale."""
+    if rec.abstract_args is None:
+        return []
+    donated = set(rec.donate_argnums or ())
+    findings: List[Finding] = []
+    for i, arg in enumerate(rec.abstract_args):
+        if _holds_async_state(arg) and i not in donated:
+            findings.append(Finding(
+                "JX5", rec.name, 0,
+                f"arg {i} of {rec.name!r} carries the AsyncState "
+                f"(clock, age) but donate_argnums={tuple(sorted(donated))} "
+                "leaves it undonated — the async carry must alias "
+                "through the chunk like the params (add the arg to "
+                "donate_argnums in the driver's donating_jit)"))
+    return findings
+
+
 # ---------------------------------------------------------------------------
 # registry + engine sweeps
 # ---------------------------------------------------------------------------
 
 def audit_registered_programs(records=None) -> List[Finding]:
-    """JX1 + JX3 + JX4 over the scanloop program registry."""
+    """JX1 + JX3 + JX4 + JX5 over the scanloop program registry."""
     import jax
     from repro.core import scanloop
     findings: List[Finding] = []
@@ -289,6 +340,7 @@ def audit_registered_programs(records=None) -> List[Finding]:
             findings.extend(check_donation(
                 rec.fn, rec.donate_argnums, rec.abstract_args,
                 jit_kwargs=rec.jit_kwargs, label=rec.name))
+        findings.extend(check_async_state_donated(rec))
     return findings
 
 
@@ -319,7 +371,14 @@ def _tiny_drivers():
         return jax.vmap(one)(ks)
 
     def target_fn(stacked):
-        return jnp.asarray(False), jnp.float32(0.0)
+        # input-DEPENDENT on purpose: a constant target would trip the
+        # traceable() impurity fallback, the driver would build the
+        # program per call instead of admitting it to the cache, and
+        # the registry would hold NOTHING for this audit to check —
+        # the async chunk (JX5's whole surface) included
+        d = jnp.mean(jnp.asarray(jax.tree.leaves(stacked)[0],
+                                 jnp.float32))
+        return d < jnp.float32(-1e9), d
 
     params = {"w": jnp.zeros((D, 1)), "b": jnp.zeros((1,))}
     stacked = jax.tree.map(

@@ -27,6 +27,13 @@ R5  a module creating donating programs (``donating_jit`` with
     ``donate_argnums``) must ``scanloop.own()`` the carries it feeds
     them — donation consumes buffers, and only driver-owned copies may
     be consumed (``core/scanloop.py`` is exempt).
+R6  error paths name the offending input: every ``raise`` in
+    ``core/``, ``rl/``, and ``launch/`` must interpolate the bad value
+    (an f-string, formatted name, or attribute in the message) and
+    point at a nearest alternative — a constant-string raise tells the
+    caller WHAT rule broke but not WHICH of their inputs broke it, the
+    convention the PR-9 async error paths established by hand. Bare
+    re-raises and ``raise err`` of a caught variable are exempt.
 
 Pure ``ast`` — no jax import, so the lint layer runs in any process.
 """
@@ -52,6 +59,24 @@ _R2_SCOPES = ("src/repro/core/", "src/repro/rl/")
 _R2_EXEMPT = ("src/repro/core/scanloop.py",)
 _R4_EXEMPT_DIRS = ("src/repro/comms/",)
 _R5_EXEMPT = ("src/repro/core/scanloop.py",)
+_R6_SCOPES = ("src/repro/core/", "src/repro/rl/", "src/repro/launch/")
+
+
+def _names_offending_input(raise_node: ast.Raise) -> bool:
+    """R6 heuristic: does the raise's message interpolate ANY dynamic
+    value (f-string piece, name, attribute, or call)? A message built
+    purely from constants cannot name the caller's bad input."""
+    exc = raise_node.exc
+    if exc is None or isinstance(exc, ast.Name):
+        return True                   # bare re-raise / `raise err`
+    if not isinstance(exc, ast.Call) or not exc.args:
+        return False                  # `raise TypeError` / no message
+    for arg in exc.args:
+        for sub in ast.walk(arg):
+            if isinstance(sub, (ast.JoinedStr, ast.FormattedValue,
+                                ast.Name, ast.Attribute, ast.Call)):
+                return True
+    return False
 
 
 def _dotted(node) -> str:
@@ -100,6 +125,7 @@ class _ModuleFacts(ast.NodeVisitor):
         self.has_billing = False                    # R4
         self.donating_sites: List[int] = []         # R5
         self.has_own = False                        # R5
+        self.nameless_raises: List[int] = []        # R6
         self._func_stack: List[str] = []
 
     # -- scope tracking ---------------------------------------------------
@@ -120,6 +146,11 @@ class _ModuleFacts(ast.NodeVisitor):
     def visit_Assert(self, node):
         if _timingish(node.test):
             self.timing_asserts.append(node.lineno)
+        self.generic_visit(node)
+
+    def visit_Raise(self, node):
+        if not _names_offending_input(node):
+            self.nameless_raises.append(node.lineno)
         self.generic_visit(node)
 
     def visit_Call(self, node):
@@ -209,6 +240,16 @@ def lint_file(path: str, rel: str) -> List[Finding]:
                 "donating_jit(donate_argnums=...) in a module that never "
                 "scanloop.own()s a carry — donated inputs must be "
                 "driver-owned copies"))
+
+    if any(rel.startswith(s) for s in _R6_SCOPES):                    # R6
+        for line in facts.nameless_raises:
+            out.append(Finding(
+                "R6", rel, line,
+                "raise with a constant-only message — interpolate the "
+                "offending input (an f-string with the bad value) and "
+                "name a nearest alternative, so the caller learns "
+                "WHICH input broke the rule, not just which rule "
+                "broke"))
     return out
 
 

@@ -297,8 +297,10 @@ def consensus_step(stacked_params, mix, *, impl: str = "xla",
         raise ValueError(f"unknown impl {impl!r}; use xla/pallas/sparse/auto")
     if codec is None and (codec_state is not None or gamma != 1.0):
         raise ValueError(
-            "codec_state/gamma only apply to compressed consensus — "
-            "pass codec= (they would be silently ignored otherwise)")
+            f"codec_state={'set' if codec_state is not None else None} "
+            f"/ gamma={gamma} only apply to compressed consensus but "
+            "codec=None — pass codec= (e.g. 'int8'), or drop them "
+            "(they would be silently ignored otherwise)")
     if codec is not None:
         from repro import comms   # deferred: core stays import-light
         codec = comms.resolve_codec(codec, error_feedback)
@@ -396,7 +398,11 @@ def _compressed_consensus_step(stacked_params, mix, codec, codec_state,
                         else [jnp.zeros(jnp.shape(x), jnp.float32)
                               for x in leaves])
         if len(state_leaves) != len(leaves):
-            raise ValueError("codec_state does not match stacked_params")
+            raise ValueError(
+                f"codec_state has {len(state_leaves)} leaves but "
+                f"stacked_params has {len(leaves)} — thread the "
+                "codec_state returned by the previous step (or pass "
+                "None to start from zero error-feedback residuals)")
     else:
         state_leaves = [None] * len(leaves)
 
@@ -839,7 +845,11 @@ def sharded_consensus_step(stacked_params, mix, *, num_blocks: int,
                         else [jnp.zeros(jnp.shape(x), jnp.float32)
                               for x in leaves])
         if len(state_leaves) != len(leaves):
-            raise ValueError("codec_state does not match stacked_params")
+            raise ValueError(
+                f"codec_state has {len(state_leaves)} leaves but "
+                f"stacked_params has {len(leaves)} — thread the "
+                "codec_state returned by the previous step (or pass "
+                "None to start from zero error-feedback residuals)")
     else:
         state_leaves = [None] * len(leaves)
 

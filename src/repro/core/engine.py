@@ -317,8 +317,10 @@ class ConsensusEngine:
         from repro import comms   # deferred: core stays import-light
         from repro.core import topology as topo_lib
         if isinstance(topology, ConsensusEngine):
-            raise TypeError("pass a Topology or mix, not an engine "
-                            "(use ConsensusEngine.wrap)")
+            raise TypeError(
+                f"topology= got an already-built {type(topology).__name__} "
+                f"(plan={topology.plan.kind!r}); pass a Topology or mix "
+                "matrix, or coerce with ConsensusEngine.wrap(engine)")
         if mix_kind not in consensus.MIX_KINDS:
             # validated here, at construction, so a typo'd kind is
             # refused before any (possibly jitted) round traces it
@@ -349,11 +351,13 @@ class ConsensusEngine:
         if agents is not None:
             if self.topology is None:
                 raise ValueError(
-                    "agent-availability (async) engines need an engine "
-                    "built from a Topology: staleness σ is REBUILT per "
-                    "round from the delivered/stale lanes with the "
-                    "engine's mixing kind, which cannot faithfully "
-                    "renormalize an arbitrary raw mix matrix")
+                    f"agents={agents!r} needs an engine built from a "
+                    "Topology, but this one came from a raw mix matrix: "
+                    "staleness σ is REBUILT per round from the "
+                    "delivered/stale lanes with the engine's mixing "
+                    "kind, which cannot faithfully renormalize an "
+                    "arbitrary raw mix — construct from a Topology "
+                    "(e.g. topology.ring(K)) or drop agents=")
             pk = agents.K
             if pk is not None and pk != self.K:
                 raise ValueError(
@@ -394,11 +398,13 @@ class ConsensusEngine:
                 # weights with mixing_weights(kind) on the survivor —
                 # refuse rather than diverge
                 raise ValueError(
-                    "time-varying graphs need an engine built from a "
-                    "Topology: each round's σ is REBUILT from the "
-                    "surviving graph with the engine's mixing "
+                    f"graph={self.graph!r} (time-varying) needs an "
+                    "engine built from a Topology, but this one came "
+                    "from a raw mix matrix: each round's σ is REBUILT "
+                    "from the surviving graph with the engine's mixing "
                     "kind/data_sizes, which cannot faithfully "
-                    "renormalize an arbitrary raw mix matrix")
+                    "renormalize an arbitrary raw mix — construct from "
+                    "a Topology or use GraphProcess.static()")
             # the base adjacency the survival masks apply to
             self._adjacency = np.asarray(self.topology.adjacency, bool)
             self._symmetric = bool(
@@ -625,8 +631,8 @@ class ConsensusEngine:
         age 0 ("all agents exchanged initial models at t=0")."""
         if self.agents is None:
             raise ValueError(
-                "init_async_state() is the async protocol's carry: this "
-                "engine has no agents= AgentProcess attached — pass "
+                "init_async_state() is the async protocol's carry, but "
+                f"this {self.plan.kind!r} engine has agents=None — pass "
                 "agents=AgentProcess.bernoulli(p_active) (or another "
                 "availability process) at construction")
         shape = np.asarray(self._real_edges()).shape
@@ -667,8 +673,9 @@ class ConsensusEngine:
         if self.agents is None:
             raise ValueError(
                 "async_round() needs an agents= AgentProcess attached "
-                "at construction (this engine runs the lockstep "
-                "protocol; use step(t=...) instead)")
+                f"at construction, but this {self.plan.kind!r} engine "
+                "has agents=None (it runs the lockstep protocol; use "
+                "step(t=...) instead)")
         act = self.availability(t)
         act_recv, act_send = self._act_shapes(act)
         real = jnp.asarray(self._real_edges())
@@ -701,8 +708,10 @@ class ConsensusEngine:
         telemetry), else they are drawn from ``t``."""
         if state is None:
             raise ValueError(
-                "async_step needs state= (the AsyncState carry — start "
-                "from init_async_state())")
+                f"async_step at t={t!r} needs state= (the AsyncState "
+                "carry, got state=None) — start from "
+                "init_async_state() and thread each call's returned "
+                "state into the next")
         ar = (round_info if round_info is not None
               else self.async_round(t, state.age))
         p, st = self.step(stacked_params, codec_state, key,
@@ -839,7 +848,11 @@ class ConsensusEngine:
                 "AsyncState carry for you")
         if survival is None and (mask is not None or t is not None):
             if mix is not None and mask is not None:
-                raise ValueError("pass mix= or mask=/t=, not both")
+                raise ValueError(
+                    f"step() got BOTH mix (shape {jnp.shape(mix)}) and "
+                    f"mask (shape {jnp.shape(mask)}) — pass the explicit "
+                    "mix= alone, or let mask=/t= rebuild σ from the "
+                    "surviving graph")
             survival = self.round_survival(t, mask=mask)
         if survival is None and mix is None and self.graph.kind != "static":
             # silently mixing on the full static graph would measure t_i
@@ -853,7 +866,11 @@ class ConsensusEngine:
         sig_override = None
         if survival is not None:
             if mix is not None:
-                raise ValueError("pass mix= or mask=/t=, not both")
+                raise ValueError(
+                    f"step() got BOTH mix (shape {jnp.shape(mix)}) and "
+                    f"survival (shape {jnp.shape(survival)}) — pass the "
+                    "explicit mix= alone, or let survival=/t= rebuild σ "
+                    "from the surviving lanes")
             if kind == "dense-xla":
                 mix = self.masked_mixing(survival)
             elif kind == "distributed":
@@ -929,7 +946,10 @@ class ConsensusEngine:
         state, the mixing consumes the same mask either way.
         """
         if keys is None and rounds is None:
-            raise ValueError("pass per-round keys or rounds=")
+            raise ValueError(
+                f"scan_rounds got keys={keys!r} and rounds={rounds!r} — "
+                "pass rounds= (a round count) or keys= (one PRNG key "
+                "per round, e.g. jax.random.split(key, R))")
         if codec_state is None:
             codec_state = self.init_state(stacked_params)
         if self.plan.kind == "distributed" and self._schedule is None:
@@ -1012,8 +1032,11 @@ class ConsensusEngine:
         """Eq.-(11) communication energy of ONE round at THIS engine's
         wire format (delegates to the topology's codec-aware pricing)."""
         if self.topology is None:
-            raise ValueError("engine was built from a raw mix matrix; "
-                             "construct it from a Topology to price rounds")
+            raise ValueError(
+                f"this {self.plan.kind!r} engine was built from a raw "
+                f"{self.mix.shape} mix matrix, which carries no link "
+                "classes to bill; construct it from a Topology (e.g. "
+                "topology.ring(K)) to price rounds")
         return self.topology.round_comm_joules(
             energy_params, model_bits=model_bits, codec=self.codec)
 
@@ -1023,10 +1046,20 @@ class ConsensusEngine:
         plan kind, its :data:`PLAN_AUDIT_EXPECTATIONS` entry, and the
         wire codec (base codec under the error-feedback wrapper, with
         its int-lane bit width if any). Rule H2 reconciles the compiled
-        module's collective bytes against ``codec.model_bits(tree)``."""
+        module's collective bytes against ``codec.model_bits(tree)``;
+        the C-layer (``repro.analysis.costmodel``) additionally reads
+        ``link_classes`` (the topology's per-class directed message
+        counts, ``None`` on raw-mix engines) and ``priced_collectives``
+        (which HLO collective kind carries the Eq.-(11)-billed wire
+        payload for this plan — every other collective in the compiled
+        module must be control plane or allowlisted, rule C3)."""
         base = (getattr(self.codec, "inner", self.codec)
                 if self.codec is not None else None)
         meta = dict(PLAN_AUDIT_EXPECTATIONS[self.plan.kind])
+        link_classes = (None if self.topology is None else {
+            k: v for k, v in self.topology.links_per_round().items()
+            if k != "NONE"})
+        wire = meta.get("wire_collective")
         meta.update(
             plan=self.plan.kind, K=self.K,
             num_blocks=self.plan.num_blocks,
@@ -1035,6 +1068,9 @@ class ConsensusEngine:
                        dict(self.mesh.shape).get(self.plan.axis_name)),
             codec=None if self.codec is None else self.codec.name,
             qbits=getattr(base, "qbits", None),
+            link_classes=link_classes,
+            priced_collectives=({} if wire is None
+                                else {wire: link_classes}),
         )
         return meta
 

@@ -292,7 +292,12 @@ def _fl_scan_program(loss_fn, engine, lr: float, *, sample_batches,
                 scanloop.TRACE_COUNTS["fl_chunk"] += 1
                 return jax.lax.scan(body, (p, st, k, r), ts)
 
-        return scanloop.donating_jit(run_chunk, donate_argnums=(0, 1))
+        # the async chunk's AsyncState (arg 5) is a carry like the
+        # params/codec state: donate it too, or every chunk holds the
+        # previous (clock, age) buffers alive alongside the new ones
+        # (rule JX5 — a dropped alias doubles fleet-scale async memory)
+        donate = (0, 1, 5) if is_async else (0, 1)
+        return scanloop.donating_jit(run_chunk, donate_argnums=donate)
 
     if streaming or not (sampler_traced and target_traced):
         # streaming telemetry (host-closing debug_callback) and impure

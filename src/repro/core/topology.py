@@ -80,9 +80,17 @@ class Topology:                     # would crash on the ndarray fields
         if L.shape != A.shape:
             raise ValueError(f"link_class shape {L.shape} != {A.shape}")
         if A.diagonal().any():
-            raise ValueError("self loops are not allowed")
+            raise ValueError(
+                f"adjacency has self loops at agents "
+                f"{np.flatnonzero(A.diagonal()).tolist()} — zero the "
+                "diagonal (an agent never wires to itself; self-mixing "
+                "is the σ diagonal's job)")
         if ((L != NONE) != A).any():
-            raise ValueError("link_class must be set exactly on edges")
+            raise ValueError(
+                f"link_class disagrees with adjacency on "
+                f"{int(((L != NONE) != A).sum())} entries — set a "
+                "class (SL/UL/DL) exactly on edges and NONE exactly "
+                "off them")
         object.__setattr__(self, "adjacency", A)
         object.__setattr__(self, "link_class", L)
         if self.edge_efficiency is not None:
@@ -91,10 +99,16 @@ class Topology:                     # would crash on the ndarray fields
                 raise ValueError(
                     f"edge_efficiency shape {E.shape} != {A.shape}")
             if (E < 0).any():
-                raise ValueError("edge efficiencies must be >= 0 bit/J")
+                raise ValueError(
+                    f"edge efficiencies must be >= 0 bit/J, got min "
+                    f"{E.min()} — fix the negative entries or drop "
+                    "edge_efficiency= for class-constant pricing")
             if (E[~A] != 0).any():
                 raise ValueError(
-                    "edge_efficiency must be 0 off the edge set")
+                    f"edge_efficiency has {int((E[~A] != 0).sum())} "
+                    "nonzero entries off the edge set — mask it with "
+                    "the adjacency (efficiencies only price wires that "
+                    "exist)")
             object.__setattr__(self, "edge_efficiency", E)
 
     # -- structure ----------------------------------------------------------
@@ -381,12 +395,18 @@ def survival_mask(adjacency, p: float, key, t, symmetric: Optional[bool]
     A = None
     if receivers is not None or senders is not None:
         if receivers is None or senders is None:
+            missing = "senders=" if senders is None else "receivers="
             raise ValueError(
-                "per-edge survival draws need BOTH receivers= and senders=")
+                f"per-edge survival draws need BOTH receivers= and "
+                f"senders=, but {missing} is None — pass both endpoint "
+                "index arrays, or a full adjacency for the dense form")
         if symmetric is None:
             raise ValueError(
-                "per-edge survival draws need an explicit symmetric= "
-                "(there is no adjacency to infer pair-folding from)")
+                f"per-edge survival draws over {np.shape(receivers)} "
+                "endpoint arrays need an explicit symmetric= (there is "
+                "no adjacency to infer pair-folding from) — pass "
+                "symmetric=True for undirected links, False for "
+                "directed")
         K = int(adjacency)
         sym = bool(symmetric)
         i = jnp.asarray(receivers, jnp.uint32)

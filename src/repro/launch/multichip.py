@@ -33,6 +33,10 @@ path would miss every regression this harness exists to catch):
   must alias every donated leaf in ``input_output_alias``; XLA drops
   donation silently when layouts fail to pair up, doubling peak memory
   exactly where a real mesh can least afford it.
+* **C3, no collective outside the ledger** — every collective in the
+  partitioned module must be the plan's priced wire or control plane
+  (``repro.analysis.costmodel.collective_ledger``); the report carries
+  the resulting priced/control/unpriced byte ledger per plan.
 
 Plus mesh-vs-emulation parity: the sharded and distributed plans driven
 on the 8-device mesh must agree with their single-device emulations
@@ -58,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.analysis.costmodel import collective_ledger
 from repro.analysis.jaxpr_audit import alias_param_indices
 from repro.core import topology as topo_lib
 from repro.core.engine import ConsensusEngine
@@ -168,6 +173,12 @@ def dry_run_sharded(k: int = 4096, *, num_blocks: int = 8,
         violations.append(
             f"JX3: donation dropped for {len(gaps)} params/state leaves "
             f"(flat indices {gaps}) in the masked sharded step")
+    ledger, c3 = collective_ledger(eng.audit_meta(), txt,
+                                   f"multichip:sharded/{codec}")
+    report["ledger"] = {"priced_bytes": ledger.priced_bytes,
+                        "control_bytes": ledger.control_bytes,
+                        "unpriced_bytes": ledger.unpriced_bytes}
+    violations += [f"C3: {f.message}" for f in c3]
     report["violations"] = violations
     if verbose:
         print(f"== sharded K={k} blocks={num_blocks} codec={codec} "
@@ -209,6 +220,12 @@ def dry_run_distributed(k: int = 8, *, codec: str = "int8", n: int = 64,
         violations.append(
             f"JX3: donation dropped for {len(gaps)} params/state leaves "
             f"(flat indices {gaps}) in the masked distributed step")
+    ledger, c3 = collective_ledger(eng.audit_meta(), txt,
+                                   f"multichip:distributed/{codec}")
+    report["ledger"] = {"priced_bytes": ledger.priced_bytes,
+                        "control_bytes": ledger.control_bytes,
+                        "unpriced_bytes": ledger.unpriced_bytes}
+    violations += [f"C3: {f.message}" for f in c3]
     report["violations"] = violations
     if verbose:
         print(f"== distributed K={k} codec={codec} p={DROPOUT_P} "

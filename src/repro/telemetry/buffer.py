@@ -44,8 +44,15 @@ from repro.core import energy, topology as topo_lib
 #: ``n_active``/``max_age`` are the async (agent-availability) health
 #: observables: how many agents participated, and the oldest wire any
 #: receiver is still mixing — K and 0 on lockstep rounds.
+#: ``agent_sl``/``agent_ul``/``agent_dl`` are the only non-scalar rows:
+#: (K,) int32 per-SENDER surviving-wire counts (``link_class[k, h]``
+#: classes the h → k message, so the transmitting agent h pays) — the
+#: per-agent attribution of the same aggregate ``n_*`` counts, summing
+#: exactly to them, and exactly zero for an agent that slept or whose
+#: every link died.
 ROW_FIELDS = ("live", "reached", "metric", "disagreement",
-              "n_sl", "n_ul", "n_dl", "n_active", "max_age")
+              "n_sl", "n_ul", "n_dl", "n_active", "max_age",
+              "agent_sl", "agent_ul", "agent_dl")
 
 
 def consensus_disagreement(stacked):
@@ -122,6 +129,28 @@ class RoundRecorder:
             "UL": int((link_class == topo_lib.UL).sum()),
             "DL": int((link_class == topo_lib.DL).sum()),
         }
+        # per-SENDER attribution: which agent each table position bills.
+        # link_class[k, h] classes the h → k message, so the sender is
+        # the second index — column h on dense (K, K), the neighbour
+        # table idx[i, h] on the lane plans, the schedule sources
+        # srcs[m, k] on distributed. None = dense (axis sum, no scatter).
+        if engine.plan.kind == "distributed":
+            self._sender_index = np.asarray(srcs)
+        elif engine.plan.kind in ("sparse-pallas", "sharded"):
+            self._sender_index = np.asarray(idx)
+        else:
+            self._sender_index = None
+        K = topo.K
+        self._static_agent_counts = {}
+        for name, cls in (("SL", topo_lib.SL), ("UL", topo_lib.UL),
+                          ("DL", topo_lib.DL)):
+            hit = (table == cls)
+            if self._sender_index is None:
+                per = hit.sum(axis=0)
+            else:
+                per = np.zeros((K,), np.int64)
+                np.add.at(per, self._sender_index, hit)
+            self._static_agent_counts[name] = per.astype(np.int32)
         p = self.energy_params
         bits = p.model_bits
         if self.codec is not None:
@@ -129,6 +158,16 @@ class RoundRecorder:
         self._priced_bits = float(bits)
 
     # -- traced (inside the scan body) ----------------------------------
+
+    def _per_agent(self, hit):
+        """(K,) int32 per-SENDER count of the True positions of ``hit``
+        (plan-shaped bool). Dense sums the receiver axis; the lane/slot
+        plans scatter-add over their baked sender index."""
+        if self._sender_index is None:
+            return jnp.sum(hit, axis=0, dtype=jnp.int32)
+        return jnp.zeros((self.topology.K,), jnp.int32).at[
+            jnp.asarray(self._sender_index)].add(
+            jnp.asarray(hit, jnp.int32))
 
     def row(self, stacked, survival, *, metric, reached, live,
             active=None, age=None):
@@ -149,11 +188,14 @@ class RoundRecorder:
         if survival is None:
             counts = {k: jnp.int32(self._static_counts[k])
                       for k in ("SL", "UL", "DL")}
-        else:
-            counts = {k: jnp.sum(survival
-                                 & jnp.asarray(self._class_masks[k]),
-                                 dtype=jnp.int32)
+            agents = {k: jnp.asarray(self._static_agent_counts[k])
                       for k in ("SL", "UL", "DL")}
+        else:
+            counts, agents = {}, {}
+            for k in ("SL", "UL", "DL"):
+                hit = survival & jnp.asarray(self._class_masks[k])
+                counts[k] = jnp.sum(hit, dtype=jnp.int32)
+                agents[k] = self._per_agent(hit)
         n_active = (jnp.int32(self.topology.K) if active is None
                     else jnp.sum(jnp.asarray(active), dtype=jnp.int32))
         max_age = (jnp.int32(0) if age is None
@@ -168,6 +210,8 @@ class RoundRecorder:
             "n_sl": counts["SL"], "n_ul": counts["UL"],
             "n_dl": counts["DL"],
             "n_active": n_active, "max_age": max_age,
+            "agent_sl": agents["SL"], "agent_ul": agents["UL"],
+            "agent_dl": agents["DL"],
         }
 
     def frozen_row(self):
@@ -175,11 +219,13 @@ class RoundRecorder:
         pricing and ledgers skip it, so post-hit padding rounds never
         bill."""
         z32 = jnp.int32(0)
+        zk = jnp.zeros((self.topology.K,), jnp.int32)
         return {"live": jnp.asarray(False), "reached": jnp.asarray(False),
                 "metric": jnp.float32(0.0),
                 "disagreement": jnp.float32(0.0),
                 "n_sl": z32, "n_ul": z32, "n_dl": z32,
-                "n_active": z32, "max_age": z32}
+                "n_active": z32, "max_age": z32,
+                "agent_sl": zk, "agent_ul": zk, "agent_dl": zk}
 
     # -- host (once per chunk, after the sync) --------------------------
 
@@ -200,6 +246,18 @@ class RoundRecorder:
             "joules": bits * (n_sl * sl_cost
                               + n_ul / p.E_UL + n_dl / p.E_DL),
         }
+
+    def price_agents(self, agent_sl, agent_ul, agent_dl) -> list:
+        """Per-agent Eq.-(11) joules from the per-SENDER counts — the
+        same literal expression as :meth:`price` per agent, so an agent
+        with zero surviving sends bills exactly ``0.0`` (a sleeping
+        agent transmits nothing and pays nothing)."""
+        p = self.energy_params
+        bits = self._priced_bits
+        sl_cost = energy.sidelink_cost_per_bit(p)
+        return [bits * (int(a_sl) * sl_cost
+                        + int(a_ul) / p.E_UL + int(a_dl) / p.E_DL)
+                for a_sl, a_ul, a_dl in zip(agent_sl, agent_ul, agent_dl)]
 
     def finalize(self, rows, start: int, driver: str = "fl",
                  extra: Optional[dict] = None):
@@ -228,6 +286,11 @@ class RoundRecorder:
                      n_active=int(host["n_active"][i]),
                      max_age=int(host["max_age"][i]))
             e.update(self.price(n_sl, n_ul, n_dl))
+            a_sl = [int(v) for v in host["agent_sl"][i]]
+            a_ul = [int(v) for v in host["agent_ul"][i]]
+            a_dl = [int(v) for v in host["agent_dl"][i]]
+            e.update(agent_sl=a_sl, agent_ul=a_ul, agent_dl=a_dl,
+                     agent_joules=self.price_agents(a_sl, a_ul, a_dl))
             events.append(e)
         return events
 

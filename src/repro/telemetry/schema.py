@@ -32,6 +32,10 @@ LEDGER_FIELDS = {
     "plan": str, "topology": str, "K": int,
     # async availability observables (K and 0 on lockstep rounds)
     "n_active": int, "max_age": int,
+    # per-SENDER attribution: length-K lists summing to n_sl/n_ul/n_dl
+    # and the per-agent Eq.-(11) joules (0.0 for a sleeping agent)
+    "agent_sl": list, "agent_ul": list, "agent_dl": list,
+    "agent_joules": list,
 }
 
 #: meta-training events carry losses instead of a link ledger.

@@ -2,9 +2,10 @@
 
 A sink is anything with ``emit(event: dict)`` and (optionally)
 ``close()``. Sinks receive finalized HOST events only — plain dicts of
-Python scalars, never tracers — at chunk boundaries in buffered mode or
-per round (from the ``jax.debug.callback``) in streaming mode. Frozen
-padding rounds are filtered before sinks see anything.
+Python scalars (plus the length-K per-agent attribution lists), never
+tracers — at chunk boundaries in buffered mode or per round (from the
+``jax.debug.callback``) in streaming mode. Frozen padding rounds are
+filtered before sinks see anything.
 """
 from __future__ import annotations
 

@@ -399,3 +399,411 @@ def test_audit_meta_reports_codec_and_plan():
     assert meta["K"] == 4
     assert meta["qbits"] == 8
     assert meta["kk_buffer"] is True
+
+
+# ---------------------------------------------------------------------------
+# PR 10: R6 lint — error paths name the offending input
+# ---------------------------------------------------------------------------
+
+class TestLintR6:
+    SRC_BAD = (
+        "def combine(mix, mask):\n"
+        "    if mask is None:\n"
+        "        raise ValueError('mask is required')\n"
+        "    return mix\n")
+    SRC_OK = (
+        "def combine(mix, mask):\n"
+        "    if mask is None:\n"
+        "        raise ValueError(\n"
+        "            f'combine got mask=None with mix shape {mix.shape} — '\n"
+        "            'pass survival_mask(key, t) or use the static path')\n"
+        "    return mix\n")
+    SRC_RERAISE = (
+        "def fwd(x):\n"
+        "    try:\n"
+        "        return go(x)\n"
+        "    except ValueError as err:\n"
+        "        raise err\n"
+        "    except TypeError:\n"
+        "        raise\n")
+
+    def test_constant_raise_fires_in_every_scope(self, tmp_path):
+        for rel in ("src/repro/core/fake_r6.py",
+                    "src/repro/rl/fake_r6.py",
+                    "src/repro/launch/fake_r6.py"):
+            out = _lint_src(tmp_path, self.SRC_BAD, rel)
+            hits = [f for f in out if f.rule == "R6"]
+            assert len(hits) == 1 and hits[0].line == 3, rel
+            assert "offending input" in hits[0].message
+
+    def test_interpolating_raise_clean(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_OK, "src/repro/core/fake_r6.py")
+        assert "R6" not in _rules(out)
+
+    def test_reraise_exempt(self, tmp_path):
+        out = _lint_src(tmp_path, self.SRC_RERAISE,
+                        "src/repro/core/fake_r6.py")
+        assert "R6" not in _rules(out)
+
+    def test_out_of_scope_silent(self, tmp_path):
+        for rel in ("src/repro/comms/fake_r6.py", "benchmarks/fake_r6.py"):
+            out = _lint_src(tmp_path, self.SRC_BAD, rel)
+            assert "R6" not in _rules(out), rel
+
+
+# ---------------------------------------------------------------------------
+# PR 10: JX5 — the AsyncState carry must be donated
+# ---------------------------------------------------------------------------
+
+def _fake_record(abstract_args, donate_argnums, name="fake-async-prog"):
+    import types
+    return types.SimpleNamespace(name=name, abstract_args=abstract_args,
+                                 donate_argnums=donate_argnums)
+
+
+def test_jx5_undonated_async_state_fires():
+    from repro.analysis.jaxpr_audit import check_async_state_donated
+    from repro.core.engine import AsyncState
+    ast = AsyncState(clock=jnp.zeros((4,), jnp.int32),
+                     age=jnp.zeros((4, 4), jnp.int32))
+    rec = _fake_record((jnp.zeros((2,)), jnp.zeros(()), ast), (0, 1))
+    hits = check_async_state_donated(rec)
+    assert len(hits) == 1 and hits[0].rule == "JX5"
+    assert "arg 2" in hits[0].message
+    assert "donate_argnums" in hits[0].message
+
+
+def test_jx5_donated_async_state_clean():
+    from repro.analysis.jaxpr_audit import check_async_state_donated
+    from repro.core.engine import AsyncState
+    ast = AsyncState(clock=jnp.zeros((4,), jnp.int32),
+                     age=jnp.zeros((4, 4), jnp.int32))
+    rec = _fake_record((jnp.zeros((2,)), ast), (0, 1))
+    assert check_async_state_donated(rec) == []
+    # nested containers still count as carrying the state
+    rec = _fake_record((jnp.zeros((2,)), {"st": [ast]}), (0,))
+    assert [f.rule for f in check_async_state_donated(rec)] == ["JX5"]
+
+
+def test_jx5_live_async_fl_program_is_donated():
+    """The driver fix this rule guards: the async fl chunk program must
+    register with its AsyncState arg donated."""
+    from repro.analysis.jaxpr_audit import (_tiny_drivers,
+                                            check_async_state_donated)
+    from repro.core.engine import AsyncState
+    scanloop.clear_program_cache()
+    try:
+        _tiny_drivers()
+        recs = [r for r in scanloop.registered_programs()
+                if r.abstract_args is not None
+                and any(_holds(a) for a in r.abstract_args)]
+        assert recs, "no registered program carries an AsyncState"
+        for r in recs:
+            assert check_async_state_donated(r) == []
+    finally:
+        scanloop.clear_program_cache()
+
+
+def _holds(tree):
+    from repro.analysis.jaxpr_audit import _holds_async_state
+    return _holds_async_state(tree)
+
+
+# ---------------------------------------------------------------------------
+# PR 10: H3 — int wire lanes stay int through the async combine
+# ---------------------------------------------------------------------------
+
+H3_UPCAST_HLO = """\
+HloModule async_step
+fused = f32[8,2,16]{2,1,0} gather(f32[8,16] %decoded, s32[8,2] %idx)
+other = f32[8] gather(f32[8,8] %w, s32[8] %i)
+"""
+
+H3_FUSED_HLO = H3_UPCAST_HLO + """\
+lanes = s8[8,2,16]{2,1,0} gather(s8[8,16] %wire, s32[8,2] %idx)
+"""
+
+
+def test_h3_upcast_module_fires():
+    from repro.analysis.hlo_audit import check_wire_lane_dtype
+    hits = check_wire_lane_dtype(H3_UPCAST_HLO, "engine:fake/int8/async")
+    assert len(hits) == 1 and hits[0].rule == "H3"
+    assert "upcast" in hits[0].message and "s8" in hits[0].message
+
+
+def test_h3_gatherless_module_fires():
+    from repro.analysis.hlo_audit import check_wire_lane_dtype
+    hits = check_wire_lane_dtype("HloModule empty\n", "engine:fake")
+    assert len(hits) == 1 and "vanished" in hits[0].message
+
+
+def test_h3_fused_lane_gather_clean():
+    from repro.analysis.hlo_audit import check_wire_lane_dtype
+    assert check_wire_lane_dtype(H3_FUSED_HLO, "engine:fake") == []
+
+
+# ---------------------------------------------------------------------------
+# PR 10: C-layer — the static energy ledger
+# ---------------------------------------------------------------------------
+
+def test_c2_overpriced_round_fires():
+    from repro.analysis.costmodel import (C2_RATIO, C2_SLACK_FLOPS,
+                                          check_round_flops)
+    expected = 20736.0
+    bad = expected * C2_RATIO + C2_SLACK_FLOPS + 1
+    hits = check_round_flops(bad, expected, "rl:case-study")
+    assert len(hits) == 1 and hits[0].rule == "C2"
+    assert "compute model" in hits[0].message
+    # and the lower bracket: a round doing almost no work is as wrong
+    assert check_round_flops(expected / C2_RATIO - 1, expected, "x")
+    assert check_round_flops(expected * 1.02, expected, "x") == []
+
+
+def test_c2_unmeasurable_backend_is_allowlisted_skip():
+    from repro.analysis.costmodel import check_round_flops
+    hits = check_round_flops(None, 100.0, "rl:case-study")
+    assert len(hits) == 1 and hits[0].allowlisted
+    assert "skipped" in hits[0].message
+
+
+C3_META = {"plan": "sharded", "codec": "int8", "K": 8,
+           "priced_collectives": {"all-gather": {"SL": 8}}}
+
+C3_HLO = """\
+HloModule step
+wire = s8[8,1,16]{2,1,0} all-gather(s8[1,16] %lanes)
+scales = f32[8,1]{1,0} all-gather(f32[1,1] %s)
+rng = u32[16]{0} all-reduce(u32[16] %k)
+leak = f32[8,64]{1,0} collective-permute(f32[8,64] %dense)
+"""
+
+
+def test_c3_unpriced_collective_fires_and_ledger_classifies():
+    from repro.analysis.costmodel import collective_ledger
+    ledger, findings = collective_ledger(C3_META, C3_HLO, "engine:fake")
+    assert ledger.priced_bytes == {"all-gather": 128 + 32}
+    assert ledger.control_bytes == 64          # u32 RNG plane
+    assert ledger.unpriced_bytes == 8 * 64 * 4
+    assert len(findings) == 1 and findings[0].rule == "C3"
+    assert "collective-permute" in findings[0].message
+    assert "outside the" in findings[0].message
+
+
+def test_c3_empty_meta_prices_nothing():
+    from repro.analysis.costmodel import collective_ledger
+    ledger, findings = collective_ledger({}, C3_HLO, "prog:fake")
+    assert ledger.priced_bytes == {}
+    # without a K, only dtype-control transfers stay silent
+    assert [f.rule for f in findings] == ["C3", "C3", "C3"]
+
+
+def _chaos_engine(plan="dense-xla", codec="int8:b64", k=6, **kw):
+    from repro.core import topology as topo_lib
+    from repro.core.engine import ConsensusEngine
+    return ConsensusEngine(
+        topo_lib.ring(k), codec=codec, plan=plan,
+        graph=topo_lib.GraphProcess.dropout(0.3, seed=2),
+        agents=topo_lib.AgentProcess.bernoulli(0.6, seed=5),
+        tau=2, staleness_decay=0.9, **kw)
+
+
+def test_c1_mispriced_bits_fire():
+    from repro.analysis.costmodel import reconcile_engine_run
+    eng = _chaos_engine()
+    hits = reconcile_engine_run(eng, rounds=2, label="engine:seeded",
+                                expected_bits=1.0)   # absurd pricing
+    assert hits and all(f.rule == "C1" for f in hits)
+    assert any("wire bits" in f.message for f in hits)
+
+
+def test_c1_static_rows_replay_chaos_convention():
+    """A wire bills iff its link survived AND both endpoints were awake —
+    the blessed chaos-harness convention, row by row."""
+    import numpy as np
+    from repro.analysis.costmodel import static_round_counts
+    from repro.core import topology as topo_lib
+    eng = _chaos_engine()
+    rows = static_round_counts(eng, 4)
+    topo = eng.topology
+    adjs = topo_lib.dropout(topo, 0.3, seed=2, rounds=4)
+    acts = np.asarray(topo_lib.availability_stream(eng.agents, 6, 4), bool)
+    for t, row in enumerate(rows):
+        m = (np.asarray(adjs[t].adjacency, bool)
+             & acts[t][:, None] & acts[t][None, :])
+        assert row["n_sl"] + row["n_ul"] + row["n_dl"] == int(m.sum())
+        assert row["n_active"] == int(acts[t].sum())
+
+
+@pytest.mark.slow
+def test_c1_ledger_reconciles_all_plans_and_codecs():
+    """Acceptance: C1 static bytes reconcile with the telemetry ledger
+    for all four plans x {f32, int8:b64}, async configs included."""
+    from repro.analysis.costmodel import audit_ledger_reconciliation
+    findings = audit_ledger_reconciliation()
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_audit_meta_exposes_priced_collectives():
+    from repro.core import topology as topo_lib
+    from repro.core.engine import ConsensusEngine
+    eng = ConsensusEngine(topo_lib.ring(4), codec="int8", plan="sharded",
+                          num_blocks=2)
+    meta = eng.audit_meta()
+    assert meta["wire_collective"] == "all-gather"
+    assert set(meta["priced_collectives"]) == {"all-gather"}
+    classes = meta["priced_collectives"]["all-gather"]
+    assert classes == meta["link_classes"]
+    assert sum(classes.values()) == sum(
+        eng.topology.links_per_round().values())
+
+
+# ---------------------------------------------------------------------------
+# PR 10: findings machinery — strict TOML, staleness, dedup, registry GC
+# ---------------------------------------------------------------------------
+
+def test_parse_toml_min_rejects_malformed_entries():
+    from repro.analysis.findings import parse_toml_min
+    cases = [
+        ('[[allow]]\nrule = "R4" trailing\n', "line 2"),
+        ('[[allow]]\nrule = "unterminated\n', "line 2"),
+        ('rule = "R4"\n', "outside any table"),
+        ('[[allow]]\njust a line\n', "line 2"),
+        ('[bad header!]\nrule = "R4"\n', "line 1"),
+        ('[[allow]]\nrule = naked\n', "line 2"),
+    ]
+    for src, needle in cases:
+        with pytest.raises(ValueError, match=needle):
+            parse_toml_min(src)
+
+
+def test_stale_entries_flag_old_and_undated_debt():
+    from repro.analysis.findings import stale_entries
+    entries = [
+        {"rule": "R4", "file": "a.py", "added_in": 6},    # 4 PRs old
+        {"rule": "H2", "file": "b.py", "added_in": 9},    # fresh
+        {"rule": "JX2", "file": "c.py"},                  # undated
+    ]
+    out = stale_entries(entries, current_pr=10, stale_after=4)
+    assert [e.get("rule") for e, _w in out] == ["R4", "JX2"]
+    assert "4 PRs old" in out[0][1]
+    assert "undated" in out[1][1]
+
+
+def test_repo_allowlist_every_entry_is_dated():
+    entries = load_allowlist(os.path.join(
+        REPO_ROOT, "src", "repro", "analysis", "allowlist.toml"))
+    for e in entries:
+        assert isinstance(e.get("added_in"), int), e
+
+
+def test_dedup_findings_keeps_first_occurrence_order():
+    from repro.analysis.findings import dedup_findings
+    a = Finding("JX1", "x.py", 3, "callback")
+    b = Finding("JX1", "x.py", 3, "callback")
+    c = Finding("JX1", "x.py", 4, "callback")   # different line survives
+    d = Finding("H2", "y", 0, "bytes")
+    out = dedup_findings([a, d, b, c])
+    assert out == [a, d, c]
+
+
+def test_file_matches_glob_and_suffix():
+    from repro.analysis.findings import _file_matches
+    assert _file_matches("src/repro/core/consensus.py", "consensus.py")
+    assert _file_matches("src/repro/core/consensus.py",
+                         "src/repro/core/consensus.py")
+    assert _file_matches("engine:sharded/bf16", "engine:sharded/*")
+    assert _file_matches("anything", "*")
+    assert not _file_matches("src/repro/core/topology.py", "consensus.py")
+    # suffix matching must not cross a path component
+    assert not _file_matches("src/repro/core/not_consensus.py",
+                             "/consensus.py")
+
+
+def test_registry_entry_collected_mid_audit_is_pruned():
+    """A program GC'd between registration and the audit must vanish
+    from registered_programs() (weakref pruning), never crash it."""
+    import gc
+    from repro.analysis.jaxpr_audit import audit_registered_programs
+
+    def gc_prog_body(x):
+        return x * 2.0
+
+    key = ("test-gc-prog", "sig")
+    prog = scanloop.cached_program(
+        key, lambda: scanloop.donating_jit(gc_prog_body))
+    prog(jnp.ones((4,), jnp.float32))
+    assert any(r.name == "gc_prog_body"
+               for r in scanloop.registered_programs())
+    scanloop._program_cache.pop(key, None)
+    del prog
+    gc.collect()
+    recs = scanloop.registered_programs()
+    assert all(r.name != "gc_prog_body" for r in recs)
+    audit_registered_programs(recs)             # must not raise
+
+
+# ---------------------------------------------------------------------------
+# PR 10: baseline diff + serialization
+# ---------------------------------------------------------------------------
+
+def test_findings_json_roundtrips_as_baseline(tmp_path):
+    import json
+    from repro.analysis.baseline import (finding_key, findings_to_json,
+                                         load_baseline, new_findings)
+    fs = [Finding("C1", "engine:x", 3, "drift", allowlisted=False),
+          Finding("H2", "engine:y", 0, "bytes", allowlisted=True,
+                  note="tracked")]
+    p = tmp_path / "base.json"
+    p.write_text(findings_to_json(fs))
+    base = load_baseline(str(p))
+    assert base == {finding_key(f) for f in fs}
+    # both keys known -> nothing new; a fresh open finding -> reported
+    assert new_findings(fs, base) == []
+    novel = Finding("C3", "engine:z", 1, "unpriced permute")
+    assert new_findings(fs + [novel], base) == [novel]
+    # allowlisted findings never count as new, baselined or not
+    tracked = Finding("H2", "engine:w", 0, "other", allowlisted=True)
+    assert new_findings([tracked], set()) == []
+    assert json.loads(findings_to_json(fs))[0]["rule"] == "C1"
+
+
+def test_load_baseline_rejects_malformed(tmp_path):
+    from repro.analysis.baseline import load_baseline
+    p = tmp_path / "bad.json"
+    p.write_text('{"not": "a list"}')
+    with pytest.raises(ValueError, match="regenerate"):
+        load_baseline(str(p))
+    p.write_text('[{"rule": "C1"}]')
+    with pytest.raises(ValueError, match="entry 0"):
+        load_baseline(str(p))
+
+
+def test_sarif_levels_follow_allowlisting():
+    import json
+    from repro.analysis.baseline import findings_to_sarif
+    fs = [Finding("C1", "engine:x", 3, "drift"),
+          Finding("H2", "engine:y", 0, "bytes", allowlisted=True,
+                  note="tracked")]
+    log = json.loads(findings_to_sarif(fs))
+    assert log["version"] == "2.1.0"
+    results = log["runs"][0]["results"]
+    assert [r["level"] for r in results] == ["error", "note"]
+    assert results[0]["locations"][0]["physicalLocation"][
+        "region"]["startLine"] == 3
+    rules = {r["id"] for r in log["runs"][0]["tool"]["driver"]["rules"]}
+    assert rules == {"C1", "H2"}
+
+
+def test_cli_baseline_gates_only_new_findings(tmp_path):
+    """End-to-end CLI contract on the lint layer: a baselined strict run
+    passes, and stays passing when the baseline covers everything."""
+    from repro.analysis.__main__ import main
+    base = tmp_path / "base.json"
+    out = tmp_path / "findings.json"
+    code = main(["--layer", "lint", "--format", "json",
+                 "--json-out", str(base)])
+    assert code == 0
+    code = main(["--layer", "lint", "--strict",
+                 "--baseline", str(base), "--json-out", str(out)])
+    assert code == 0
+    assert out.read_text() == base.read_text()

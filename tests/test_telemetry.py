@@ -347,3 +347,59 @@ def test_buffer_capacity_drops_oldest():
 def test_telemetry_mode_validated():
     with pytest.raises(ValueError):
         tl.Telemetry(mode="firehose")
+
+
+# ---------------------------------------------------------------------------
+# per-agent energy attribution (PR 10)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plan,kw", [
+    ("dense-xla", {}), ("sparse-pallas", {}),
+    ("sharded", {"num_blocks": 2}), ("distributed", {})])
+def test_per_agent_attribution_bills_senders_only(plan, kw):
+    """The (K,) agent_* rows attribute every surviving wire to its
+    SENDER: they sum exactly to the aggregate counts, a sleeping agent
+    bills exactly 0.0 J, and the per-plan survival shapes all agree."""
+    eng = ConsensusEngine(
+        topo_lib.ring(K), codec="int8:b64", plan=plan,
+        graph=topo_lib.GraphProcess.dropout(P_DROP, seed=DROP_SEED),
+        agents=topo_lib.AgentProcess.bernoulli(0.6, seed=1),
+        tau=2, staleness_decay=0.9, **kw)
+    rec = tl.RoundRecorder(eng)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, D))}
+    rnd = eng.async_round(jnp.int32(3), eng.init_async_state().age)
+    row = rec.row(params, rnd.delivered, metric=0.0, reached=False,
+                  live=True, active=rnd.act, age=rnd.age)
+    ev = rec.event(3, row)
+    assert len(ev["agent_joules"]) == K
+    for cls in ("sl", "ul", "dl"):
+        assert sum(ev[f"agent_{cls}"]) == ev[f"n_{cls}"], cls
+    awake = [bool(a) for a in np.asarray(rnd.act)]
+    assert not all(awake), "seed must put at least one agent to sleep"
+    for k, up in enumerate(awake):
+        if not up:
+            assert ev["agent_joules"][k] == 0.0
+            assert ev["agent_sl"][k] + ev["agent_ul"][k] \
+                + ev["agent_dl"][k] == 0
+    # the per-agent ledger decomposes the aggregate (tight, not approx:
+    # both sides are sums of the same per-class float64 terms)
+    assert sum(ev["agent_joules"]) == pytest.approx(ev["joules"], rel=1e-12)
+
+
+def test_per_agent_static_rows_match_link_classes():
+    """Lockstep static rounds: per-sender counts are the topology's
+    outgoing-link table, identical across plan representations."""
+    link_class = np.asarray(topo_lib.ring(K).link_class)
+    expected = (link_class != topo_lib.NONE).sum(axis=0)
+    rows = {}
+    for plan, kw in (("dense-xla", {}), ("sparse-pallas", {}),
+                     ("sharded", {"num_blocks": 2}), ("distributed", {})):
+        eng = ConsensusEngine(topo_lib.ring(K), plan=plan, **kw)
+        rec = tl.RoundRecorder(eng)
+        params = {"w": jnp.ones((K, D), jnp.float32)}
+        row = rec.row(params, None, metric=0.0, reached=False, live=True)
+        total = np.asarray(row["agent_sl"]) + np.asarray(row["agent_ul"]) \
+            + np.asarray(row["agent_dl"])
+        rows[plan] = total
+        assert (total == expected).all(), (plan, total, expected)
+    assert all((v == rows["dense-xla"]).all() for v in rows.values())
